@@ -1,0 +1,86 @@
+"""Shared benchmark machinery: timing, table formatting, CSV output.
+
+Scale control: REPRO_BENCH_SCALE=quick|default|full. `quick` is CI-sized,
+`full` approaches the paper's sizes (1024-tree forests, 20k-tree GBTs) and
+takes hours on the CPU container. All benches print their scale.
+
+Measurement discipline: wall-clock on this container is a *relative*
+algorithm comparison on CPU-executed XLA programs (the paper's absolute
+numbers are ARM-specific); TPU projections come from the dry-run roofline
+(benchmarks/roofline_forest.py), never from CPU wall-clock.
+"""
+from __future__ import annotations
+
+import csv
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "default")
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "bench")
+
+
+def scale_pick(quick, default, full):
+    return {"quick": quick, "default": default, "full": full}[SCALE]
+
+
+def time_predict(fn: Callable[[], object], *, warmup: int = 2,
+                 repeats: int = 5) -> float:
+    """Median wall-clock seconds of fn() after warmup."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+@dataclass
+class Table:
+    name: str
+    columns: list
+    rows: list = field(default_factory=list)
+
+    def add(self, *row):
+        self.rows.append(list(row))
+
+    def print(self):
+        widths = [max(len(str(c)), *(len(str(r[i])) for r in self.rows))
+                  if self.rows else len(str(c))
+                  for i, c in enumerate(self.columns)]
+        line = "  ".join(str(c).ljust(w) for c, w in zip(self.columns,
+                                                         widths))
+        print(f"\n== {self.name} ==")
+        print(line)
+        print("-" * len(line))
+        for r in self.rows:
+            print("  ".join(str(v).ljust(w) for v, w in zip(r, widths)))
+
+    def save(self):
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR, f"{self.name}.csv")
+        with open(path, "w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(self.columns)
+            w.writerows(self.rows)
+        return path
+
+
+def us_per_instance(seconds: float, batch: int) -> float:
+    return seconds / batch * 1e6
+
+
+def save_json(name: str, obj) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return path

@@ -1,0 +1,76 @@
+"""Paper Figure 1: average speedup over the float NATIVE baseline as a
+function of tree count, float (top) and quantized (bottom) variants.
+
+Averaged over {32, 64} leaves like the paper (datasets collapse to feature
+count for runtime, so the sweep uses the MSN-like 136-feature shape).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import core
+
+from .common import Table, save_json, scale_pick, time_predict, \
+    us_per_instance
+
+ENGINES = ["rapidscorer", "bitvector", "native", "unrolled", "gemm"]
+
+
+UNROLL_CAP = 1000    # see table2_ranking.UNROLL_CAP
+
+
+def run() -> Table:
+    tree_counts = scale_pick([100, 400], [100, 400, 1600],
+                             [100, 200, 400, 800, 1600, 3200])
+    leaves = scale_pick([32], [32, 64], [32, 64])
+    batch = scale_pick(256, 512, 2048)
+    d = 136
+
+    rng = np.random.default_rng(0)
+    X = rng.normal(0, 1, size=(batch, d))
+    t = Table("fig1_speedup",
+              ["trees"] + [f"{e}" for e in ENGINES] +
+              [f"q_{e}" for e in ENGINES])
+    raw = {}
+    for T in tree_counts:
+        sums = {k: [] for k in t.columns[1:]}
+        for L in leaves:
+            forest = core.random_forest_ir(T, L, d, seed=T + L)
+            qforest = core.quantize_forest(forest)
+            # float NATIVE is the baseline for everything — time it first
+            na_pred = core.compile_forest(forest, engine="native")
+            na = us_per_instance(
+                time_predict(lambda: na_pred.predict(X)), batch)
+            for quant, f in ((False, forest), (True, qforest)):
+                for e in ENGINES:
+                    if e == "unrolled" and T > UNROLL_CAP:
+                        continue
+                    if not quant and e == "native":
+                        us = na
+                    else:
+                        pred = core.compile_forest(f, engine=e)
+                        us = us_per_instance(
+                            time_predict(lambda: pred.predict(X)), batch)
+                    key = f"q_{e}" if quant else e
+                    sums[key].append((na, us))
+        row = [T]
+        for k in t.columns[1:]:
+            if not sums[k]:
+                row.append("-")          # unrolled beyond compile cap
+                continue
+            sp = np.mean([n / u for n, u in sums[k]])
+            row.append(f"{sp:.2f}x")
+            raw.setdefault(k, []).append(sp)
+        t.add(*row)
+    save_json("fig1_raw", {"trees": tree_counts, "speedups": raw})
+    return t
+
+
+def main():
+    tbl = run()
+    tbl.print()
+    tbl.save()
+
+
+if __name__ == "__main__":
+    main()

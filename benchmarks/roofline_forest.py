@@ -1,0 +1,218 @@
+"""TPU roofline for the paper's own workload: forest inference engines
+lowered on the production mesh (dry-run — lower + compile + cost analysis,
+no execution).
+
+This is the §Perf cell "most representative of the paper's technique":
+  * engine=bitvector  — faithful QuickScorer-family port (paper baseline)
+  * engine=gemm       — beyond-paper MXU formulation
+  * quantization      — float32 vs int16 vs int8 node streams (paper §5)
+
+Serving-shape: a large instance batch sharded over all 256 chips (pure DP —
+the forest arrays replicate; they are ≤ a few MB, the paper's whole point
+is forests fit near the cores). Per-chip terms come out of
+compiled.cost_analysis() exactly like the LM dry-run.
+
+MUST run as its own process (512 host devices):
+    PYTHONPATH=src python -m benchmarks.roofline_forest
+"""
+import os
+
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+
+import numpy as np
+
+
+def run() -> list[dict]:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import core
+    from repro.core.quickscorer import compile_qs, eval_batch as qs_eval
+    from repro.core.baselines import compile_gemm, eval_gemm
+    from repro.core.quantize import QuantSpec
+    from repro.launch.hlo_analysis import collective_bytes
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.dryrun import PEAK_FLOPS, HBM_BW, ICI_BW
+
+    mesh = make_production_mesh()
+    n_chips = 256
+    results = []
+
+    CONFIGS = [
+        # (tag, n_trees, n_leaves, quant_bits)
+        ("paper_1024x64_f32", 1024, 64, None),
+        ("paper_1024x64_i16", 1024, 64, 16),
+        ("paper_1024x64_i8", 1024, 64, 8),
+        ("big_10240x64_f32", 10240, 64, None),
+        ("big_10240x64_i16", 10240, 64, 16),
+    ]
+    BATCH = 1 << 20                      # 4096 instances / chip
+    d = 136                              # MSN-shaped
+
+    for tag, T, L, bits in CONFIGS:
+        forest = core.random_forest_ir(T, L, d, n_classes=1, seed=0)
+        if bits:
+            forest = core.quantize_forest(forest, spec=QuantSpec(bits=bits))
+        for engine in ("bitvector", "gemm"):
+            if engine == "bitvector":
+                compiled_f = compile_qs(forest)
+                fn = lambda X, c=compiled_f: qs_eval(c, X)
+            else:
+                cd = jnp.bfloat16 if bits else jnp.float32
+                compiled_f = compile_gemm(forest, compute_dtype=cd)
+                fn = lambda X, c=compiled_f: eval_gemm(c, X)
+            in_dtype = (jnp.int16 if bits == 16 else
+                        jnp.int8 if bits == 8 else jnp.float32)
+            # integer inputs flow through the same comparison graph
+            xs = jax.ShapeDtypeStruct((BATCH, d), in_dtype)
+            xshard = NamedSharding(mesh, P(("data", "model"), None))
+            with mesh:
+                lowered = jax.jit(
+                    fn, in_shardings=xshard,
+                    out_shardings=NamedSharding(
+                        mesh, P(("data", "model"), None))).lower(xs)
+                comp = lowered.compile()
+            cost = comp.cost_analysis()
+            coll = collective_bytes(comp.as_text())
+            flops = float(cost.get("flops", 0.0))
+            byt = float(cost.get("bytes accessed", 0.0))
+            terms = {
+                "compute_s": flops / PEAK_FLOPS,
+                "memory_s": byt / HBM_BW,
+                "collective_s": coll.link_bytes / ICI_BW,
+            }
+            dom = max(terms, key=terms.get)
+            bound = max(terms.values())
+            per_inst_ns = bound / (BATCH / n_chips) * 1e9
+            results.append({
+                "config": tag, "engine": engine,
+                "flops_per_chip": flops, "bytes_per_chip": byt,
+                "collective_bytes": coll.link_bytes,
+                **{k: round(v, 6) for k, v in terms.items()},
+                "dominant": dom,
+                "ns_per_instance_roofline": round(per_inst_ns, 3),
+            })
+            print(f"[{tag:22s}] {engine:9s} dom={dom:12s} "
+                  f"c={terms['compute_s']*1e3:8.3f}ms "
+                  f"m={terms['memory_s']*1e3:8.3f}ms "
+                  f"x={terms['collective_s']*1e3:8.3f}ms "
+                  f"→ {per_inst_ns:8.2f} ns/inst", flush=True)
+
+    # ---- latency mode: tree-sharding vs data-parallel ------------------ #
+    # Small-batch latency serving (the paper's IoT regime writ large): with
+    # B ≪ chips × useful-batch, pure DP leaves chips idle. Sharding TREES
+    # across the mesh (ensemble additivity → partial scores + one (B, C)
+    # all-reduce) engages every chip at any batch size — the forest-world
+    # analogue of expert parallelism.
+    B_LAT, T_LAT = 4096, 10240
+    forest = core.random_forest_ir(T_LAT, 64, d, n_classes=1, seed=0)
+    cqs = compile_qs(forest)
+    arrs = dict(feat=cqs.feat, thr=cqs.thr, valid=cqs.valid,
+                masks=cqs.masks, init_idx=cqs.init_idx,
+                leaf_val=cqs.leaf_val)
+    for mode in ("dp", "treeshard"):
+        if mode == "dp":
+            xsh = NamedSharding(mesh, P(("data", "model"), None))
+            tree_sh = {k: NamedSharding(mesh, P(*([None] * v.ndim)))
+                       for k, v in arrs.items()}
+        else:
+            xsh = NamedSharding(mesh, P())           # X replicated
+            tree_sh = {k: NamedSharding(
+                mesh, P(("data", "model"), *([None] * (v.ndim - 1))))
+                for k, v in arrs.items()}
+
+        def fn(X, feat, thr, valid, masks, init_idx, leaf_val, c=cqs):
+            from dataclasses import replace as drep
+            qs2 = drep(c, feat=feat, thr=thr, valid=valid, masks=masks,
+                       init_idx=init_idx, leaf_val=leaf_val, forest=None)
+            return qs_eval(qs2, X)
+
+        xs = jax.ShapeDtypeStruct((B_LAT, d), jnp.float32)
+        a_specs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                   for k, v in arrs.items()}
+        with mesh:
+            comp = jax.jit(fn, in_shardings=(
+                xsh, tree_sh["feat"], tree_sh["thr"], tree_sh["valid"],
+                tree_sh["masks"], tree_sh["init_idx"], tree_sh["leaf_val"]),
+                out_shardings=NamedSharding(mesh, P())).lower(
+                xs, a_specs["feat"], a_specs["thr"], a_specs["valid"],
+                a_specs["masks"], a_specs["init_idx"],
+                a_specs["leaf_val"]).compile()
+        cost = comp.cost_analysis()
+        coll = collective_bytes(comp.as_text())
+        terms = {
+            "compute_s": float(cost.get("flops", 0)) / PEAK_FLOPS,
+            "memory_s": float(cost.get("bytes accessed", 0)) / HBM_BW,
+            "collective_s": coll.link_bytes / ICI_BW,
+        }
+        bound = max(terms.values())
+        results.append({
+            "config": f"latency_b{B_LAT}_t{T_LAT}", "engine": f"bitvector_{mode}",
+            **{k: round(v, 6) for k, v in terms.items()},
+            "dominant": max(terms, key=terms.get),
+            "us_batch_latency_roofline": round(bound * 1e6, 2),
+        })
+        print(f"[latency_b{B_LAT:6d}] {mode:10s} "
+              f"c={terms['compute_s']*1e3:7.3f}ms "
+              f"m={terms['memory_s']*1e3:7.3f}ms "
+              f"x={terms['collective_s']*1e3:7.3f}ms "
+              f"→ batch latency {bound*1e6:8.1f} µs", flush=True)
+
+    # ---- Pallas-kernel HBM projection (§Perf forest iteration 2) ------- #
+    # The XLA bitvector engine streams its (B,T,N) cond and (B,T,N,W)
+    # select intermediates through HBM (fusion boundaries). The Pallas
+    # kernel (kernels/quickscorer_kernel.py) keeps the whole
+    # (block_b × block_t) tile in VMEM, so HBM traffic collapses to:
+    #   X read per tree-tile revisit + forest stream per batch-tile revisit
+    #   + output accumulator revisits.
+    # Compiled-for-TPU numbers are unavailable on this container (interpret
+    # mode only); this projection uses the same BlockSpec arithmetic the
+    # kernel declares, and is validated against the kernel's actual block
+    # shapes in tests/test_kernels.py.
+    BLOCK_B, BLOCK_T = 512, 128
+    for tag, T, L, bits in CONFIGS:
+        W = (L + 31) // 32
+        thr_b = {None: 4, 16: 2, 8: 1}[bits]
+        N = L - 1
+        b_chip = BATCH // n_chips
+        nb, nt = b_chip // BLOCK_B, max(T // BLOCK_T, 1)
+        x_bytes = b_chip * d * 4 * nt                # X re-read per tree tile
+        forest_bytes = (T * N * (4 + thr_b + 4 * W)  # feat+thr+masks
+                        + T * (4 * W) + T * L * 4) * nb
+        out_bytes = b_chip * 1 * 4 * nt * 2          # accumulator revisits
+        hbm = x_bytes + forest_bytes + out_bytes
+        vmem = (BLOCK_B * d * 4 + BLOCK_T * N * (4 + thr_b + 4 * W)
+                + BLOCK_T * (4 * W + L * 4) + BLOCK_B * 4)
+        mem_s = hbm / HBM_BW
+        comp = next(r for r in results
+                    if r["config"] == tag and r["engine"] == "bitvector")
+        comp_s = comp["compute_s"]
+        bound = max(mem_s, comp_s)
+        results.append({
+            "config": tag, "engine": "bitvector+pallas(projected)",
+            "bytes_per_chip": hbm, "vmem_per_block": vmem,
+            "compute_s": comp_s, "memory_s": round(mem_s, 6),
+            "collective_s": 0.0,
+            "dominant": "memory_s" if mem_s > comp_s else "compute_s",
+            "ns_per_instance_roofline": round(
+                bound / (BATCH / n_chips) * 1e9, 3),
+        })
+        print(f"[{tag:22s}] pallas-proj dom="
+              f"{'memory' if mem_s > comp_s else 'compute':9s} "
+              f"m={mem_s*1e3:8.3f}ms vmem={vmem/1e6:.2f}MB "
+              f"→ {bound / (BATCH / n_chips) * 1e9:8.2f} ns/inst", flush=True)
+
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "bench")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "roofline_forest.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Benchmark driver: one function per paper table/figure + the TPU
+roofline benches.
+
+    PYTHONPATH=src python -m benchmarks.run            # default scale
+    REPRO_BENCH_SCALE=quick  python -m benchmarks.run  # CI-sized
+    REPRO_BENCH_SCALE=full   python -m benchmarks.run  # paper-sized (hours)
+
+The forest-roofline bench needs 512 placeholder devices, so it runs as a
+subprocess (this process keeps the single real CPU device).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+from .common import SCALE
+
+
+def main() -> None:
+    t0 = time.time()
+    print(f"[bench] scale={SCALE}")
+
+    from . import (fig1_speedup, table2_ranking, table3_quant_accuracy,
+                   table4_merging, table5_classification)
+
+    for name, mod in [("table2_ranking", table2_ranking),
+                      ("table3_quant_accuracy", table3_quant_accuracy),
+                      ("table4_merging", table4_merging),
+                      ("table5_classification", table5_classification),
+                      ("fig1_speedup", fig1_speedup)]:
+        t = time.time()
+        print(f"\n[bench] running {name} ...", flush=True)
+        mod.main()
+        print(f"[bench] {name} done in {time.time()-t:.1f}s", flush=True)
+
+    # roofline (512-device dry-run) in a subprocess
+    print("\n[bench] running roofline_forest (subprocess) ...", flush=True)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.roofline_forest"],
+        env=env, cwd=os.path.join(os.path.dirname(__file__), ".."))
+    if r.returncode != 0:
+        print("[bench] roofline_forest FAILED", file=sys.stderr)
+        sys.exit(1)
+
+    print(f"\n[bench] all done in {time.time()-t0:.1f}s; CSVs in "
+          "experiments/bench/")
+
+
+if __name__ == "__main__":
+    main()

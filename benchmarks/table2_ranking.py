@@ -1,0 +1,108 @@
+"""Paper Table 2: ranking-model traversal runtime (µs/instance) on the MSN
+dataset, GBTs with {1k,5k,10k,20k} trees × {32,64} leaves.
+
+Reproduction notes:
+  * engine mapping (DESIGN.md §2): QS/VQS → bitvector, RS → rapidscorer,
+    NA → native, IE → unrolled, + the beyond-paper gemm engine;
+  * runtime is independent of learned leaf values, so the sweep uses
+    `random_forest_ir` ensembles with MSN's feature count (the paper's
+    observation — runtime depends on forest shape only — is what licenses
+    this; training 20k trees in CI would add hours for identical timings);
+  * one *trained* GBT row (scaled tree count) anchors the synthetic rows.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import core
+from repro.data import datasets
+
+from .common import Table, scale_pick, time_predict, us_per_instance
+
+ENGINES = ["rapidscorer", "bitvector", "native", "unrolled", "gemm"]
+PAPER_NAME = {"rapidscorer": "RS", "bitvector": "QS/VQS", "native": "NA",
+              "unrolled": "IE", "gemm": "GEMM(new)"}
+
+
+UNROLL_CAP = 1000    # the IF-ELSE analogue is compile-bound beyond this —
+                     # the paper's own IF-ELSE codegen-scaling problem,
+                     # reproduced as a compile-time wall (noted in
+                     # EXPERIMENTS.md §Table2)
+
+
+def run(quantized: bool = False) -> Table:
+    tree_counts = scale_pick([200, 1000], [1000, 2000], [1000, 5000, 10000,
+                                                         20000])
+    leaf_counts = scale_pick([32], [32, 64], [32, 64])
+    batch = scale_pick(256, 512, 4096)
+    d = 136                                        # MSN feature count
+
+    tag = "q" if quantized else ""
+    t = Table(f"table2_ranking{'_quant' if quantized else ''}",
+              ["trees", "leaves"] +
+              [f"{tag}{PAPER_NAME[e]}_us" for e in ENGINES] +
+              [f"{tag}{PAPER_NAME[e]}_speedup" for e in ENGINES])
+    rng = np.random.default_rng(0)
+    X = rng.normal(0, 1, size=(batch, d))
+    for L in leaf_counts:
+        for T in tree_counts:
+            forest = core.random_forest_ir(T, L, d, n_classes=1, seed=T + L)
+            if quantized:
+                forest = core.quantize_forest(forest)
+            res = {}
+            for e in ENGINES:
+                if e == "unrolled" and T > UNROLL_CAP:
+                    res[e] = float("nan")
+                    continue
+                pred = core.compile_forest(forest, engine=e)
+                sec = time_predict(lambda: pred.predict(X))
+                res[e] = us_per_instance(sec, batch)
+            na = res["native"]
+
+            def fmt(x, suffix=""):
+                import math
+                return "-" if math.isnan(x) else f"{x:.2f}{suffix}"
+
+            t.add(T, L, *[fmt(res[e]) for e in ENGINES],
+                  *[fmt(na / res[e], "x") for e in ENGINES])
+    return t
+
+
+def run_trained_anchor() -> Table:
+    """One trained-GBT row: confirms synthetic-forest timings match
+    trained-forest timings for identical (T, L, d)."""
+    T, L = scale_pick((100, 16), (400, 32), (1000, 32))
+    ds = datasets.load("msn", n=scale_pick(1500, 4000, 8000))
+    from repro.trees.gradient_boosting import (GradientBoosting,
+                                               GradientBoostingConfig)
+    gb = GradientBoosting(GradientBoostingConfig(
+        n_trees=T, max_leaves=L, objective="l2", seed=0)).fit(
+        ds.X_train, ds.y_train)
+    trained = core.from_gradient_boosting(gb)
+    synth = core.random_forest_ir(len(gb.trees), trained.n_leaves,
+                                  ds.n_features, seed=1)
+    batch = scale_pick(256, 1024, 4096)
+    X = ds.X_test[np.random.default_rng(0).integers(
+        0, ds.X_test.shape[0], size=batch)]
+    t = Table("table2_trained_anchor",
+              ["forest", "trees", "leaves", "depth", "RS_us", "QS_us",
+               "NA_us"])
+    for name, f in (("trained_gbt", trained), ("synthetic", synth)):
+        row = []
+        for e in ("rapidscorer", "bitvector", "native"):
+            pred = core.compile_forest(f, engine=e)
+            row.append(f"{us_per_instance(time_predict(lambda: pred.predict(X)), batch):.2f}")
+        # NATIVE cost ∝ max depth (fori_loop trip count): trained leaf-wise
+        # trees are deeper than balanced synthetic ones at equal leaf count
+        t.add(name, f.n_trees, f.n_leaves, f.max_depth, *row)
+    return t
+
+
+def main():
+    for tbl in (run(False), run(True), run_trained_anchor()):
+        tbl.print()
+        tbl.save()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Table 3: accuracy of the four (split × leaf) quantization combos
+for an RF on the 5 classification datasets.
+
+Paper scale: 1024 trees × 64 leaves. Default scale here trains 128×32
+(REPRO_BENCH_SCALE=full for 1024×64). Absolute accuracies differ from the
+paper (synthetic data stand-ins, DESIGN.md §5); the *claim under test* is
+the quantization deltas: ≈0 everywhere except EEG-like heavy-tailed
+features, where split-quantization costs points.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import core
+from repro.core.quantize import QuantSpec
+from repro.data import datasets
+from repro.trees.random_forest import RandomForest, RandomForestConfig
+
+from .common import Table, scale_pick
+
+DATASETS = ["adult", "eeg", "fashion", "magic", "mnist"]
+
+COMBOS = [
+    ("float/float", None),
+    ("float/int16", QuantSpec(quantize_splits=False)),
+    ("int16/float", QuantSpec(quantize_leaves=False)),
+    ("int16/int16", QuantSpec()),
+]
+
+
+def run() -> Table:
+    n_trees = scale_pick(64, 128, 1024)
+    n_leaves = scale_pick(32, 64, 64)     # paper Table 3 is 64-leaf trees
+    n_samples = scale_pick(1500, 3000, 8000)
+
+    t = Table("table3_quant_accuracy",
+              ["dataset"] + [c for c, _ in COMBOS] + ["max_delta_pp"])
+    for name in DATASETS:
+        ds = datasets.load(name, n=n_samples)
+        rf = RandomForest(RandomForestConfig(
+            n_trees=n_trees, max_leaves=n_leaves, seed=0)).fit(
+            ds.X_train, ds.y_train)
+        forest = core.from_random_forest(rf)
+        accs = []
+        for _, spec in COMBOS:
+            f = forest if spec is None else core.quantize_forest(
+                forest, ds.X_train, spec=spec)
+            pred = core.compile_forest(f, engine="bitvector")
+            acc = (pred.predict_class(ds.X_test) == ds.y_test).mean()
+            accs.append(acc)
+        delta = (max(accs) - min(accs)) * 100
+        t.add(name, *[f"{a*100:.2f}%" for a in accs], f"{delta:.2f}")
+    return t
+
+
+def main():
+    tbl = run()
+    tbl.print()
+    tbl.save()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper Table 5: classification traversal runtime (µs/instance) for
+(quantized) QS/VQS/RS/IE/NA across the 5 classification datasets.
+
+Forests are trained (accuracy shown alongside runtime so correctness is
+auditable); engine mapping per DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import core
+from repro.data import datasets
+from repro.trees.random_forest import RandomForest, RandomForestConfig
+
+from .common import Table, scale_pick, time_predict, us_per_instance
+
+DATASETS = ["magic", "mnist", "adult", "eeg", "fashion"]
+ENGINES = ["rapidscorer", "bitvector", "native", "unrolled", "gemm"]
+PAPER_NAME = {"rapidscorer": "RS", "bitvector": "QS/VQS", "native": "NA",
+              "unrolled": "IE", "gemm": "GEMM(new)"}
+
+
+def run() -> tuple[Table, Table]:
+    n_trees = scale_pick(64, 128, 1024)
+    n_leaves = scale_pick(32, 64, 64)
+    n_samples = scale_pick(1500, 3000, 8000)
+    batch = scale_pick(256, 512, 2048)
+
+    t_us = Table("table5_classification_us",
+                 ["dataset", "quant"] +
+                 [PAPER_NAME[e] for e in ENGINES] + ["best"])
+    t_sp = Table("table5_classification_speedup",
+                 ["dataset", "quant"] +
+                 [PAPER_NAME[e] for e in ENGINES] + ["accuracy"])
+    for name in DATASETS:
+        ds = datasets.load(name, n=n_samples)
+        rf = RandomForest(RandomForestConfig(
+            n_trees=n_trees, max_leaves=n_leaves, seed=0)).fit(
+            ds.X_train, ds.y_train)
+        base_forest = core.from_random_forest(rf)
+        rng = np.random.default_rng(1)
+        X = ds.X_test[rng.integers(0, ds.X_test.shape[0], size=batch)]
+
+        na_float = None
+        for quant in (False, True):
+            forest = core.quantize_forest(base_forest, ds.X_train) \
+                if quant else base_forest
+            res, acc = {}, None
+            for e in ENGINES:
+                pred = core.compile_forest(forest, engine=e)
+                sec = time_predict(lambda: pred.predict(X))
+                res[e] = us_per_instance(sec, batch)
+                if acc is None:
+                    acc = (pred.predict_class(ds.X_test) ==
+                           ds.y_test).mean()
+            if not quant:
+                na_float = res["native"]
+            best = min(res, key=res.get)
+            t_us.add(name, "q" if quant else "-",
+                     *[f"{res[e]:.2f}" for e in ENGINES], PAPER_NAME[best])
+            t_sp.add(name, "q" if quant else "-",
+                     *[f"{na_float / res[e]:.2f}x" for e in ENGINES],
+                     f"{acc*100:.2f}%")
+    return t_us, t_sp
+
+
+def main():
+    for tbl in run():
+        tbl.print()
+        tbl.save()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Reproducible ablation for EXPERIMENTS.md §Perf iterations 1–5: lower a
+dry-run cell with the activation-sharding constraint system DISABLED
+(REPRO_NO_ACT_SHARDING=1) vs enabled, and print the roofline/memory delta.
+
+    PYTHONPATH=src python scripts/ablate_sharding.py \
+        [--arch smollm_360m] [--shape train_4k]
+
+Each variant runs in a subprocess (jax device state + the env hook are
+process-global).
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+CELL_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys
+from repro.launch.dryrun import build_cell, PEAK_FLOPS, HBM_BW, ICI_BW
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.configs import get_config, SHAPES
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+cfg = get_config(arch); shape = SHAPES[shape_name]
+mesh = make_production_mesh()
+with mesh:
+    fn, args, extra = build_cell(cfg, shape, mesh)
+    compiled = fn.lower(*args).compile()
+hc = analyze(compiled.as_text())
+mem = compiled.memory_analysis()
+print(json.dumps({
+    "flops": hc.flops, "bytes": hc.bytes_hbm,
+    "coll_link": hc.collectives.link_bytes,
+    "temp_bytes": int(mem.temp_size_in_bytes),
+    "compute_s": hc.flops / PEAK_FLOPS,
+    "memory_s": hc.bytes_hbm / HBM_BW,
+    "collective_s": hc.collectives.link_bytes / ICI_BW,
+}))
+"""
+
+
+def run_variant(arch: str, shape: str, disabled: bool) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    if disabled:
+        env["REPRO_NO_ACT_SHARDING"] = "1"
+    else:
+        env.pop("REPRO_NO_ACT_SHARDING", None)
+    out = subprocess.run(
+        [sys.executable, "-c", CELL_SCRIPT, arch, shape],
+        env=env, capture_output=True, text=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+
+    print(f"[ablate] {args.arch} {args.shape}: constraints OFF ...",
+          flush=True)
+    off = run_variant(args.arch, args.shape, disabled=True)
+    print(f"[ablate] {args.arch} {args.shape}: constraints ON ...",
+          flush=True)
+    on = run_variant(args.arch, args.shape, disabled=False)
+
+    def row(k, scale=1e9, unit="GB"):
+        o, n = off[k] / scale, on[k] / scale
+        return (f"  {k:14s} {o:12.2f} → {n:12.2f} {unit}   "
+                f"({o / max(n, 1e-12):5.1f}× reduction)")
+
+    print("\nconstraints OFF → ON (per chip):")
+    print(row("temp_bytes"))
+    print(row("bytes"))
+    print(row("coll_link"))
+    print(f"  {'flops':14s} {off['flops']/1e12:12.2f} → "
+          f"{on['flops']/1e12:12.2f} TFLOP  "
+          f"({off['flops']/max(on['flops'],1e-9):5.1f}× reduction)")
+    print("\nroofline terms (s):")
+    for k in ("compute_s", "memory_s", "collective_s"):
+        print(f"  {k:14s} {off[k]:10.3f} → {on[k]:10.3f}")
+
+
+if __name__ == "__main__":
+    main()

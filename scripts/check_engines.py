@@ -1,0 +1,36 @@
+"""Dev sanity check: all engines vs the traversal oracle."""
+import numpy as np
+
+from repro import core
+from repro.data import load
+from repro.trees import RandomForest, RandomForestConfig
+
+ds = load("magic", n=2000)
+rf = RandomForest(RandomForestConfig(n_trees=24, max_leaves=32,
+                                     max_samples=512)).fit(ds.X_train, ds.y_train)
+forest = core.from_random_forest(rf)
+X = ds.X_test[:64]
+oracle = forest.predict_oracle(X)
+
+for engine in ("bitvector", "rapidscorer", "native", "unrolled", "gemm"):
+    pred = core.compile_forest(forest, engine=engine)
+    got = pred.predict(X)
+    err = np.abs(got - oracle).max()
+    print(f"{engine:12s} max_err={err:.2e} {'OK' if err < 1e-5 else 'FAIL'}")
+
+# scalar faithful QS (Algorithm 1 with early break)
+sc = core.eval_scalar_numpy(forest, X[:8])
+print(f"{'scalar-QS':12s} max_err={np.abs(sc - oracle[:8]).max():.2e}")
+
+# quantized
+qf = core.quantize_forest(forest, ds.X_train)
+oq = qf.predict_oracle(core.quantize_inputs(qf, X)) / core.leaf_scale(qf)
+for engine in ("bitvector", "rapidscorer", "native", "gemm"):
+    pred = core.compile_forest(qf, engine=engine)
+    got = pred.predict(X)
+    err = np.abs(got - oq).max()
+    print(f"q-{engine:10s} max_err={err:.2e} {'OK' if err < 1e-4 else 'FAIL'}")
+
+acc_f = (core.compile_forest(forest).predict_class(ds.X_test) == ds.y_test).mean()
+acc_q = (core.compile_forest(qf).predict_class(ds.X_test) == ds.y_test).mean()
+print(f"accuracy float={acc_f:.4f} quant={acc_q:.4f}")

@@ -1,0 +1,133 @@
+"""Render the §Table2-5/§Fig1 sections of EXPERIMENTS.md from the CSVs in
+experiments/bench/ (run after `python -m benchmarks.run`). Prints markdown;
+`--insert` replaces the `<!-- PAPER_TABLES -->` marker in EXPERIMENTS.md.
+"""
+import csv
+import json
+import os
+import sys
+
+BENCH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                     "bench")
+
+
+def md_table(path):
+    with open(path) as f:
+        rows = list(csv.reader(f))
+    out = ["| " + " | ".join(rows[0]) + " |",
+           "|" + "---|" * len(rows[0])]
+    for r in rows[1:]:
+        out.append("| " + " | ".join(r) + " |")
+    return "\n".join(out)
+
+
+def render() -> str:
+    s = []
+    s.append("""
+## Paper reproduction tables
+
+CPU wall-clock on this container is a *relative* comparison between
+XLA-compiled traversal programs (the paper's absolute numbers are
+ARM-specific); the engine names map QS/VQS→bitvector, RS→rapidscorer,
+NA→native, IE→unrolled per DESIGN.md §2. Forest training uses the
+framework's own histogram-CART substrate on the offline dataset stand-ins
+(DESIGN.md §5), so accuracy *deltas* are the reproduced quantity, not
+absolute accuracies.
+
+### §Table2 — ranking traversal runtime (µs/instance, GBT on MSN-shaped data)
+""")
+    s.append(md_table(os.path.join(BENCH, "table2_ranking.csv")))
+    s.append("\nquantized (int16) variants:\n")
+    s.append(md_table(os.path.join(BENCH, "table2_ranking_quant.csv")))
+    s.append("""
+trained-GBT vs synthetic-forest timing anchor (identical (T, L, d) —
+NATIVE's gap is depth: leaf-wise trained trees are deeper than balanced
+synthetic ones, and NATIVE cost ∝ depth):
+""")
+    s.append(md_table(os.path.join(BENCH, "table2_trained_anchor.csv")))
+    s.append("""
+Findings vs the paper: on ARM the bitvector engines beat NATIVE (paper
+Table 2: RS up to 5.8×); on CPU-executed XLA the ranking *inverts* —
+NATIVE/IF-ELSE win, and the gap widens with leaf count (L=64 doubles the
+bitvector word count W, so predication does O(T·N·W) work vs NATIVE's
+O(T·depth) gathers; compare the 32- vs 64-leaf rows). Predication only
+approaches NATIVE where trees are deep (trained leaf-wise forests — the
+anchor table: QS 30 µs vs NA 51 µs at depth 18) or forests are small
+at large batch (REPRO_BENCH_SCALE=quick). `unrolled` (IF-ELSE) beyond
+1000 trees is compile-bound — the paper's IF-ELSE codegen-scaling wall,
+reproduced in XLA. The device-dependence of the winner IS the paper's
+headline conclusion, re-confirmed on a third device class. The TPU-target
+numbers (the point of this framework) are in §Perf: tiled-bitvector
+wins by 240×.
+
+### §Table3 — quantization accuracy (paper Table 3)
+""")
+    s.append(md_table(os.path.join(BENCH, "table3_quant_accuracy.csv")))
+    s.append("""
+Reproduces the paper's claim structurally: quantization is accuracy-free
+everywhere except EEG-like heavy-tailed features, where *split*
+quantization compresses the physiological bulk onto ~20 fixed-point
+levels. On the synthetic stand-in the accuracy cost shows at small
+ensemble capacity (64 trees: −3.7pp, paper: −4.1pp at 1024 trees;
+REPRO_BENCH_SCALE=quick) and washes out as trees are added — synthetic
+clusters stay separable on a coarse grid where real EEG does not. The
+*mechanism* — unique-threshold collapse — reproduces at every scale
+(§Table4 below: 9.0% → 2.2% unique nodes under quantization at T=128),
+and leaf quantization is free at every scale, both as the paper claims.
+
+### §Table4 — unique nodes kept after RapidScorer merging (paper Table 4)
+""")
+    s.append(md_table(os.path.join(BENCH, "table4_merging.csv")))
+    s.append("""
+Reproduces both of the paper's effects: (a) merging rates fall with tree
+count; (b) float≡quant everywhere except EEG, where quantization collapses
+unique thresholds (paper: 19.4%→8.4% at T=1024; here 9.0%→2.2% at
+T=128 and 5.0%→1.1% at T=256) — the mechanism behind the Table-3
+accuracy effect. Adult's extreme merging rate (paper: 12.1% at T=128;
+here 6.5%) also reproduces: one-hot features admit few distinct
+thresholds.
+
+### §Table5 — classification traversal runtime (µs/instance, RF)
+""")
+    s.append(md_table(os.path.join(BENCH, "table5_classification_us.csv")))
+    s.append("\nspeedups vs float NATIVE (paper's convention):\n")
+    s.append(md_table(os.path.join(BENCH,
+                                   "table5_classification_speedup.csv")))
+    s.append("""
+### §Fig1 — speedup vs tree count (avg over leaf counts)
+""")
+    s.append(md_table(os.path.join(BENCH, "fig1_speedup.csv")))
+
+    rf = os.path.join(BENCH, "roofline_forest.json")
+    if os.path.exists(rf):
+        rows = json.load(open(rf))
+        s.append("""
+### Forest-engine TPU roofline (see §Perf for analysis)
+
+| config | engine | dominant | ns/inst or µs/batch |
+|---|---|---|---|""")
+        for r in rows:
+            metr = r.get("ns_per_instance_roofline")
+            metr = (f"{metr} ns/inst" if metr is not None
+                    else f"{r.get('us_batch_latency_roofline')} µs/batch")
+            s.append(f"| {r['config']} | {r['engine']} "
+                     f"| {r['dominant'].replace('_s','')} | {metr} |")
+    return "\n".join(s)
+
+
+def main():
+    text = render()
+    if "--insert" in sys.argv:
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "EXPERIMENTS.md")
+        content = open(path).read()
+        assert "<!-- PAPER_TABLES -->" in content, "marker missing"
+        open(path, "w").write(
+            content.replace("<!-- PAPER_TABLES -->", text))
+        print("inserted into EXPERIMENTS.md")
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""repro.core — the paper's contribution: QuickScorer-family tree-ensemble
+inference as a composable JAX module, plus fixed-point quantization.
+
+Typical use::
+
+    from repro import core
+    forest = core.from_random_forest(rf)              # trainer → IR
+    forest = core.quantize_forest(forest, X_train)    # optional, paper §5
+    pred = core.compile_forest(forest, engine="bitvector", backend="pallas")
+    scores = pred.predict(X)                          # (B, C)
+"""
+from .forest import (Forest, from_gradient_boosting, from_random_forest,
+                     from_trees, random_forest_ir)
+from .quantize import (QuantSpec, feature_ranges, leaf_scale,
+                       normalize_features, quantize_forest, quantize_inputs)
+from .quickscorer import (CompiledQS, QSPredictor, compile_qs, eval_batch,
+                          eval_scalar_numpy, exit_leaf)
+from .rapidscorer import (CompiledRS, RSPredictor, compile_rs, merge_nodes,
+                          merge_stats)
+from .baselines import (BaselinePredictor, compile_gemm, compile_native,
+                        eval_gemm, eval_native, gemm_predictor,
+                        native_predictor)
+
+ENGINES = ("bitvector", "rapidscorer", "native", "unrolled", "gemm")
+
+
+def compile_forest(forest: Forest, engine: str = "bitvector",
+                   backend: str = "jax", **kw):
+    """Build a predictor for ``forest``.
+
+    engine:  bitvector (QS/VQS semantics) | rapidscorer (node merging) |
+             native | unrolled | gemm
+    backend: jax (XLA) | pallas (explicit TPU kernel; interpret mode on CPU)
+    """
+    if backend == "pallas":
+        from ..kernels import ops
+        if engine == "bitvector":
+            return ops.pallas_qs_predictor(forest, **kw)
+        if engine == "gemm":
+            return ops.pallas_gemm_predictor(forest, **kw)
+        raise ValueError(f"pallas backend supports bitvector|gemm, got {engine}")
+    if engine == "bitvector":
+        return QSPredictor(compile_qs(forest))
+    if engine == "rapidscorer":
+        return RSPredictor(compile_rs(forest))
+    if engine == "native":
+        return native_predictor(forest, unroll=False)
+    if engine == "unrolled":
+        return native_predictor(forest, unroll=True)
+    if engine == "gemm":
+        return gemm_predictor(forest, **kw)
+    raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+
+
+__all__ = [
+    "Forest", "from_trees", "from_random_forest", "from_gradient_boosting",
+    "random_forest_ir", "QuantSpec", "quantize_forest", "quantize_inputs",
+    "feature_ranges", "normalize_features", "leaf_scale",
+    "CompiledQS", "compile_qs", "QSPredictor", "eval_batch",
+    "eval_scalar_numpy", "exit_leaf", "CompiledRS", "compile_rs",
+    "RSPredictor", "merge_nodes", "merge_stats", "BaselinePredictor",
+    "compile_native", "compile_gemm", "eval_native", "eval_gemm",
+    "native_predictor", "gemm_predictor", "compile_forest", "ENGINES",
+]

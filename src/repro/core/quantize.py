@@ -1,0 +1,125 @@
+"""Fixed-point quantization of tree ensembles (paper §5).
+
+``q(x) = floor(s * x)`` with scaling constant ``s`` (paper default 2^15),
+applied to split thresholds and/or leaf values, stored in ``bits``-wide
+integers. Inputs are quantized with the same ``s`` at inference time, so the
+split predicate ``x <= t`` becomes ``floor(s x) <= floor(s t)``.
+
+Because raw features have arbitrary ranges (the paper's datasets do too), a
+per-feature order-preserving min-max normalisation to [0, 1) is applied
+*before* quantization; it changes no float prediction (monotone per feature)
+but makes the fixed-point grid meaningful. Heavy-tailed features (EEG) get
+their threshold mass compressed by this — exactly the failure mode the paper
+observes in Tables 3/4.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import numpy as np
+
+from .forest import Forest
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    bits: int = 16                 # 16 (paper) or 8 (beyond-paper)
+    scale: Optional[float] = None  # None → 2^(bits-1) for splits
+    quantize_splits: bool = True
+    quantize_leaves: bool = True
+
+    @property
+    def default_scale(self) -> float:
+        return float(2 ** (self.bits - 1))
+
+    @property
+    def int_max(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def dtype(self):
+        return np.int16 if self.bits == 16 else np.int8
+
+
+def feature_ranges(forest: Forest, X: Optional[np.ndarray] = None):
+    """Per-feature (lo, hi) for min-max normalisation: from data if given,
+    else from the forest's own thresholds."""
+    d = forest.n_features
+    if X is not None:
+        lo, hi = X.min(axis=0).astype(np.float64), X.max(axis=0).astype(np.float64)
+    else:
+        lo = np.full(d, np.inf)
+        hi = np.full(d, -np.inf)
+        valid = forest.feature >= 0
+        for t in range(forest.n_trees):
+            for n in np.nonzero(valid[t])[0]:
+                f = forest.feature[t, n]
+                v = forest.threshold[t, n]
+                lo[f] = min(lo[f], v)
+                hi[f] = max(hi[f], v)
+        lo[~np.isfinite(lo)] = 0.0
+        hi[~np.isfinite(hi)] = 1.0
+    span = hi - lo
+    hi = np.where(span <= 0, lo + 1.0, hi)
+    return lo, hi
+
+
+def normalize_features(X: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    return np.clip((X - lo) / (hi - lo), 0.0, 1.0)
+
+
+def quantize_forest(forest: Forest, X: Optional[np.ndarray] = None,
+                    spec: QuantSpec = QuantSpec()) -> Forest:
+    """Return a new Forest with int thresholds / leaves per ``spec``.
+
+    The returned forest's ``predict_oracle``/engines require inputs passed
+    through ``quantize_inputs`` — engine wrappers do this automatically via
+    the stored ``feat_lo``/``feat_hi``/``quant_scale``."""
+    assert forest.quant_scale is None, "forest already quantized"
+    lo, hi = feature_ranges(forest, X)
+    s = spec.scale if spec.scale is not None else spec.default_scale
+    out = replace(forest)
+
+    if spec.quantize_splits:
+        tn = normalize_features(forest.threshold.astype(np.float64),
+                                lo[np.maximum(forest.feature, 0)],
+                                hi[np.maximum(forest.feature, 0)])
+        q = np.clip(np.floor(s * tn), -spec.int_max - 1, spec.int_max)
+        out.threshold = q.astype(spec.dtype)
+
+    if spec.quantize_leaves:
+        max_abs = float(np.abs(forest.leaf_value).max()) or 1.0
+        # paper: s in [M, 2^B]; auto-shrink for GBT leaves that exceed 1.0
+        s_leaf = s
+        while s_leaf * max_abs > spec.int_max and s_leaf > 2.0:
+            s_leaf /= 2.0
+        out.leaf_value = np.floor(s_leaf * forest.leaf_value).astype(
+            np.int32 if spec.bits == 16 else np.int16)
+        out.leaf_scale = s_leaf
+
+    out.quant_scale = s
+    out.quant_bits = spec.bits
+    out.feat_lo = lo
+    out.feat_hi = hi
+    return out
+
+
+def quantize_inputs(forest: Forest, X: np.ndarray) -> np.ndarray:
+    """Apply the forest's stored normalisation + fixed-point grid to raw
+    inputs. No-op for float forests."""
+    if forest.quant_scale is None:
+        return X
+    if not np.issubdtype(forest.threshold.dtype, np.integer):
+        # leaves-only quantization: splits still float → inputs stay raw
+        return X
+    Xn = normalize_features(X, forest.feat_lo, forest.feat_hi)
+    q = np.floor(forest.quant_scale * Xn)
+    imax = 2 ** (forest.quant_bits - 1) - 1
+    return np.clip(q, -imax - 1, imax).astype(forest.threshold.dtype)
+
+
+def leaf_scale(forest: Forest) -> float:
+    """Descaling factor for quantized leaf accumulations (1.0 if float)."""
+    return float(getattr(forest, "leaf_scale", 1.0)
+                 if np.issubdtype(forest.leaf_value.dtype, np.integer) else 1.0)

@@ -1,0 +1,193 @@
+"""QuickScorer / V-QuickScorer on TPU-style lanes — the paper's core.
+
+``CompiledQS`` holds the flat QuickScorer arrays (feature ids, thresholds,
+interval bitmasks, leaf table). ``eval_batch`` is the pure-jnp reference
+evaluation used as the kernel oracle AND as the XLA engine; the Pallas kernel
+in ``repro.kernels.quickscorer_kernel`` computes the same function with
+explicit VMEM tiling.
+
+Semantics (paper Algorithm 1, adapted per DESIGN.md §2.1):
+
+  * every node carries a bitmask that clears its *left-subtree* leaf interval;
+  * the mask is applied iff ``x[feat] > thr`` (the instance goes right, so
+    the left subtree becomes unreachable);
+  * the exit leaf is the lowest surviving set bit (LSB-first convention);
+  * the prediction is a leaf-table lookup summed over trees.
+
+The per-feature sorted early-``break`` of the CPU algorithm is replaced by
+full predication (all nodes evaluated, masked select) — lockstep VPU lanes
+make data-dependent early exit counterproductive. A faithful scalar QS with
+the sorted-feature early exit is kept in ``eval_scalar_numpy`` for oracle
+cross-checks and CPU-semantics benchmarking.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .forest import Forest, WORD
+from .quantize import leaf_scale, quantize_inputs
+
+
+@dataclass
+class CompiledQS:
+    """Flattened QuickScorer arrays (jnp, device-resident)."""
+    feat: jnp.ndarray        # (T, N) int32, padding → 0
+    thr: jnp.ndarray         # (T, N) f32 | i16 | i8
+    valid: jnp.ndarray       # (T, N) bool
+    masks: jnp.ndarray       # (T, N, W) uint32
+    init_idx: jnp.ndarray    # (T, W) uint32
+    leaf_val: jnp.ndarray    # (T, L, C) f32 | i32
+    n_leaves: int
+    n_classes: int
+    n_features: int
+    leaf_scale: float
+    forest: Optional[Forest] = None   # host-side IR (for input quantization)
+
+    @property
+    def n_trees(self) -> int:
+        return self.feat.shape[0]
+
+    @property
+    def n_words(self) -> int:
+        return self.masks.shape[-1]
+
+    def transform_inputs(self, X: np.ndarray) -> np.ndarray:
+        return quantize_inputs(self.forest, X) if self.forest is not None else X
+
+
+def compile_qs(forest: Forest) -> CompiledQS:
+    masks = forest.node_masks()                       # (T, N, W) uint32
+    valid = forest.feature >= 0
+    return CompiledQS(
+        feat=jnp.asarray(np.maximum(forest.feature, 0), dtype=jnp.int32),
+        thr=jnp.asarray(forest.threshold),
+        valid=jnp.asarray(valid),
+        masks=jnp.asarray(masks),
+        init_idx=jnp.asarray(forest.init_leafidx()),
+        leaf_val=jnp.asarray(forest.leaf_value),
+        n_leaves=forest.n_leaves,
+        n_classes=forest.n_classes,
+        n_features=forest.n_features,
+        leaf_scale=leaf_scale(forest),
+        forest=forest,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Bit helpers (DESIGN.md §2.2)
+# --------------------------------------------------------------------------- #
+def ctz32(w: jnp.ndarray) -> jnp.ndarray:
+    """Count-trailing-zeros of nonzero uint32: popcount((w & -w) - 1)."""
+    w = w.astype(jnp.uint32)
+    lsb = w & (jnp.uint32(0) - w)
+    return jax.lax.population_count(lsb - jnp.uint32(1)).astype(jnp.int32)
+
+
+def exit_leaf(leafidx: jnp.ndarray) -> jnp.ndarray:
+    """leafidx (..., W) uint32 → lowest set bit index (...,) int32."""
+    W = leafidx.shape[-1]
+    nz = leafidx != 0
+    first_w = jnp.argmax(nz, axis=-1)                           # (...,)
+    w = jnp.take_along_axis(leafidx, first_w[..., None], axis=-1)[..., 0]
+    return (first_w * WORD + ctz32(w)).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------- #
+# Reference (pure-jnp) evaluation — also the XLA production engine
+# --------------------------------------------------------------------------- #
+def mask_reduce(cond: jnp.ndarray, masks: jnp.ndarray,
+                init_idx: jnp.ndarray) -> jnp.ndarray:
+    """cond (B, T, N) bool × masks (T, N, W) → leafidx (B, T, W).
+
+    AND-reduction over the node axis with predication: nodes whose predicate
+    is false contribute the identity mask (all ones)."""
+    ones = jnp.uint32(0xFFFFFFFF)
+    sel = jnp.where(cond[..., None], masks[None], ones)          # (B,T,N,W)
+    red = jax.lax.reduce(sel, ones, jax.lax.bitwise_and, dimensions=(2,))
+    return red & init_idx[None]
+
+
+def eval_batch(qs: CompiledQS, X: jnp.ndarray) -> jnp.ndarray:
+    """Full-batch QuickScorer: X (B, d) → scores (B, C). Pure jnp."""
+    xf = X[:, qs.feat]                                          # (B, T, N)
+    cond = (xf > qs.thr[None]) & qs.valid[None]
+    leafidx = mask_reduce(cond, qs.masks, qs.init_idx)          # (B, T, W)
+    leaf = exit_leaf(leafidx)                                   # (B, T)
+    vals = jnp.take_along_axis(
+        qs.leaf_val[None], leaf[..., None, None], axis=2)[:, :, 0]  # (B, T, C)
+    acc_dtype = jnp.float32 if qs.leaf_val.dtype == jnp.float32 else jnp.int32
+    score = vals.astype(acc_dtype).sum(axis=1)
+    return score.astype(jnp.float32) / qs.leaf_scale
+
+
+class QSPredictor:
+    """User-facing engine wrapper: handles input quantization + jit cache."""
+
+    def __init__(self, qs: CompiledQS):
+        self.qs = qs
+        self._fn = jax.jit(lambda X: eval_batch(self.qs, X))
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        Xq = self.qs.transform_inputs(np.asarray(X))
+        return np.asarray(self._fn(jnp.asarray(Xq)))
+
+    def predict_class(self, X: np.ndarray) -> np.ndarray:
+        return self.predict(X).argmax(axis=1)
+
+
+# --------------------------------------------------------------------------- #
+# Faithful scalar QuickScorer (paper Algorithm 1, with the sorted-threshold
+# early exit) — numpy, used for oracle cross-checks and CPU-semantics bench.
+# --------------------------------------------------------------------------- #
+def build_feature_major(forest: Forest):
+    """Feature-major node stream: for each feature, nodes sorted ascending by
+    threshold — the order Algorithm 1 requires for its ``break``."""
+    T, N = forest.feature.shape
+    recs = []
+    for t in range(T):
+        for n in range(int(forest.n_nodes[t])):
+            recs.append((int(forest.feature[t, n]),
+                         float(forest.threshold[t, n]), t, n))
+    recs.sort()
+    feat = np.array([r[0] for r in recs], dtype=np.int32)
+    thr = np.array([r[1] for r in recs], dtype=np.float64)
+    tree = np.array([r[2] for r in recs], dtype=np.int32)
+    node = np.array([r[3] for r in recs], dtype=np.int32)
+    # feature segment boundaries
+    starts = np.searchsorted(feat, np.arange(forest.n_features))
+    ends = np.searchsorted(feat, np.arange(forest.n_features), side="right")
+    return feat, thr, tree, node, starts, ends
+
+
+def eval_scalar_numpy(forest: Forest, X: np.ndarray) -> np.ndarray:
+    """Algorithm 1 verbatim (per instance, early break per feature)."""
+    feat, thr, tree, node, starts, ends = build_feature_major(forest)
+    masks = forest.node_masks()
+    init = forest.init_leafidx()
+    W = forest.n_words
+    out = np.zeros((X.shape[0], forest.n_classes))
+    lv = forest.leaf_value.astype(np.float64)
+    for i, x in enumerate(X):
+        leafidx = init.copy()
+        for f in range(forest.n_features):
+            for j in range(starts[f], ends[f]):
+                if x[f] > thr[j]:
+                    leafidx[tree[j]] &= masks[tree[j], node[j]]
+                else:
+                    break                      # thresholds ascending
+        # exit leaf: lowest set bit
+        for t in range(forest.n_trees):
+            leaf = 0
+            for w in range(W):
+                v = int(leafidx[t, w])
+                if v:
+                    leaf = w * WORD + (v & -v).bit_length() - 1
+                    break
+            out[i] += lv[t, leaf]
+    return out / leaf_scale(forest)

@@ -1,0 +1,93 @@
+"""RapidScorer (Ye et al. 2018) — equivalent-node merging, TPU form.
+
+Of RapidScorer's three mechanisms (DESIGN.md §2.3):
+  * node merging   → transfers: dedupe identical (feature, threshold) pairs
+    across the whole ensemble; one comparison drives every occurrence.
+  * epitome        → dropped (CPU L1 optimisation; dense words win in VMEM).
+  * byte transpose → subsumed by the Pallas kernel's lane-minor layout.
+
+Merged evaluation computes ``cond_u`` once per *unique* node, then scatters
+it to all occurrences via a gather. The merging statistics themselves
+(Table 4 of the paper) come from ``merge_stats``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .forest import Forest
+from .quantize import leaf_scale
+from .quickscorer import CompiledQS, compile_qs, exit_leaf, mask_reduce
+
+
+@dataclass
+class CompiledRS:
+    qs: CompiledQS
+    u_feat: jnp.ndarray      # (U,) int32 unique node features
+    u_thr: jnp.ndarray       # (U,) unique thresholds
+    inv: jnp.ndarray         # (T, N) int32 node → unique id
+    n_unique: int
+
+    def transform_inputs(self, X):
+        return self.qs.transform_inputs(X)
+
+
+def merge_nodes(forest: Forest):
+    """Unique (feature, threshold) table + inverse map. Padding nodes map to
+    unique id 0 but are masked out by ``valid`` downstream."""
+    T, N = forest.feature.shape
+    valid = (forest.feature >= 0).ravel()
+    feat = np.maximum(forest.feature, 0).ravel()
+    thr = forest.threshold.ravel()
+    # bit-exact key (works for float and int thresholds alike)
+    key = np.stack([feat.astype(np.int64),
+                    thr.astype(np.float64).view(np.int64)], axis=1)
+    key[~valid] = np.array([-1, 0])
+    uniq, inv = np.unique(key, axis=0, return_inverse=True)
+    n_pad = int((uniq[:, 0] == -1).any())
+    u_feat = np.maximum(uniq[:, 0], 0).astype(np.int32)
+    u_thr = uniq[:, 1].view(np.float64).astype(forest.threshold.dtype)
+    return u_feat, u_thr, inv.reshape(T, N).astype(np.int32), len(uniq) - n_pad
+
+
+def merge_stats(forest: Forest) -> float:
+    """Fraction of unique nodes kept after merging (paper Table 4)."""
+    *_, n_unique = merge_nodes(forest)
+    total = int(forest.n_nodes.sum())
+    return n_unique / max(total, 1)
+
+
+def compile_rs(forest: Forest) -> CompiledRS:
+    qs = compile_qs(forest)
+    u_feat, u_thr, inv, n_unique = merge_nodes(forest)
+    return CompiledRS(qs, jnp.asarray(u_feat), jnp.asarray(u_thr),
+                      jnp.asarray(inv), n_unique)
+
+
+def eval_batch(rs: CompiledRS, X: jnp.ndarray) -> jnp.ndarray:
+    """X (B, d) → scores (B, C): one comparison per unique node."""
+    qs = rs.qs
+    cond_u = X[:, rs.u_feat] > rs.u_thr[None]                   # (B, U)
+    cond = jnp.take(cond_u, rs.inv, axis=1) & qs.valid[None]    # (B, T, N)
+    leafidx = mask_reduce(cond, qs.masks, qs.init_idx)
+    leaf = exit_leaf(leafidx)
+    vals = jnp.take_along_axis(
+        qs.leaf_val[None], leaf[..., None, None], axis=2)[:, :, 0]
+    acc_dtype = jnp.float32 if qs.leaf_val.dtype == jnp.float32 else jnp.int32
+    return vals.astype(acc_dtype).sum(axis=1).astype(jnp.float32) / qs.leaf_scale
+
+
+class RSPredictor:
+    def __init__(self, rs: CompiledRS):
+        self.rs = rs
+        self._fn = jax.jit(lambda X: eval_batch(self.rs, X))
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        Xq = self.rs.transform_inputs(np.asarray(X))
+        return np.asarray(self._fn(jnp.asarray(Xq)))
+
+    def predict_class(self, X: np.ndarray) -> np.ndarray:
+        return self.predict(X).argmax(axis=1)

@@ -1,0 +1,3 @@
+from .datasets import Dataset, REGISTRY, load
+
+__all__ = ["Dataset", "REGISTRY", "load"]

@@ -1,0 +1,140 @@
+"""Logical-axis → mesh-axis sharding resolution.
+
+Model code annotates every param dim with a logical name (models/layers.py
+SpecMaker); this module maps those names onto the production mesh:
+
+  mesh axes: ("data", "model")           — single pod, 16×16
+             ("pod", "data", "model")    — 2 pods × 16×16
+
+Rules (resolved per-tensor with divisibility checks; at most one mesh axis
+per dim, at most one dim per mesh axis):
+
+  * tensor-parallel axis "model": vocab / ff / experts / ssm_inner first,
+    then heads / kv / ssm_heads, then head_dim (fallback when the head count
+    does not divide the axis — smollm's 15 heads, command-r's 8 kv heads).
+  * FSDP axes ("pod","data"): the "embed" (d_model) dim of every weight —
+    ZeRO-3-style parameter sharding; all-gathers happen per-layer inside the
+    scan and overlap with compute (XLA latency-hiding scheduler).
+  * "layers" / small dims: replicated.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# priority 0 tried first
+MODEL_PRIORITY = {
+    "vocab": 0, "ff": 0, "experts": 0, "ssm_inner": 0,
+    "heads": 1, "kv": 1, "ssm_heads": 1,
+    "head_dim": 2,
+}
+FSDP_CANDIDATES = ("embed",)
+
+
+def fsdp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def resolve_spec(shape: Sequence[int], logical: Sequence[str],
+                 mesh: Mesh) -> P:
+    """One tensor: logical names + concrete shape → PartitionSpec."""
+    assert len(shape) == len(logical), (shape, logical)
+    out: list = [None] * len(shape)
+    model_size = mesh.shape["model"]
+    # pass 1: tensor-parallel axis
+    cands = [(MODEL_PRIORITY[l], i) for i, l in enumerate(logical)
+             if l in MODEL_PRIORITY and shape[i] % model_size == 0
+             and shape[i] > 0]
+    if cands:
+        _, i = min(cands)
+        out[i] = "model"
+    # pass 2: FSDP axes on the embed dim
+    fa = fsdp_axes(mesh)
+    if fa:
+        fs = _axis_size(mesh, fa)
+        for i, l in enumerate(logical):
+            if l in FSDP_CANDIDATES and out[i] is None and shape[i] % fs == 0:
+                out[i] = fa if len(fa) > 1 else fa[0]
+                break
+    return P(*out)
+
+
+def tree_shardings(param_tree, logical_tree, mesh: Mesh):
+    """Trees of arrays/ShapeDtypeStructs + logical tuples → NamedShardings."""
+    def one(arr, logical):
+        return NamedSharding(mesh, resolve_spec(arr.shape, logical, mesh))
+    return jax.tree.map(one, param_tree, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def data_spec(mesh: Mesh, ndim: int, batch_size: int) -> P:
+    """Batch-sharded activation/input spec: dim 0 over (pod, data) when
+    divisible, rest replicated."""
+    fa = fsdp_axes(mesh)
+    if fa and batch_size % _axis_size(mesh, fa) == 0:
+        first = fa if len(fa) > 1 else fa[0]
+    elif fa and batch_size % mesh.shape[fa[-1]] == 0:
+        first = fa[-1]
+    else:
+        first = None
+    return P(first, *([None] * (ndim - 1)))
+
+
+def decode_state_specs(cfg, state_tree, mesh: Mesh):
+    """Sharding for the decode cache: batch over data axes; KV heads over
+    "model" when divisible, else head_dim; SSM heads over "model"."""
+    model_size = mesh.shape["model"]
+    fa = fsdp_axes(mesh)
+
+    def batch_axis(b):
+        if fa and b % _axis_size(mesh, fa) == 0:
+            return fa if len(fa) > 1 else fa[0]
+        if fa and b % mesh.shape[fa[-1]] == 0:
+            return fa[-1]
+        return None
+
+    def one(path, arr):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = arr.ndim
+        if name in ("k", "v"):
+            # (U, na, B, Smax, K, hd)
+            b = batch_axis(arr.shape[2])
+            if arr.shape[4] % model_size == 0:
+                return NamedSharding(mesh, P(None, None, b, None, "model", None))
+            if arr.shape[5] % model_size == 0:
+                return NamedSharding(mesh, P(None, None, b, None, None, "model"))
+            return NamedSharding(mesh, P(None, None, b, None, None, None))
+        if name in ("k_scale", "v_scale"):
+            # (U, na, B, Smax, K) — int8-KV per-position scales
+            b = batch_axis(arr.shape[2])
+            kk = "model" if arr.shape[4] % model_size == 0 else None
+            return NamedSharding(mesh, P(None, None, b, None, kk))
+        if name == "ssm_h":
+            # (U, ns, B, H, P, N)
+            b = batch_axis(arr.shape[2])
+            h = "model" if arr.shape[3] % model_size == 0 else None
+            return NamedSharding(mesh, P(None, None, b, h, None, None))
+        if name == "conv":
+            # (U, ns, B, cw-1, d_inner)
+            b = batch_axis(arr.shape[2])
+            di = "model" if arr.shape[4] % model_size == 0 else None
+            return NamedSharding(mesh, P(None, None, b, None, di))
+        if name in ("cross_k", "cross_v"):
+            # (U, B, Sm, H, hd)
+            b = batch_axis(arr.shape[1])
+            h = "model" if arr.shape[3] % model_size == 0 else None
+            return NamedSharding(mesh, P(None, b, None, h, None))
+        if name == "index":
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(one, state_tree)

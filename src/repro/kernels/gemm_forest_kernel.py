@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: GEMM (Hummingbird-style) forest traversal — the
+beyond-paper MXU engine (DESIGN.md §2.3).
+
+Per (batch, tree) tile, entirely in VMEM:
+    S      = 1{x[feat] <= thr}            one-hot matmul feature select
+    R      = S @ A                        (Tt, Bt, N) × (Tt, N, L) MXU
+    onehot = 1{R == Bvec}                 exit-leaf equality test
+    out   += onehot @ leaf_val            (Tt, Bt, L) × (Tt, L, C) MXU
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(x_ref, feat_ref, thr_ref, a_ref, b_ref, leaf_ref, out_ref):
+    """x (Bt,d) f32 | feat (Tt,N) i32 | thr (Tt,N) f32 (padding -inf → S=0…
+    actually padding nodes need S irrelevant: A rows are zero) |
+    a (Tt,N,L) f32 | b (Tt,L) f32 (padding leaves: L+1 → never matches) |
+    leaf (Tt,L,C) f32 | out (Bt,C) f32."""
+    Bt, d = x_ref.shape
+    Tt, N = feat_ref.shape
+    L, C = leaf_ref.shape[-2:]
+
+    x = x_ref[...].astype(jnp.float32)
+    feat = feat_ref[...].reshape(Tt * N)
+    onehot_f = (jax.lax.broadcasted_iota(jnp.int32, (d, Tt * N), 0)
+                == feat[None, :]).astype(jnp.float32)
+    xsel = jnp.dot(x, onehot_f, preferred_element_type=jnp.float32)
+    S = (xsel.reshape(Bt, Tt, N) <= thr_ref[...][None]).astype(jnp.float32)
+
+    # R[t, b, l] = Σ_n S[b, t, n] A[t, n, l]
+    R = jax.lax.dot_general(
+        S, a_ref[...],
+        dimension_numbers=(((2,), (1,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32)                      # (Tt, Bt, L)
+    hit = (R == b_ref[...][:, None, :]).astype(jnp.float32)      # (Tt, Bt, L)
+    part = jax.lax.dot_general(
+        hit, leaf_ref[...].astype(jnp.float32),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)                      # (Tt, Bt, C)
+    part = part.sum(axis=0)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(pl.program_id(1) != 0)
+    def _acc():
+        out_ref[...] += part
+
+
+def gemm_forward(x, feat, thr, A, Bvec, leaf_val, *,
+                 block_b: int = 128, block_t: int = 8,
+                 interpret: bool = True):
+    B, d = x.shape
+    T, N = feat.shape
+    L, C = leaf_val.shape[-2:]
+    grid = (B // block_b, T // block_t)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_t, N), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, N), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, N, L), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((block_t, L), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, L, C), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, C), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        interpret=interpret,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "arbitrary"))
+        ) if not interpret else None,
+    )(x, feat, thr, A, Bvec, leaf_val)

@@ -1,0 +1,100 @@
+"""jit'd wrappers around the Pallas forest kernels: padding, dtype prep,
+predictor objects matching the XLA engines' interface."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.forest import Forest
+from ..core.quantize import leaf_scale, quantize_inputs
+from . import gemm_forest_kernel, quickscorer_kernel
+
+
+def _pad_to(x: np.ndarray, axis: int, mult: int, fill=0) -> np.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths, constant_values=fill)
+
+
+def _thr_pad_value(forest: Forest):
+    if np.issubdtype(forest.threshold.dtype, np.integer):
+        return np.iinfo(forest.threshold.dtype).max
+    return np.float32(np.inf)
+
+
+class _PallasPredictor:
+    def __init__(self, forest: Forest, fn, block_b: int):
+        self.forest = forest
+        self._fn = fn
+        self.block_b = block_b
+        self.leaf_scale = leaf_scale(forest)
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        Xq = quantize_inputs(self.forest, np.asarray(X)).astype(np.float32)
+        B = Xq.shape[0]
+        Xp = _pad_to(Xq, 0, self.block_b)
+        out = np.asarray(self._fn(jnp.asarray(Xp)))
+        return out[:B] / self.leaf_scale
+
+    def predict_class(self, X: np.ndarray) -> np.ndarray:
+        return self.predict(X).argmax(axis=1)
+
+
+def pallas_qs_predictor(forest: Forest, block_b: int = 128, block_t: int = 8,
+                        interpret: bool = True) -> _PallasPredictor:
+    """QuickScorer bitvector engine, Pallas backend."""
+    thr_pad = _thr_pad_value(forest)
+    feat = _pad_to(np.maximum(forest.feature, 0).astype(np.int32), 0, block_t)
+    thr = forest.threshold.astype(np.float32).copy()
+    thr[forest.feature < 0] = np.float32(thr_pad) if np.isfinite(
+        np.float32(thr_pad)) else np.float32(np.inf)
+    thr = _pad_to(thr, 0, block_t, fill=np.float32(np.inf))
+    masks = _pad_to(forest.node_masks(), 0, block_t, fill=0xFFFFFFFF)
+    init_idx = _pad_to(forest.init_leafidx(), 0, block_t)           # pad: 0
+    lv = forest.leaf_value.astype(np.float32)
+    leaf_val = _pad_to(lv, 0, block_t)                              # pad: 0
+
+    feat_j, thr_j = jnp.asarray(feat), jnp.asarray(thr)
+    masks_j, init_j = jnp.asarray(masks), jnp.asarray(init_idx)
+    leaf_j = jnp.asarray(leaf_val)
+
+    @jax.jit
+    def fn(X):
+        return quickscorer_kernel.qs_forward(
+            X, feat_j, thr_j, masks_j, init_j, leaf_j,
+            block_b=block_b, block_t=block_t, interpret=interpret)
+
+    return _PallasPredictor(forest, fn, block_b)
+
+
+def pallas_gemm_predictor(forest: Forest, block_b: int = 128, block_t: int = 8,
+                          interpret: bool = True) -> _PallasPredictor:
+    """GEMM (Hummingbird/MXU) engine, Pallas backend."""
+    from ..core.baselines import compile_gemm
+    g = compile_gemm(forest)                     # reuse A/Bvec construction
+    feat = _pad_to(np.asarray(g.feat), 0, block_t)
+    # padding nodes: A rows are zero so S value is irrelevant; use -inf so
+    # S=0 deterministically.
+    thr = np.asarray(g.thr, dtype=np.float32).copy()
+    thr[~np.asarray(g.valid)] = -np.inf
+    thr = _pad_to(thr, 0, block_t, fill=-np.inf)
+    A = _pad_to(np.asarray(g.A, dtype=np.float32), 0, block_t)
+    Bvec = _pad_to(np.asarray(g.Bvec, dtype=np.float32), 0, block_t,
+                   fill=forest.n_leaves + 1.0)
+    leaf_val = _pad_to(np.asarray(g.leaf_val, dtype=np.float32), 0, block_t)
+
+    feat_j, thr_j = jnp.asarray(feat), jnp.asarray(thr)
+    A_j, B_j, leaf_j = jnp.asarray(A), jnp.asarray(Bvec), jnp.asarray(leaf_val)
+
+    @jax.jit
+    def fn(X):
+        return gemm_forest_kernel.gemm_forward(
+            X, feat_j, thr_j, A_j, B_j, leaf_j,
+            block_b=block_b, block_t=block_t, interpret=interpret)
+
+    return _PallasPredictor(forest, fn, block_b)

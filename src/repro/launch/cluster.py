@@ -1,0 +1,63 @@
+"""Multi-host cluster bring-up helpers.
+
+On a real TPU pod each host runs the same command; JAX discovers peers via
+the TPU runtime (or explicit coordinator env for CPU/GPU clusters):
+
+    # per-host (v5e-256: 64 hosts × 4 chips)
+    python -m repro.launch.train --arch grok_1_314b --mesh production \
+        --ckpt-dir gs://bucket/run1 --hb-dir gs://bucket/run1/hb
+
+``initialize_from_env()`` is called by the drivers when REPRO_MULTIHOST=1;
+it is a thin wrapper over ``jax.distributed.initialize`` with the standard
+environment conventions, kept separate so the CPU container never touches
+distributed state.
+
+Failure/restart protocol (scripts/launch_pod.sh wraps this):
+  1. every host heartbeats (fault_tolerance.Heartbeat) each step;
+  2. the job runner (GKE/xmanager/slurm) restarts dead hosts; on restart
+     the driver resumes from the newest complete checkpoint (atomic
+     rename ⇒ never a torn read);
+  3. if the replacement capacity is smaller, ``plan_elastic_restart``
+     shrinks the DP axis to the largest pow2 ≤ survivors and raises
+     ``--accum-steps`` so the global batch (and loss trajectory) is
+     unchanged — verified bit-close in tests/test_elastic.py.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+
+def multihost_requested() -> bool:
+    return os.environ.get("REPRO_MULTIHOST", "0") == "1"
+
+
+def initialize_from_env(coordinator: Optional[str] = None,
+                        num_processes: Optional[int] = None,
+                        process_id: Optional[int] = None) -> None:
+    """jax.distributed.initialize with env fallbacks:
+    REPRO_COORDINATOR (host:port), REPRO_NUM_PROCESSES, REPRO_PROCESS_ID.
+    On TPU pods all three are discovered automatically and may be None."""
+    import jax
+    kw = {}
+    coordinator = coordinator or os.environ.get("REPRO_COORDINATOR")
+    if coordinator:
+        kw["coordinator_address"] = coordinator
+    np_ = num_processes or os.environ.get("REPRO_NUM_PROCESSES")
+    if np_:
+        kw["num_processes"] = int(np_)
+    pid = process_id if process_id is not None \
+        else os.environ.get("REPRO_PROCESS_ID")
+    if pid is not None:
+        kw["process_id"] = int(pid)
+    jax.distributed.initialize(**kw)
+
+
+def host_info() -> dict:
+    import jax
+    return {
+        "process_index": jax.process_index(),
+        "process_count": jax.process_count(),
+        "local_devices": len(jax.local_devices()),
+        "global_devices": len(jax.devices()),
+    }

@@ -1,0 +1,420 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production mesh, record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from ..distributed.optimizer import Adam, AdamConfig
+from ..distributed.sharding import (data_spec, decode_state_specs,
+                                    tree_shardings)
+from ..models.config import ArchConfig, ShapeConfig
+from ..models.model import Model
+from .hlo_analysis import analyze
+from .mesh import make_production_mesh
+from .specs import input_specs
+
+# TPU v5e constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (per chip, one direction)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def _accum_steps(cfg: ArchConfig, shape: ShapeConfig, mesh) -> int:
+    """Microbatches per step: keep per-chip live activations inside HBM.
+    Rough model: stored residual carries + remat working set ≈
+    B/chip/accum × S × d_model × 2B × (n_layers + C). Target ≤ ~6 GB,
+    leaving room for weight shards + grads + optimizer state."""
+    import numpy as np
+    n_data = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                          if a in ("pod", "data")]))
+    n_model = mesh.shape.get("model", 1)
+    b_chip = max(shape.global_batch // n_data, 1)
+    seq_shard = shape.seq_len // n_model if shape.seq_len % n_model == 0 \
+        else shape.seq_len
+    act_bytes = (b_chip * seq_shard * cfg.d_model * 2
+                 * (cfg.n_layers + 24))
+    accum = 1
+    while act_bytes / accum > 6e9 and accum < b_chip:
+        accum *= 2
+    return accum
+
+
+def _analytic_memory(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                     accum: int, opt_state_dtype: str) -> dict:
+    """Per-chip HBM residency model. The CPU backend's memory_analysis
+    lacks TPU's while-loop double buffering (it keeps every layer's
+    gathered weights live), so the fit criterion uses this analytic model;
+    the measured number is recorded as a pessimistic bound.
+
+    Terms (bytes/chip):
+      params      — f32 master (train) / bf16 (serve), fully sharded
+      optimizer   — Adam m+v (f32: 8 B/param; int8: ~2.06 B/param)
+      grads       — f32, sharded like params (train only)
+      act_carries — stored residual stream per layer (bf16, seq-sharded)
+      working     — 2× double-buffered per-layer gathered weights (bf16)
+                    + flash attention live window
+      kv_cache    — decode cells: bf16 cache as sharded by state specs
+    """
+    import numpy as np
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    n_model = mesh.shape.get("model", 1)
+    n_data = n_chips // n_model
+    P = cfg.param_count()
+    train = shape.kind == "train"
+    b_chip = max(shape.global_batch // n_data, 1)
+    seq_shard = (shape.seq_len // n_model
+                 if shape.seq_len % n_model == 0 else shape.seq_len)
+
+    out = {}
+    out["params"] = P * (4 if train else 2) / n_chips
+    out["optimizer"] = (P * (2.06 if opt_state_dtype == "int8" else 8)
+                        / n_chips) if train else 0.0
+    out["grads"] = P * 4 / n_chips if train else 0.0
+    if shape.kind == "decode":
+        na = sum(1 for l in range(cfg.n_layers) if cfg.is_attn_layer(l))
+        kv = (2 * na * shape.global_batch * shape.seq_len
+              * cfg.n_kv * cfg.head_dim * 2)
+        ssm_layers = cfg.n_layers - na
+        ssm = (ssm_layers * shape.global_batch
+               * cfg.d_inner * max(cfg.ssm_state, 1) * 4) if ssm_layers else 0
+        # cache sharding mirrors distributed.sharding.decode_state_specs:
+        # batch over data axes; kv-heads over "model" when divisible, else
+        # head_dim (both divide for every assigned arch)
+        b_div = n_data if shape.global_batch % n_data == 0 else 1
+        m_div = n_model if (cfg.n_kv % n_model == 0
+                            or cfg.head_dim % n_model == 0) else 1
+        out["kv_cache"] = kv / (b_div * m_div) + ssm / b_div
+        out["act_carries"] = 0.0
+    else:
+        mb = max(b_chip // accum, 1)
+        out["kv_cache"] = 0.0
+        out["act_carries"] = mb * seq_shard * cfg.d_model * 2 * cfg.n_layers
+        qc = min(1024, shape.seq_len)
+        flash = 3 * b_chip / max(accum, 1) * max(cfg.n_heads // n_model, 1) \
+            * qc * qc * 4
+        out["working"] = 2 * (P / max(cfg.n_layers, 1) / n_model) * 2 + flash
+    out.setdefault("working", 2 * (P / max(cfg.n_layers, 1) / n_model) * 2)
+    out["total"] = float(sum(out.values()))
+    out["fits_16gb"] = bool(out["total"] < 16e9)
+    return {k: (round(v, 1) if isinstance(v, float) else v)
+            for k, v in out.items()}
+
+
+def _model_for(cfg: ArchConfig, shape: ShapeConfig) -> Model:
+    q_chunk = 1024 if shape.seq_len >= 1024 else shape.seq_len
+    return Model(cfg, q_chunk=q_chunk, ssd_chunk=128,
+                 loss_chunk=min(1024, shape.seq_len), remat=True)
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
+               opt_state_dtype: str = "auto", grad_dtype: str = "f32",
+               kv_quant: bool = False):
+    """Returns (jitted fn, example args tree of ShapeDtypeStruct)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..models.act_sharding import policy_from_mesh
+    policy_from_mesh(mesh)
+
+    model = _model_for(cfg, shape)
+    logical = model.param_logical_specs()
+    rng = jax.random.PRNGKey(0)
+
+    param_dtype = jnp.float32 if shape.kind == "train" else jnp.bfloat16
+    p_shapes = jax.eval_shape(lambda k: model.init_params(k, param_dtype), rng)
+    p_shards = tree_shardings(p_shapes, logical, mesh)
+
+    ins = input_specs(cfg, shape)
+    tok_shard = NamedSharding(
+        mesh, data_spec(mesh, 2, shape.global_batch))
+    enc_shard = None
+    if "enc_embeds" in ins:
+        enc_shard = NamedSharding(
+            mesh, data_spec(mesh, 3, shape.global_batch))
+
+    if shape.kind == "train":
+        if opt_state_dtype == "auto":
+            opt_state_dtype = "int8" if cfg.param_count() > 40e9 else "f32"
+        opt = Adam(AdamConfig(state_dtype=opt_state_dtype))
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        o_logical = opt.state_logical_specs(logical)
+        o_shards = tree_shardings(o_shapes, o_logical, mesh)
+
+        # gradient accumulation (§Perf iter 6): per-chip activation temps
+        # scale with the microbatch, so large models microbatch until the
+        # remat window fits HBM. Heuristic: ~1 microbatch row per chip for
+        # ≥100B params. Also the mechanism behind elastic DP-shrink
+        # restarts (fault_tolerance.plan_elastic_restart).
+        accum = _accum_steps(cfg, shape, mesh)
+
+        def cast_grads(grads):
+            if grad_dtype == "f32":
+                return grads
+            return jax.tree.map(
+                lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+
+        B = shape.global_batch
+
+        def accum_grads(params, tokens, enc=None):
+            if accum == 1:
+                args = (tokens,) if enc is None else (tokens, enc)
+                return jax.value_and_grad(model.loss_fn)(params, *args)
+            S = tokens.shape[1]
+            tb = tokens.reshape(accum, B // accum, S)
+            eb = None
+            if enc is not None:
+                eb = enc.reshape(accum, B // accum, *enc.shape[1:])
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def micro(carry, inp):
+                closs, cg = carry
+                if enc is None:
+                    l, g = jax.value_and_grad(model.loss_fn)(params, inp)
+                else:
+                    l, g = jax.value_and_grad(model.loss_fn)(params, *inp)
+                cg = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                  cg, g)
+                return (closs + l, cg), None
+
+            xs = tb if enc is None else (tb, eb)
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), g0), xs)
+            inv = 1.0 / accum
+            return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+        if "enc_embeds" in ins:
+            def step(params, opt_state, tokens, enc):
+                loss, grads = accum_grads(params, tokens, enc)
+                p2, s2 = opt.update(cast_grads(grads), opt_state, params)
+                return p2, s2, loss
+            args = (p_shapes, o_shapes, ins["tokens"], ins["enc_embeds"])
+            in_sh = (p_shards, o_shards, tok_shard, enc_shard)
+        else:
+            def step(params, opt_state, tokens):
+                loss, grads = accum_grads(params, tokens)
+                p2, s2 = opt.update(cast_grads(grads), opt_state, params)
+                return p2, s2, loss
+            args = (p_shapes, o_shapes, ins["tokens"])
+            in_sh = (p_shards, o_shards, tok_shard)
+        fn = jax.jit(step, in_shardings=in_sh,
+                     out_shardings=(p_shards, o_shards, NamedSharding(mesh, P())),
+                     donate_argnums=(0, 1))
+        return fn, args, {"opt_state_dtype": opt_state_dtype,
+                          "accum_steps": accum}
+
+    if shape.kind == "prefill":
+        if "enc_embeds" in ins:
+            def step(params, tokens, enc):
+                return model.prefill(params, tokens, enc)
+            args = (p_shapes, ins["tokens"], ins["enc_embeds"])
+            in_sh = (p_shards, tok_shard, enc_shard)
+        else:
+            def step(params, tokens):
+                return model.prefill(params, tokens)
+            args = (p_shapes, ins["tokens"])
+            in_sh = (p_shards, tok_shard)
+        out_sh = NamedSharding(mesh, data_spec(mesh, 2, shape.global_batch))
+        fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        return fn, args, {}
+
+    # decode: one new token against a seq_len-deep cache
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        enc = jax.ShapeDtypeStruct(
+            (B, min(S // 4, 8192), cfg.d_model), jnp.float32)
+        s_shapes = jax.eval_shape(
+            lambda p, e: model.init_decode_state(B, S, params=p,
+                                                 enc_embeds=e,
+                                                 kv_quant=kv_quant),
+            p_shapes, enc)
+    else:
+        s_shapes = jax.eval_shape(
+            lambda: model.init_decode_state(B, S, kv_quant=kv_quant))
+    s_shards = decode_state_specs(cfg, s_shapes, mesh)
+
+    def step(params, state, tokens):
+        return model.decode_step(params, state, tokens)
+
+    args = (p_shapes, s_shapes, ins["tokens"])
+    from jax.sharding import NamedSharding as NS
+    logits_sh = NS(mesh, data_spec(mesh, 2, B))
+    fn = jax.jit(step, in_shardings=(p_shards, s_shards, tok_shard),
+                 out_shardings=(logits_sh, s_shards),
+                 donate_argnums=(1,))
+    return fn, args, {}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             save: bool = True, kv_quant: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    rec: dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "timestamp": time.time(),
+    }
+    if kv_quant:
+        rec["kv_quant"] = True
+        rec["mesh"] = mesh_kind + "__kvq8"   # separate artifact name
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        if save:
+            _save(rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    try:
+        t0 = time.time()
+        with mesh:
+            fn, args, extra = build_cell(cfg, shape, mesh,
+                                         kv_quant=kv_quant)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # trip-count-aware accounting (XLA's cost_analysis counts while
+        # bodies once — see hlo_analysis module docstring)
+        hc = analyze(hlo)
+        coll = hc.collectives
+        flops = hc.flops
+        bytes_hbm = hc.bytes_hbm
+        rec.update({
+            "status": "ok",
+            "n_chips": n_chips,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            },
+            "analytic_memory": _analytic_memory(
+                cfg, shape, mesh, extra.get("accum_steps", 1),
+                extra.get("opt_state_dtype", "f32")),
+            "hlo_flops": flops,
+            "hlo_bytes": bytes_hbm,
+            "xla_cost_analysis": {          # reference only: while bodies ×1
+                k: float(v) for k, v in cost.items()
+                if k in ("flops", "bytes accessed", "transcendentals")},
+            "collectives": {
+                "total_bytes": coll.total_bytes,
+                "link_bytes": coll.link_bytes,
+                "per_op": dict(coll.per_op),
+                "counts": dict(coll.counts),
+            },
+            **extra,
+        })
+        # roofline terms (per chip — cost analysis is for the partitioned
+        # per-device program)
+        rec["roofline"] = {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_hbm / HBM_BW,
+            "collective_s": coll.link_bytes / ICI_BW,
+        }
+        dom = max(rec["roofline"], key=rec["roofline"].get)
+        rec["roofline"]["dominant"] = dom
+        model_flops = _model_flops(cfg, shape)
+        rec["model_flops_global"] = model_flops
+        rec["model_flops_per_chip"] = model_flops / n_chips
+        if flops > 0:
+            rec["useful_flop_ratio"] = (model_flops / n_chips) / flops
+    except Exception as e:  # noqa: BLE001 — record the failure, don't crash the sweep
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    if save:
+        _save(rec)
+    return rec
+
+
+def _model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS: 6·N_active·D for train (fwd+bwd), 2·N_active·D for
+    inference. D = processed tokens."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * toks
+    return 2.0 * n_active * shape.global_batch   # decode: 1 token / seq
+
+
+def _save(rec: dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    fn = os.path.join(
+        RESULTS_DIR, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache for decode cells (paper §5 → "
+                         "decode roofline)")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                out = os.path.join(
+                    RESULTS_DIR, f"{arch}__{shape}__{mk}.json")
+                if args.skip_existing and os.path.exists(out):
+                    print(f"[skip existing] {arch} {shape} {mk}")
+                    continue
+                t0 = time.time()
+                rec = run_cell(arch, shape, mk, kv_quant=args.kv_quant)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f"dom={r['dominant']} "
+                             f"c={r['compute_s']*1e3:.1f}ms "
+                             f"m={r['memory_s']*1e3:.1f}ms "
+                             f"x={r['collective_s']*1e3:.1f}ms")
+                elif status == "error":
+                    extra = rec["error"][:120]
+                print(f"[{status}] {arch} {shape} {mk} "
+                      f"({time.time()-t0:.0f}s) {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,341 @@
+"""Trip-count-aware roofline accounting over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE (trip counts
+are invisible to it), which undercounts scanned-layer models by the scan
+length. This module re-derives the three roofline numerators from the HLO
+module itself:
+
+  * FLOPs        — every ``dot`` (2 × |result| × contraction), scaled by the
+                   product of enclosing loop trip counts. Elementwise and
+                   transcendental FLOPs are ignored (≪ dot FLOPs for these
+                   models; documented in EXPERIMENTS.md §Roofline).
+  * HBM bytes    — Σ over *executed* top-level instructions of
+                   (operand bytes + result bytes) × trip multiplier, i.e.
+                   XLA's own per-instruction "bytes accessed" convention
+                   applied at fusion boundaries. Fusion-internal traffic is
+                   excluded (it lives in registers/VMEM); cache reuse across
+                   instructions is not modelled (upper bound).
+  * collectives  — result bytes of every all-gather / all-reduce /
+                   reduce-scatter / all-to-all / collective-permute × trip
+                   multiplier, with ring-algorithm link weights.
+
+Computation multipliers: ENTRY = 1; a ``while`` body/condition inherits
+parent × trip (trip from ``backend_config known_trip_count``, else the
+largest constant in the condition — XLA's counted-loop pattern, else 1);
+``fusion``/``call``/``to_apply`` children inherit parent × 1. Multipliers
+accumulate over call sites (fixed-point propagation over the computation
+DAG).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_LINK_WEIGHT = {"all-gather": 1.0, "reduce-scatter": 1.0, "all-reduce": 2.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+# `%name (params) -> result {` — params may nest parens (tuple types)
+_COMP_RE = re.compile(
+    r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+# one instruction: `%name = TYPE opcode(...)`, TYPE = `dtype[dims]{...}` or
+# a tuple `(T1, T2, ...)`
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)\s*,\s*condition=%?([\w\.\-]+)\s*,\s*body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+_SKIP_BYTES_OPS = ("parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "iota")
+
+
+def _shape_list(type_str: str):
+    """'f32[8,16]{1,0}' or '(f32[8], s32[])' → [(dtype, [dims...]), ...]."""
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        shape = [int(d) for d in dims.split(",") if d] if dims else []
+        out.append((dtype, shape))
+    return out
+
+
+def _nbytes(shapes) -> float:
+    total = 0.0
+    for dtype, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    type_str: str       # result type text (before the opcode)
+    operands: list      # operand instruction names
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    defs: dict = field(default_factory=dict)    # name -> result shapes
+
+
+@dataclass
+class CollectiveStats:
+    per_op: dict = field(default_factory=lambda: defaultdict(float))
+    total_bytes: float = 0.0
+    link_bytes: float = 0.0
+    counts: dict = field(default_factory=lambda: defaultdict(int))
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_hbm: float = 0.0
+    collectives: CollectiveStats = field(default_factory=CollectiveStats)
+    mult: dict = field(default_factory=dict)    # computation → multiplier
+
+
+# --------------------------------------------------------------------------- #
+# parsing
+# --------------------------------------------------------------------------- #
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_OPCODE_RE = re.compile(r"(?<=\s)([a-zA-Z][\w\-]*)\(")
+
+
+def _parse_opcode(after_eq: str) -> tuple[str, str, str]:
+    """'f32[8]{0} dot(%a, %b), attrs' → ('dot', 'f32[8]{0} ', rest).
+
+    Robust to tuple result types with `/*index=N*/` comments and layout
+    tiling annotations (`{1,0:T(8,128)}` — the `T(` is not preceded by
+    whitespace, so the opcode search skips it)."""
+    s = _COMMENT_RE.sub("", after_eq)
+    m = _OPCODE_RE.search(s)
+    if not m:
+        return "", after_eq, ""
+    return m.group(1), s[:m.start()], s[m.start():]
+
+
+def parse_computations(hlo: str) -> tuple[dict, str]:
+    comps: dict[str, Computation] = {}
+    entry = ""
+    cur = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+        else:
+            if line.strip() == "}":
+                cur = None
+                continue
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            name, rest = im.group(1), im.group(2)
+            opcode, type_str, tail = _parse_opcode(rest)
+            if not opcode:
+                continue
+            # operands: %names inside the balanced paren group after opcode
+            p0 = len(opcode)
+            depth, j = 0, p0
+            while j < len(tail):
+                if tail[j] == "(":
+                    depth += 1
+                elif tail[j] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                j += 1
+            operands = _OPERANDS_RE.findall(tail[p0:j + 1])
+            ins = Instr(name, opcode, type_str, operands, line)
+            cur.instrs.append(ins)
+            cur.defs[name] = _shape_list(type_str)
+    return comps, entry
+
+
+def _multipliers(comps: dict, entry: str) -> dict:
+    """Fixed-point propagation of execution counts over the computation
+    DAG. while bodies/conds get × trip; fusion/call/reduce children × 1."""
+    edges: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    for cname, comp in comps.items():
+        for ins in comp.instrs:
+            wm = _WHILE_RE.search(ins.line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                tm = _TRIP_RE.search(ins.line)
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    trip = 1
+                    if cond in comps:
+                        consts = [int(c) for c in _CONST_RE.findall(
+                            "\n".join(i.line for i in comps[cond].instrs))]
+                        if consts:
+                            trip = max(consts)
+                edges[cname].append((body, float(trip)))
+                edges[cname].append((cond, float(trip) + 1.0))
+                continue
+            for child in _CALLS_RE.findall(ins.line):
+                if child in comps:
+                    edges[cname].append((child, 1.0))
+
+    # fixed-point recompute over the (acyclic) computation graph: each
+    # sweep recomputes every node's multiplier from the previous sweep's
+    # parents, so shared children accumulate over all call sites without
+    # order sensitivity. Converges in ≤ depth sweeps.
+    mult: dict[str, float] = {entry: 1.0}
+    for _ in range(len(comps) + 1):
+        nxt: dict[str, float] = defaultdict(float)
+        nxt[entry] = 1.0
+        for parent, kids in edges.items():
+            for child, w in kids:
+                nxt[child] += mult.get(parent, 0.0) * w
+        nxt = dict(nxt)
+        if nxt == mult:
+            break
+        mult = nxt
+    return mult
+
+
+# --------------------------------------------------------------------------- #
+# cost model
+# --------------------------------------------------------------------------- #
+def analyze(hlo: str) -> HloCost:
+    comps, entry = parse_computations(hlo)
+    mult = _multipliers(comps, entry)
+
+    # executed computations for byte accounting: entry + while bodies/conds
+    # (reached via while edges); fusion internals are excluded.
+    executed = {entry}
+    for cname, comp in comps.items():
+        for ins in comp.instrs:
+            wm = _WHILE_RE.search(ins.line)
+            if wm:
+                executed.add(wm.group(2))
+                executed.add(wm.group(1))
+
+    cost = HloCost(mult=mult)
+    coll = cost.collectives
+    for cname, comp in comps.items():
+        m = mult.get(cname, 1.0)
+        in_exec = cname in executed
+        for ins in comp.instrs:
+            op = ins.opcode
+            base = op.replace("-start", "")
+            # ---- FLOPs: dots anywhere ---------------------------------- #
+            if op == "dot":
+                res = comp.defs.get(ins.name, [])
+                n_res = 1
+                for _, dims in res:
+                    for d in dims:
+                        n_res *= d
+                cdims = _DOT_DIMS_RE.search(ins.line)
+                csize = 1
+                if cdims and ins.operands:
+                    lhs = comp.defs.get(ins.operands[0])
+                    if lhs:
+                        _, ldims = lhs[0]
+                        for ci in (int(x) for x in
+                                   cdims.group(1).split(",") if x):
+                            if ci < len(ldims):
+                                csize *= ldims[ci]
+                cost.flops += 2.0 * n_res * csize * m
+            # ---- collectives ------------------------------------------- #
+            if base in COLLECTIVES and not op.endswith("-done"):
+                shapes = _shape_list(ins.type_str)
+                if op.endswith("-start") and len(shapes) > 1:
+                    # async tuple (operand alias, result): use the result
+                    shapes = shapes[len(shapes) // 2:]
+                nbytes = _nbytes(shapes) * m
+                coll.per_op[base] += nbytes
+                coll.total_bytes += nbytes
+                coll.link_bytes += nbytes * _LINK_WEIGHT[base]
+                coll.counts[base] += 1
+            # ---- HBM bytes (fusion-boundary accounting) ---------------- #
+            if in_exec and op not in _SKIP_BYTES_OPS \
+                    and not op.endswith("-done"):
+                cost.bytes_hbm += _instr_bytes(ins, comp, comps) * m
+    return cost
+
+
+_SLICE_OPS = ("dynamic-slice", "slice", "gather")
+
+
+def _instr_bytes(ins: Instr, comp: Computation, comps: dict) -> float:
+    """Operand + result bytes of one top-level instruction, with
+    slice-aware accounting: a (dynamic-)slice/gather reads only its result
+    extent, and a dynamic-update-slice writes only the update region —
+    charging the full operand would make chunked scans look quadratic in
+    sequence length. Fusion parameters consumed exclusively by slice-type
+    ops inside the fused computation are charged at the slice size too."""
+    op = ins.opcode
+    res = _nbytes(comp.defs.get(ins.name, []))
+    if op in _SLICE_OPS:
+        return 2.0 * res                       # read extent + write result
+    if op == "dynamic-update-slice":
+        upd = (_nbytes(comp.defs.get(ins.operands[1], []))
+               if len(ins.operands) > 1 else res)
+        return 2.0 * upd
+    total = res
+    fused = None
+    if op == "fusion":
+        import re as _re
+        cm = _re.search(r"calls=%?([\w\.\-]+)", ins.line)
+        if cm and cm.group(1) in comps:
+            fused = comps[cm.group(1)]
+    for i, oname in enumerate(ins.operands):
+        ob = _nbytes(comp.defs.get(oname, []))
+        if fused is not None and ob > 0:
+            sliced = _fusion_param_slice_bytes(fused, i)
+            if sliced is not None:
+                ob = min(ob, sliced)
+        total += ob
+    return total
+
+
+def _fusion_param_slice_bytes(fused: Computation, idx: int):
+    """If fusion parameter ``idx`` is consumed only by slice-type ops,
+    return the summed slice-result bytes (else None)."""
+    pname = None
+    for i2 in fused.instrs:
+        if i2.opcode == "parameter" and f"parameter({idx})" in i2.line:
+            pname = i2.name
+            break
+    if pname is None:
+        return None
+    consumed = [i2 for i2 in fused.instrs if pname in i2.operands]
+    if not consumed:
+        return None
+    if all(i2.opcode in _SLICE_OPS for i2 in consumed):
+        return sum(_nbytes(fused.defs.get(i2.name, [])) for i2 in consumed)
+    return None
+
+
+def collective_bytes(hlo: str) -> CollectiveStats:
+    """Back-compat entry point (dryrun.py, tests)."""
+    return analyze(hlo).collectives

@@ -1,0 +1,119 @@
+"""Serving driver: tree-ensemble scoring or LM generation.
+
+    # forest serving (the paper's workload)
+    PYTHONPATH=src python -m repro.launch.serve --mode forest \
+        --engine rapidscorer --quantize --n-requests 2000
+
+    # LM generation (reduced config on CPU)
+    PYTHONPATH=src python -m repro.launch.serve --mode lm \
+        --arch smollm_360m --reduced --n-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import core
+from ..configs import get_config
+from ..data import datasets
+from ..inference.server import ForestServer, LMServer
+from ..models.model import Model
+from ..trees.random_forest import RandomForest, RandomForestConfig
+
+
+def serve_forest(args) -> dict:
+    ds = datasets.load(args.dataset)
+    rf = RandomForest(RandomForestConfig(
+        n_trees=args.n_trees, max_leaves=args.n_leaves,
+        seed=args.seed)).fit(ds.X_train, ds.y_train)
+    forest = core.from_random_forest(rf)
+    if args.quantize:
+        forest = core.quantize_forest(forest, ds.X_train)
+    pred = core.compile_forest(forest, engine=args.engine,
+                               backend=args.backend)
+
+    server = ForestServer(pred, max_batch=args.max_batch,
+                          max_wait_ms=args.max_wait_ms)
+    rng = np.random.default_rng(args.seed)
+    rows = rng.integers(0, ds.X_test.shape[0], size=args.n_requests)
+
+    # Poisson arrivals; virtual clock so results are deterministic
+    inter = rng.exponential(1.0 / args.rate, size=args.n_requests)
+    arrivals = np.cumsum(inter)
+    t_start = time.time()
+    done = 0
+    correct = 0
+    for i, (row, at) in enumerate(zip(rows, arrivals)):
+        req = server.submit(ds.X_test[row], arrival_s=t_start + at)
+        req.label = ds.y_test[row]
+        for r in server.poll(now_s=t_start + at):
+            done += 1
+            if int(np.argmax(r.result)) == int(r.label):
+                correct += 1
+    for r in server.flush():
+        done += 1
+        if int(np.argmax(r.result)) == int(r.label):
+            correct += 1
+    out = server.stats.summary()
+    out.update({"engine": args.engine, "backend": args.backend,
+                "quantized": bool(args.quantize),
+                "accuracy": correct / max(done, 1),
+                "wall_s": round(time.time() - t_start, 2)})
+    return out
+
+
+def serve_lm(args) -> dict:
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg, q_chunk=64, ssd_chunk=32, loss_chunk=64, remat=False)
+    params = model.init_params(jax.random.PRNGKey(args.seed), jnp.float32)
+    B, S = args.batch, args.prompt_len
+    server = LMServer(model, params, batch=B, max_len=S + args.n_new + 1)
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab, size=(B, S)).astype(np.int32)
+    t0 = time.time()
+    out = server.generate(prompts, args.n_new)
+    dt = time.time() - t0
+    return {"arch": cfg.name, "batch": B, "prompt_len": S,
+            "n_new": args.n_new, "out_shape": list(out.shape),
+            "tokens_per_s": round(B * args.n_new / dt, 2),
+            "wall_s": round(dt, 2)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="forest", choices=["forest", "lm"])
+    # forest args
+    ap.add_argument("--dataset", default="magic")
+    ap.add_argument("--engine", default="bitvector",
+                    choices=list(core.ENGINES))
+    ap.add_argument("--backend", default="jax", choices=["jax", "pallas"])
+    ap.add_argument("--quantize", action="store_true")
+    ap.add_argument("--n-trees", type=int, default=128)
+    ap.add_argument("--n-leaves", type=int, default=32)
+    ap.add_argument("--n-requests", type=int, default=1000)
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="arrival rate (req/s, virtual clock)")
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    # lm args
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--n-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out = serve_forest(args) if args.mode == "forest" else serve_lm(args)
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""``input_specs`` — ShapeDtypeStruct stand-ins for every model input of
+every (arch × shape) cell. No device allocation; weak-type-correct;
+shardable. The modality frontends of [audio]/[vlm] archs are stubs: the
+encoder consumes precomputed frame embeddings (DESIGN.md §4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig, ShapeConfig
+
+
+def enc_len(cfg: ArchConfig, seq_len: int) -> int:
+    """Stub audio frontend: ~4× downsampled frames, capped."""
+    return min(max(seq_len // 4, 16), 8192)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Inputs for the *step function* of the cell:
+
+    train   : {tokens (B, S) i32 [, enc_embeds (B, Se, D) f32]}
+    prefill : same as train
+    decode  : {tokens (B, 1) i32}  (the KV/SSM cache is threaded state, see
+              launch.dryrun.build_cell)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    specs: dict = {}
+    if shape.kind == "decode":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.family == "encdec" and shape.kind != "decode":
+        specs["enc_embeds"] = jax.ShapeDtypeStruct(
+            (B, enc_len(cfg, S), cfg.d_model), jnp.float32)
+    return specs

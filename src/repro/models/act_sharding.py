@@ -1,0 +1,126 @@
+"""Activation-sharding constraints (MaxText-style).
+
+XLA's SPMD sharding propagation is weak through ``while`` loops: scan
+carries (layer stack, flash-attention m/l/acc state, SSD chunk state) have
+no user annotation, and the partitioner frequently resolves them to
+REPLICATED — silently un-sharding the batch dimension of every activation
+and inflating per-chip memory/compute by the DP degree (observed: smollm
+train_4k at 788 GB temp/device before constraints; §Perf iteration 1).
+
+``constrain_batch(x, dim)`` pins the batch dimension of an activation to
+the data axes of the ambient mesh. The policy is process-global and set by
+the launcher (dryrun/train/serve); the default (None) makes every
+constraint a no-op so CPU unit tests and single-device runs are untouched.
+
+Constraints are applied at loop-carry boundaries — the places propagation
+actually loses information — not on every intermediate (XLA propagates
+fine within straight-line blocks).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_POLICY: dict = {"batch_axes": None, "axis_sizes": {}}
+
+
+def set_policy(batch_axes: Optional[Sequence[str]],
+               axis_sizes: Optional[dict] = None) -> None:
+    """batch_axes: mesh axes the batch dim is sharded over (e.g. ("data",)
+    or ("pod", "data")); None disables all constraints.
+    axis_sizes: mesh axis→size, used for divisibility checks."""
+    _POLICY["batch_axes"] = tuple(batch_axes) if batch_axes else None
+    _POLICY["axis_sizes"] = dict(axis_sizes or {})
+
+
+def policy_from_mesh(mesh) -> None:
+    import os
+    if os.environ.get("REPRO_NO_ACT_SHARDING") == "1":
+        # ablation hook: reproduce the §Perf iteration-1/2 baselines
+        # (scripts/ablate_sharding.py)
+        set_policy(None)
+        return
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    set_policy(axes or None, {a: mesh.shape[a] for a in mesh.axis_names})
+
+
+def clear_policy() -> None:
+    set_policy(None)
+
+
+@contextmanager
+def policy(batch_axes, axis_sizes=None):
+    old = dict(_POLICY)
+    set_policy(batch_axes, axis_sizes)
+    try:
+        yield
+    finally:
+        _POLICY.update(old)
+
+
+def _batch_axes_for(n: int):
+    """Largest prefix/suffix of the configured axes that divides n."""
+    axes = _POLICY["batch_axes"]
+    if not axes:
+        return None
+    sizes = _POLICY["axis_sizes"]
+    total = 1
+    for a in axes:
+        total *= sizes.get(a, 1)
+    if total > 1 and n % total == 0:
+        return axes
+    # fall back to the innermost axis alone (e.g. global_batch 32 on a
+    # 2×16 pod×data factorisation)
+    last = axes[-1]
+    if sizes.get(last, 1) > 1 and n % sizes[last] == 0:
+        return (last,)
+    return None
+
+
+def constrain_batch(x: jax.Array, dim: int = 0) -> jax.Array:
+    """Pin x's ``dim`` to the data axes; all other dims unconstrained
+    (propagation fills them in). No-op when no policy or not divisible."""
+    axes = _batch_axes_for(x.shape[dim])
+    if axes is None:
+        return x
+    spec = [None] * x.ndim
+    spec[dim] = axes if len(axes) > 1 else axes[0]
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def model_axis_size() -> int:
+    if _POLICY["batch_axes"] is None:
+        return 1
+    return _POLICY["axis_sizes"].get("model", 1)
+
+
+def constrain(x: jax.Array, spec_map: dict) -> jax.Array:
+    """General constraint: {dim: "model"} pins dims to the model axis,
+    {dim: "batch"} to the data axes. Dims that don't divide are skipped."""
+    if _POLICY["batch_axes"] is None:
+        return x
+    sizes = _POLICY["axis_sizes"]
+    spec = [None] * x.ndim
+    any_set = False
+    for dim, kind in spec_map.items():
+        if kind == "batch":
+            axes = _batch_axes_for(x.shape[dim])
+            if axes is not None:
+                spec[dim] = axes if len(axes) > 1 else axes[0]
+                any_set = True
+        elif kind == "model":
+            ms = sizes.get("model", 1)
+            if ms > 1 and x.shape[dim] % ms == 0:
+                spec[dim] = "model"
+                any_set = True
+    if not any_set:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_tree_batch(tree, dim: int = 0):
+    return jax.tree.map(lambda a: constrain_batch(a, dim) if a.ndim > dim
+                        else a, tree)

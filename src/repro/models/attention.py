@@ -1,0 +1,291 @@
+"""GQA attention: chunked-flash training path + KV-cache decode path."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .act_sharding import constrain, constrain_batch, model_axis_size
+from .config import ArchConfig
+from .layers import apply_rope
+
+NEG_INF = -1e30
+
+
+def make_attn_params(mk, cfg: ArchConfig, cross: bool = False,
+                     extra_axes: tuple = ()) -> dict:
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    if cross:
+        K = cfg.n_heads  # cross-attention: full MHA
+    ea = tuple(extra_axes)
+    pre = ("layers",) * len(ea)
+    return {
+        "wq": mk(ea + (D, H, hd), pre + ("embed", "heads", "head_dim")),
+        "wk": mk(ea + (D, K, hd), pre + ("embed", "kv", "head_dim")),
+        "wv": mk(ea + (D, K, hd), pre + ("embed", "kv", "head_dim")),
+        "wo": mk(ea + (H, hd, D), pre + ("heads", "head_dim", "embed")),
+    }
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, S, K, hd) → (B, S, K*n_rep, hd)."""
+    if n_rep == 1:
+        return k
+    b, s, kh, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, n_rep, hd)) \
+        .reshape(b, s, kh * n_rep, hd)
+
+
+def _attn_shard_mode(n_heads: int) -> str:
+    """How attention compute splits over the "model" axis (§Perf iter 2):
+      "heads" — classic Megatron head parallelism (H % model == 0);
+      "seq"   — sequence-parallel q (context-parallel-lite) when the head
+                count doesn't divide (smollm 15H, starcoder2 24H on 16):
+                q/output shard the q-sequence; K/V are fully replicated
+                per device (cheap under GQA — kv streams are small).
+    """
+    ms = model_axis_size()
+    if ms == 1:
+        return "none"
+    return "heads" if n_heads % ms == 0 else "seq"
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, q_chunk: int = 1024,
+                    k_chunk: int = 1024,
+                    q_offset: int = 0,
+                    shard_mode: str = "none",
+                    n_rep: int = 1) -> jnp.ndarray:
+    """Memory-bounded softmax attention (pure-JAX flash): scan over KV chunks
+    with running (max, sum, acc). q (B,Sq,H,hd), k/v (B,Sk,K,hd) with
+    H = K·n_rep (GQA kept UN-repeated in the streams — §Perf iter 4: the
+    repeated K/V would be streamed/all-gathered at H heads; the repeat
+    happens per chunk inside the loop, post-sharding, so each device only
+    expands its own head slice).
+
+    Streams stay in the input dtype (bf16); scores/accumulators are f32
+    via ``preferred_element_type`` — MXU semantics, half the stream bytes.
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill: 0)."""
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    assert K * n_rep == H, (K, n_rep, H)
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+    assert Sq % q_chunk == 0 and Sk % k_chunk == 0
+
+    qc = q.reshape(B, nq, q_chunk, H, hd)
+    kc = k.reshape(B, nk, k_chunk, K, hd)
+    vc = v.reshape(B, nk, k_chunk, K, hd)
+
+    q_pos = (q_offset + jnp.arange(Sq)).reshape(nq, q_chunk)
+    k_pos = jnp.arange(Sk).reshape(nk, k_chunk)
+
+    # sharding specs for the flash loop state and chunk streams. Dims:
+    # carry m/l (B, H, qc); acc (B, H, qc, hd); q chunks (nq, B, qc, H, hd);
+    # kv streams (nk, B, kc, K, hd); expanded kv chunk (B, kc, H, hd).
+    if shard_mode == "heads":
+        c_ml = {0: "batch", 1: "model"}
+        c_q = {1: "batch", 3: "model"}
+        c_kv = {1: "batch", 3: "model"}          # no-op unless K % ms == 0
+        c_exp = {0: "batch", 2: "model"}
+    elif shard_mode == "seq":
+        c_ml = {0: "batch", 2: "model"}          # shard the q positions
+        c_q = {1: "batch", 2: "model"}
+        c_kv = {1: "batch"}                      # K/V replicated on model
+        c_exp = {0: "batch"}
+    else:
+        c_ml = {0: "batch"}
+        c_q = {1: "batch"}
+        c_kv = {1: "batch"}
+        c_exp = {0: "batch"}
+
+    def one_q_chunk(qi, q_blk):
+        # q_blk (B, qc, H, hd)
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            # re-pin loop-carry sharding (see act_sharding docstring)
+            m = constrain(m, c_ml)
+            l = constrain(l, c_ml)
+            acc = constrain(acc, c_ml)
+            k_blk, v_blk, bias = inputs
+            if n_rep > 1:
+                # GQA expand on the chunk only (each device expands just
+                # its sharded head slice)
+                k_blk = constrain(_repeat_kv(k_blk, n_rep), c_exp)
+                v_blk = constrain(_repeat_kv(v_blk, n_rep), c_exp)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                # additive f32 (qc, kc) bias instead of a pred mask:
+                # `where` on a broadcast pred gets hoisted out of the loop
+                # as a (nk, B, H, qc, kc) tensor by XLA (≈ TB-scale);
+                # the f32 bias stack is nk·qc·kc·4 bytes (MBs).
+                s = s + bias[None, None, :, :]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] \
+                + jnp.einsum("bhqk,bkhd->bhqd",
+                             p.astype(v_blk.dtype), v_blk,
+                             preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        biases = jnp.where(
+            q_pos[qi][None, :, None] >= k_pos[:, None, :],
+            0.0, NEG_INF).astype(jnp.float32)          # (nk, qc, kc)
+        m0 = constrain(jnp.full((B, H, q_chunk), NEG_INF, jnp.float32),
+                       c_ml)
+        l0 = constrain(jnp.zeros((B, H, q_chunk), jnp.float32), c_ml)
+        a0 = constrain(jnp.zeros((B, H, q_chunk, hd), jnp.float32), c_ml)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (constrain(kc.transpose(1, 0, 2, 3, 4), c_kv),
+             constrain(vc.transpose(1, 0, 2, 3, 4), c_kv), biases))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 2, 1, 3)                       # (B, qc, H, hd)
+
+    out = jax.lax.map(lambda args: one_q_chunk(*args),
+                      (jnp.arange(nq),
+                       constrain(qc.transpose(1, 0, 2, 3, 4), c_q)))
+    return constrain(out, c_q).transpose(1, 0, 2, 3, 4) \
+        .reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attn_forward(p: dict, x: jnp.ndarray, cfg: ArchConfig,
+                 positions: jnp.ndarray, causal: bool = True,
+                 memory: Optional[jnp.ndarray] = None,
+                 q_chunk: int = 1024) -> jnp.ndarray:
+    """Training/prefill attention. ``memory`` (B, Sm, D) switches to
+    cross-attention (no RoPE on memory side, no causal mask)."""
+    src = x if memory is None else memory
+    mode = _attn_shard_mode(cfg.n_heads)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    n_rep = 1
+    if memory is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        n_rep = cfg.n_heads // cfg.n_kv      # GQA expand happens per-chunk
+    # pin the attention compute layout before the flash loops (heads over
+    # "model" when divisible, else q-sequence — §Perf iter 2)
+    if mode == "heads":
+        q = constrain(q, {0: "batch", 2: "model"})
+        k = constrain(k, {0: "batch", 2: "model"})   # no-op unless K | ms
+        v = constrain(v, {0: "batch", 2: "model"})
+    elif mode == "seq":
+        q = constrain(q, {0: "batch", 1: "model"})
+        k = constrain(k, {0: "batch"})
+        v = constrain(v, {0: "batch"})
+    out = flash_attention(q, k, v, causal=causal and memory is None,
+                          q_chunk=q_chunk, shard_mode=mode, n_rep=n_rep)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ----------------------------------------------------------------------- KV
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  n_attn_layers: int, dtype=jnp.bfloat16) -> dict:
+    K, hd = cfg.n_kv, cfg.head_dim
+    shape = (n_attn_layers, batch, max_len, K, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "index": jnp.zeros((), jnp.int32)}
+
+
+# ------------------------------------------------------------ int8 KV cache
+# The paper's fixed-point quantization (§5) applied to the decode roofline
+# bottleneck: at 32k context the per-token KV read IS the decode memory
+# term (§Roofline), so int8 storage halves it vs bf16. Scales are
+# per (batch, position, kv-head) — they factor out of the head_dim
+# contraction, so dequantization is exact up to the rounding itself:
+#   s  = (q · k̂) · scale_k           (k̂ int8, scale per position/head)
+#   out = (w ⊙ scale_v) · v̂
+def quantize_kv_token(x: jnp.ndarray):
+    """x (B, 1, K, hd) → (int8 values, f32 scale (B, 1, K))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attn_decode_step(p: dict, x: jnp.ndarray, cfg: ArchConfig,
+                     k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     index: jnp.ndarray,
+                     k_scale: jnp.ndarray = None,
+                     v_scale: jnp.ndarray = None):
+    """One-token GQA self-attention decode. x (B, 1, D);
+    k_cache/v_cache (B, Smax, K, hd) stay in cache dtype (bf16, or int8
+    with per-(position, head) scales — see quantize_kv_token) — scores are
+    accumulated in f32 inside the dots, never materialising an H-head or f32
+    copy of the cache. Returns (out (B,1,D), new caches [, new scales])."""
+    B = x.shape[0]
+    K, hd = cfg.n_kv, cfg.head_dim
+    R = cfg.n_heads // K
+    quant = k_scale is not None
+    pos = jnp.full((B, 1), index, jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k_new = apply_rope(jnp.einsum("bsd,dhk->bshk", x, p["wk"]),
+                       pos, cfg.rope_theta)
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if quant:
+        k_q, k_s = quantize_kv_token(k_new)
+        v_q, v_s = quantize_kv_token(v_new)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(
+            k_scale, k_s, index, axis=1)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(
+            v_scale, v_s, index, axis=1)
+        k_new, v_new = k_q, v_q
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), index, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), index, axis=1)
+
+    qg = q.reshape(B, K, R, hd)                                  # grouped q
+    kc = k_cache.astype(jnp.bfloat16) if quant else k_cache
+    s = jnp.einsum("bkrh,bskh->bkrs", qg, kc,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if quant:
+        s = s * k_scale.transpose(0, 2, 1)[:, :, None, :]        # (B,K,1,S)
+    Smax = k_cache.shape[1]
+    valid = (jnp.arange(Smax) <= index)[None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    if quant:
+        w = (w * v_scale.transpose(0, 2, 1)[:, :, None, :]) \
+            .astype(jnp.bfloat16)
+        vc = v_cache.astype(jnp.bfloat16)
+    else:
+        w = w.astype(x.dtype)
+        vc = v_cache
+    out = jnp.einsum("bkrs,bskh->bkrh", w, vc,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, cfg.n_heads, hd).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if quant:
+        return out, k_cache, v_cache, k_scale, v_scale
+    return out, k_cache, v_cache
+
+
+def cross_attn_decode(p: dict, x: jnp.ndarray, cfg: ArchConfig,
+                      mem_k: jnp.ndarray, mem_v: jnp.ndarray) -> jnp.ndarray:
+    """Cross-attention against precomputed encoder K/V (B, Sm, H, hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    s = jnp.einsum("bqhk,bshk->bhqs", q, mem_k,
+                   preferred_element_type=jnp.float32) * (cfg.head_dim ** -0.5)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqs,bshk->bqhk", w.astype(x.dtype), mem_v,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def cross_memory_kv(p: dict, memory: jnp.ndarray, dtype=jnp.bfloat16):
+    """Precompute cross-attention K/V from encoder output (done once)."""
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"]).astype(dtype)
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"]).astype(dtype)
+    return k, v

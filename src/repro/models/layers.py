@@ -1,0 +1,124 @@
+"""Shared layers: param factory with logical sharding axes, norms, RoPE,
+MLPs, embeddings. Pure JAX (no flax) — params are nested dicts of arrays,
+and an identically-structured tree of *logical axis* tuples is built by the
+same code (``SpecMaker``), so sharding rules live in one place
+(distributed/sharding.py)."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------- #
+# Param factory
+# --------------------------------------------------------------------------- #
+class RealMaker:
+    """Creates initialized arrays. fan_in init: normal(0, 1/sqrt(fan_in))."""
+
+    def __init__(self, rng: jax.Array, dtype=jnp.float32):
+        self.rng = rng
+        self.dtype = dtype
+
+    def _next(self):
+        self.rng, sub = jax.random.split(self.rng)
+        return sub
+
+    def __call__(self, shape: Sequence[int], logical: Sequence[str],
+                 init: str = "fan_in") -> jnp.ndarray:
+        shape = tuple(shape)
+        if init == "zeros":
+            return jnp.zeros(shape, self.dtype)
+        if init == "ones":
+            return jnp.ones(shape, self.dtype)
+        if init == "embed":
+            scale = 1.0
+        elif init == "fan_in":
+            # fan-in = product of all dims except the last
+            fan = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+            scale = fan ** -0.5
+        else:
+            raise ValueError(init)
+        return jax.random.normal(self._next(), shape, self.dtype) * scale
+
+
+class SpecMaker:
+    """Returns the logical-axis tuple instead of an array (same call sites)."""
+
+    def __call__(self, shape, logical, init="fan_in"):
+        assert len(shape) == len(logical), (shape, logical)
+        return tuple(logical)
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+# --------------------------------------------------------------------------- #
+# Rotary position embedding
+# --------------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x (..., S, H, hd), positions (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                               # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                                     # (...,S,1,hd/2)
+    sin = sin[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# MLP
+# --------------------------------------------------------------------------- #
+def make_mlp_params(mk, d_model: int, d_ff: int, kind: str,
+                    extra_axes: tuple = ()) -> dict:
+    ea = tuple(extra_axes)
+    pre = ("layers",) * len(ea)
+    if kind == "swiglu":
+        return {
+            "w_gate": mk(ea + (d_model, d_ff), pre + ("embed", "ff")),
+            "w_up": mk(ea + (d_model, d_ff), pre + ("embed", "ff")),
+            "w_down": mk(ea + (d_ff, d_model), pre + ("ff", "embed")),
+        }
+    return {
+        "w_up": mk(ea + (d_model, d_ff), pre + ("embed", "ff")),
+        "w_down": mk(ea + (d_ff, d_model), pre + ("ff", "embed")),
+    }
+
+
+def mlp_forward(p: dict, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, p["w_up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["w_up"]))
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# --------------------------------------------------------------------------- #
+# Embedding / head
+# --------------------------------------------------------------------------- #
+def make_embed_params(mk, vocab: int, d_model: int) -> dict:
+    return {
+        "embedding": mk((vocab, d_model), ("vocab", "embed"), init="embed"),
+        "lm_head": mk((d_model, vocab), ("embed", "vocab")),
+        "final_norm": mk((d_model,), ("embed",), init="ones"),
+    }

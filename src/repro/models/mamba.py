@@ -1,0 +1,177 @@
+"""Mamba2 SSD (state-space duality) block — chunked parallel form for
+training/prefill, O(1) recurrent form for decode.
+
+Recurrence (per head h, state N, head-dim P):
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t ⊗ x_t        h ∈ R^{P×N}
+    y_t = C_t · h_t + D x_t
+
+Chunked form (chunk Q): within a chunk, with running log-decay
+``cum_i = Σ_{k≤i} dt_k A``:
+    y_intra_i = Σ_{j≤i} exp(cum_i − cum_j) dt_j (C_i·B_j) x_j
+    y_inter_i = exp(cum_i) (C_i · h_in)
+    h_out     = exp(cum_Q) h_in + Σ_j exp(cum_Q − cum_j) dt_j B_j ⊗ x_j
+All exponents are ≤ 0 (A < 0) → numerically stable. Inter-chunk states are
+threaded with ``lax.scan`` (sequential over S/Q chunks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .act_sharding import constrain_batch
+from .config import ArchConfig
+
+
+def make_ssm_params(mk, cfg: ArchConfig, extra_axes: tuple = ()) -> dict:
+    D = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    G = cfg.ssm_ngroups
+    cw = cfg.conv_width
+    ea = tuple(extra_axes)
+    pre = ("layers",) * len(ea)
+    return {
+        "in_z": mk(ea + (D, di), pre + ("embed", "ssm_inner")),
+        "in_x": mk(ea + (D, di), pre + ("embed", "ssm_inner")),
+        "in_B": mk(ea + (D, G, N), pre + ("embed", "ssm_group", "ssm_state")),
+        "in_C": mk(ea + (D, G, N), pre + ("embed", "ssm_group", "ssm_state")),
+        "in_dt": mk(ea + (D, H), pre + ("embed", "ssm_heads")),
+        "dt_bias": mk(ea + (H,), pre + ("ssm_heads",), init="zeros"),
+        "A_log": mk(ea + (H,), pre + ("ssm_heads",), init="zeros"),
+        "Dskip": mk(ea + (H,), pre + ("ssm_heads",), init="ones"),
+        "conv_x": mk(ea + (cw, di), pre + ("conv", "ssm_inner"), init="zeros"),
+        "out": mk(ea + (di, D), pre + ("ssm_inner", "embed")),
+        "norm": mk(ea + (di,), pre + ("ssm_inner",), init="ones"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x (B, S, F), w (cw, F)."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, h0=None):
+    """xh (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,G,N) →
+    (y (B,S,H,P), h_final (B,H,P,N)).
+
+    The whole per-chunk computation (including the Q×Q intra-chunk matrix)
+    lives inside the state ``lax.scan`` so peak memory is one chunk's
+    quadratic term, not nc of them."""
+    B, S, H, P = xh.shape
+    G, N = Bm.shape[-2:]
+    rep = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    f32 = jnp.float32
+    # chunk-major for scan: (nc, B, Q, ...)
+    xh = xh.astype(f32).reshape(B, nc, Q, H, P).transpose(1, 0, 2, 3, 4)
+    dt = dt.astype(f32).reshape(B, nc, Q, H).transpose(1, 0, 2, 3)
+    Bm = Bm.astype(f32).reshape(B, nc, Q, G, N).transpose(1, 0, 2, 3, 4)
+    Cm = Cm.astype(f32).reshape(B, nc, Q, G, N).transpose(1, 0, 2, 3, 4)
+    iu = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def body(h, inp):
+        h = constrain_batch(h)                      # loop-carry re-pin
+        xq, dtq, Bq, Cq = inp                       # (B,Q,H,P) (B,Q,H) (B,Q,G,N)
+        Bh = jnp.repeat(Bq, rep, axis=2)            # (B,Q,H,N)
+        Ch = jnp.repeat(Cq, rep, axis=2)
+        dA = dtq * A[None, None, :]                 # ≤ 0
+        cum = jnp.cumsum(dA, axis=1)                # (B,Q,H)
+        Ldec = jnp.where(iu[None, :, :, None],
+                         jnp.exp(cum[:, :, None, :] - cum[:, None, :, :]), 0.0)
+        CB = jnp.einsum("bihn,bjhn->bijh", Ch, Bh)
+        y_intra = jnp.einsum("bijh,bjh,bjhp->bihp", CB * Ldec, dtq, xq)
+        y_inter = jnp.einsum("bihn,bhpn->bihp",
+                             Ch * jnp.exp(cum)[..., None], h)
+        st = jnp.einsum("bjh,bjh,bjhn,bjhp->bhpn",
+                        jnp.exp(cum[:, -1:, :] - cum), dtq, Bh, xq)
+        h_new = h * jnp.exp(cum[:, -1, :])[:, :, None, None] + st
+        return h_new, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), f32)
+    h0 = constrain_batch(h0)
+    xh, dt = constrain_batch(xh, dim=1), constrain_batch(dt, dim=1)
+    Bm, Cm = constrain_batch(Bm, dim=1), constrain_batch(Cm, dim=1)
+    h_final, ys = jax.lax.scan(body, h0, (xh, dt, Bm, Cm))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y, h_final
+
+
+def ssm_forward(p: dict, x: jnp.ndarray, cfg: ArchConfig,
+                chunk: int = 128) -> jnp.ndarray:
+    """Full-sequence Mamba2 block. x (B, S, D) → (B, S, D)."""
+    B, S, D = x.shape
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    xs = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    Bm = jnp.einsum("bsd,dgn->bsgn", x, p["in_B"])
+    Cm = jnp.einsum("bsd,dgn->bsgn", x, p["in_C"])
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", x, p["in_dt"])
+                         + p["dt_bias"])
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_x"]))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, _ = ssd_chunked(xs.reshape(B, S, H, P), dt, A, Bm, Cm, chunk)
+    y = y + xs.reshape(B, S, H, P).astype(jnp.float32) * p["Dskip"][None, None, :, None]
+    y = y.reshape(B, S, H * P).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    # grouped RMSNorm (Mamba2 uses norm before out-proj)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype) \
+        * p["norm"]
+    return jnp.einsum("bse,ed->bsd", y, p["out"])
+
+
+# --------------------------------------------------------------------- decode
+def init_ssm_state(cfg: ArchConfig, batch: int, n_ssm_layers: int,
+                   dtype=jnp.float32) -> dict:
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    return {
+        "h": jnp.zeros((n_ssm_layers, batch, H, P, N), dtype),
+        "conv": jnp.zeros((n_ssm_layers, batch, cfg.conv_width - 1,
+                           cfg.d_inner), dtype),
+    }
+
+
+def ssm_decode_step(p: dict, x: jnp.ndarray, cfg: ArchConfig,
+                    h: jnp.ndarray, conv_buf: jnp.ndarray):
+    """One-token recurrent step. x (B, 1, D); h (B,H,P,N);
+    conv_buf (B, cw-1, di). Returns (out (B,1,D), h', conv_buf')."""
+    B = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    xt = x[:, 0]                                              # (B, D)
+    z = xt @ p["in_z"]
+    xs = xt @ p["in_x"]
+    Bm = jnp.einsum("bd,dgn->bgn", xt, p["in_B"])
+    Cm = jnp.einsum("bd,dgn->bgn", xt, p["in_C"])
+    dt = jax.nn.softplus(xt @ p["in_dt"] + p["dt_bias"])      # (B, H)
+
+    # causal conv over ring buffer
+    win = jnp.concatenate([conv_buf, xs[:, None, :]], axis=1)  # (B, cw, di)
+    xs = jax.nn.silu(jnp.einsum("bcf,cf->bf", win, p["conv_x"]))
+    conv_buf = win[:, 1:]
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A[None, :])                              # (B, H)
+    rep = H // cfg.ssm_ngroups
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)       # (B, H, N)
+    Chh = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    h = h * dA[:, :, None, None] \
+        + jnp.einsum("bh,bhn,bhp->bhpn", dt, Bh, xh)
+    y = jnp.einsum("bhn,bhpn->bhp", Chh, h) \
+        + xh * p["Dskip"][None, :, None]
+    y = y.reshape(B, H * P).astype(x.dtype) * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype) \
+        * p["norm"]
+    return (y @ p["out"])[:, None, :], h, conv_buf

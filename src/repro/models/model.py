@@ -1,0 +1,428 @@
+"""Model assembly for all 10 assigned architectures.
+
+A model is a stack of *units* scanned with ``lax.scan``; a unit is the
+smallest repeating layer group:
+
+  dense/moe : 1 layer  (attn mixer + mlp|moe ffn)
+  ssm       : 1 mamba block (no separate ffn — mamba2 style)
+  hybrid    : ``attn_period`` layers (jamba: 7 mamba + 1 attn, alternating moe)
+  encdec    : decoder unit (self-attn + cross-attn + mlp); encoder is a
+              separate scanned stack of (attn + mlp) units
+
+Params are nested dicts; every block leaf carries a leading ``n_units`` axis
+for the scan. ``SpecMaker`` builds an identical tree of logical-axis tuples
+consumed by distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mamba, moe
+from .act_sharding import constrain, constrain_batch
+from .config import ArchConfig
+from .layers import (RealMaker, SpecMaker, make_embed_params,
+                     make_mlp_params, rmsnorm)
+
+
+@dataclass
+class UnitPos:
+    mixer: str              # "attn" | "ssm"
+    ffn: Optional[str]      # "mlp" | "moe" | None
+    cross: bool = False
+
+
+def unit_layout(cfg: ArchConfig) -> list[UnitPos]:
+    """Per-position descriptors of one scan unit."""
+    if cfg.family == "ssm":
+        return [UnitPos("ssm", None)]
+    if cfg.family == "hybrid":
+        out = []
+        for i in range(cfg.attn_period):
+            mixer = "attn" if cfg.is_attn_layer(i) else "ssm"
+            ffn = "moe" if cfg.is_moe_layer(i) else "mlp"
+            out.append(UnitPos(mixer, ffn))
+        return out
+    ffn0 = "moe" if (cfg.n_experts and cfg.moe_period == 1) else None
+    if cfg.family == "moe" and ffn0 is None:
+        # period-based MoE for dense-ish moe configs
+        return [UnitPos("attn", "moe" if cfg.is_moe_layer(i) else "mlp")
+                for i in range(cfg.moe_period)]
+    return [UnitPos("attn", ffn0 or "mlp", cross=(cfg.family == "encdec"))]
+
+
+def n_units(cfg: ArchConfig) -> int:
+    lay = unit_layout(cfg)
+    assert cfg.n_layers % len(lay) == 0, (cfg.name, cfg.n_layers, len(lay))
+    return cfg.n_layers // len(lay)
+
+
+# --------------------------------------------------------------------------- #
+# Parameter construction (shared between RealMaker and SpecMaker)
+# --------------------------------------------------------------------------- #
+def _make_unit_params(mk, cfg: ArchConfig, layout: list[UnitPos],
+                      U: int) -> dict:
+    blocks: dict[str, Any] = {}
+    ea = (U,)
+    for i, pos in enumerate(layout):
+        p: dict[str, Any] = {
+            "ln1": mk(ea + (cfg.d_model,), ("layers", "embed"), init="ones"),
+        }
+        if pos.mixer == "attn":
+            p["attn"] = attn.make_attn_params(mk, cfg, extra_axes=ea)
+        else:
+            p["ssm"] = mamba.make_ssm_params(mk, cfg, extra_axes=ea)
+        if pos.ffn:
+            p["ln2"] = mk(ea + (cfg.d_model,), ("layers", "embed"),
+                          init="ones")
+        if pos.ffn == "mlp":
+            p["mlp"] = make_mlp_params(mk, cfg.d_model, cfg.d_ff, cfg.mlp,
+                                       extra_axes=ea)
+        elif pos.ffn == "moe":
+            p["moe"] = moe.make_moe_params(mk, cfg, extra_axes=ea)
+        if pos.cross:
+            p["ln_cross"] = mk(ea + (cfg.d_model,), ("layers", "embed"),
+                               init="ones")
+            p["cross"] = attn.make_attn_params(mk, cfg, cross=True,
+                                               extra_axes=ea)
+        blocks[f"pos{i}"] = p
+    return blocks
+
+
+def make_params(cfg: ArchConfig, mk) -> dict:
+    layout = unit_layout(cfg)
+    U = n_units(cfg)
+    params = {
+        "embed": make_embed_params(mk, cfg.vocab, cfg.d_model),
+        "blocks": _make_unit_params(mk, cfg, layout, U),
+    }
+    if cfg.family == "encdec":
+        enc_layout = [UnitPos("attn", "mlp")]
+        params["enc_blocks"] = _make_unit_params(
+            mk, cfg, enc_layout, cfg.enc_layers)
+        params["enc_norm"] = mk((cfg.d_model,), ("embed",), init="ones")
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# Model
+# --------------------------------------------------------------------------- #
+class Model:
+    def __init__(self, cfg: ArchConfig, compute_dtype=jnp.bfloat16,
+                 q_chunk: int = 1024, ssd_chunk: int = 128,
+                 loss_chunk: int = 1024, remat: bool = True):
+        self.cfg = cfg
+        self.layout = unit_layout(cfg)
+        self.n_units = n_units(cfg)
+        self.compute_dtype = compute_dtype
+        self.q_chunk = q_chunk
+        self.ssd_chunk = ssd_chunk
+        self.loss_chunk = loss_chunk
+        self.remat = remat
+
+    # ------------------------------------------------------------- params
+    def init_params(self, rng: jax.Array, dtype=jnp.float32) -> dict:
+        return make_params(self.cfg, RealMaker(rng, dtype))
+
+    def param_logical_specs(self) -> dict:
+        return make_params(self.cfg, SpecMaker())
+
+    # ------------------------------------------------------------- blocks
+    def _apply_unit(self, up: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                    causal: bool, memory: Optional[jnp.ndarray],
+                    layout: list[UnitPos]) -> tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        # constraining each sub-block OUTPUT to the residual spec makes the
+        # SPMD dot handler emit reduce-scatter for the TP output projection
+        # (contracting dim sharded + output S-sharded) instead of
+        # all-reduce + slice — §Perf iter 5. XLA's reduce-scatter-creator
+        # pass would do this on TPU; the CPU pipeline lacks it, so we ask
+        # the partitioner directly.
+        res_spec = {0: "batch", 1: "model"}
+        for i, pos in enumerate(layout):
+            p = up[f"pos{i}"]
+            h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+            if pos.mixer == "attn":
+                h = attn.attn_forward(p["attn"], h, cfg, positions,
+                                      causal=causal, q_chunk=self.q_chunk)
+            else:
+                h = mamba.ssm_forward(p["ssm"], h, cfg, chunk=self.ssd_chunk)
+            x = x + constrain(h, res_spec)
+            if pos.cross and memory is not None:
+                h = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+                h = attn.attn_forward(p["cross"], h, cfg, positions,
+                                      causal=False, memory=memory,
+                                      q_chunk=self.q_chunk)
+                x = x + constrain(h, res_spec)
+            if pos.ffn:
+                h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+                if pos.ffn == "moe":
+                    h, a = moe.moe_forward(p["moe"], h, cfg)
+                    aux = aux + a
+                else:
+                    from .layers import mlp_forward
+                    h = mlp_forward(p["mlp"], h, cfg.mlp)
+                x = x + constrain(h, res_spec)
+        return x, aux
+
+    def _run_stack(self, blocks: dict, x: jnp.ndarray,
+                   positions: jnp.ndarray, causal: bool,
+                   memory: Optional[jnp.ndarray],
+                   layout: list[UnitPos]) -> tuple[jnp.ndarray, jnp.ndarray]:
+        # residual-stream sharding (§Perf iterations 1+3): batch over the
+        # data axes AND sequence over the model axis (Korthikanti-style
+        # sequence parallelism). The stored per-layer carries — the bulk of
+        # remat-training HBM — shrink by the TP degree; XLA inserts the
+        # all-gather at attn/mlp entry and reduce-scatter at exit. Decode
+        # (S=1) skips the seq constraint automatically (divisibility).
+        res_spec = {0: "batch", 1: "model"}
+
+        def unit_fn(carry, up):
+            # re-pin the scan carry: XLA's propagation through `while`
+            # resolves unannotated carries to REPLICATED (788 GB/device
+            # temps before §Perf iteration 1)
+            carry = constrain(carry, res_spec)
+            y, aux = self._apply_unit(up, carry, positions, causal, memory,
+                                      layout)
+            y = constrain(y, res_spec)
+            return y, aux
+
+        fn = jax.checkpoint(unit_fn) if self.remat else unit_fn
+        x, auxs = jax.lax.scan(fn, x, blocks)
+        return x, auxs.sum()
+
+    def _cast(self, params: dict) -> dict:
+        """Cast f32 master params to the compute dtype (bf16) at entry."""
+        dt = self.compute_dtype
+        return jax.tree.map(
+            lambda a: a.astype(dt) if a.dtype == jnp.float32 else a, params)
+
+    # ------------------------------------------------------------ forward
+    def trunk(self, params: dict, tokens: jnp.ndarray,
+              enc_embeds: Optional[jnp.ndarray] = None):
+        """Embed + all blocks + final norm → (hidden (B,S,D), aux)."""
+        cfg = self.cfg
+        dt = self.compute_dtype
+        params = self._cast(params)
+        x = jnp.take(params["embed"]["embedding"], tokens, axis=0).astype(dt)
+        x = constrain(x, {0: "batch", 1: "model"})
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        memory = None
+        if cfg.family == "encdec":
+            assert enc_embeds is not None, "encdec needs encoder embeddings"
+            memory = self.encode(params, enc_embeds)
+        x, aux = self._run_stack(params["blocks"], x, positions, True,
+                                 memory, self.layout)
+        x = rmsnorm(x, params["embed"]["final_norm"], cfg.norm_eps)
+        return x, aux
+
+    def encode(self, params: dict, enc_embeds: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        params = self._cast(params)
+        x = enc_embeds.astype(self.compute_dtype)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x, _ = self._run_stack(params["enc_blocks"], x, positions, False,
+                               None, [UnitPos("attn", "mlp")])
+        return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+    def logits(self, params: dict, hidden: jnp.ndarray) -> jnp.ndarray:
+        return jnp.einsum("bsd,dv->bsv", hidden,
+                          params["embed"]["lm_head"].astype(hidden.dtype))
+
+    def forward(self, params, tokens, enc_embeds=None):
+        h, _ = self.trunk(params, tokens, enc_embeds)
+        return self.logits(params, h)
+
+    # --------------------------------------------------------------- loss
+    def loss_fn(self, params: dict, tokens: jnp.ndarray,
+                enc_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Next-token CE, computed in sequence chunks so the (B,S,V) logits
+        tensor is never materialised (vocab up to 256k)."""
+        h, aux = self.trunk(params, tokens, enc_embeds)
+        B, S, D = h.shape
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], axis=1)
+        mask = jnp.concatenate(
+            [jnp.ones((B, S - 1), jnp.float32), jnp.zeros((B, 1), jnp.float32)],
+            axis=1)
+        ck = min(self.loss_chunk, S)
+        nc = S // ck
+        hc = constrain_batch(h.reshape(B, nc, ck, D).transpose(1, 0, 2, 3),
+                             dim=1)
+        lc = constrain_batch(labels.reshape(B, nc, ck).transpose(1, 0, 2),
+                             dim=1)
+        mc = constrain_batch(mask.reshape(B, nc, ck).transpose(1, 0, 2),
+                             dim=1)
+        head = params["embed"]["lm_head"]
+
+        def chunk_loss(carry, inp):
+            hh, ll, mm = inp
+            lg = jnp.einsum("bsd,dv->bsv", hh, head.astype(hh.dtype))
+            lg = lg.astype(jnp.float32)
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, ll[..., None], axis=-1)[..., 0]
+            ce = ((lse - gold) * mm).sum()
+            return carry + ce, None
+
+        fn = jax.checkpoint(chunk_loss) if self.remat else chunk_loss
+        total, _ = jax.lax.scan(fn, jnp.zeros((), jnp.float32), (hc, lc, mc))
+        ntok = jnp.maximum(mask.sum(), 1.0)
+        return total / ntok + 0.01 * aux
+
+    # ------------------------------------------------------------- decode
+    def _cache_shapes(self):
+        cfg = self.cfg
+        n_attn_per_unit = sum(1 for p in self.layout if p.mixer == "attn")
+        n_ssm_per_unit = sum(1 for p in self.layout if p.mixer == "ssm")
+        return n_attn_per_unit, n_ssm_per_unit
+
+    def init_decode_state(self, batch: int, max_len: int,
+                          params: Optional[dict] = None,
+                          enc_embeds: Optional[jnp.ndarray] = None,
+                          dtype=jnp.bfloat16,
+                          kv_quant: bool = False) -> dict:
+        cfg = self.cfg
+        U = self.n_units
+        na, ns = self._cache_shapes()
+        state: dict[str, Any] = {"index": jnp.zeros((), jnp.int32)}
+        if na:
+            K, hd = cfg.n_kv, cfg.head_dim
+            kv_dtype = jnp.int8 if kv_quant else dtype
+            state["k"] = jnp.zeros((U, na, batch, max_len, K, hd), kv_dtype)
+            state["v"] = jnp.zeros((U, na, batch, max_len, K, hd), kv_dtype)
+            if kv_quant:
+                # int8 KV (paper §5 → decode roofline): per-(pos, head)
+                # scales, ~2 bytes/elem → 1.03
+                state["k_scale"] = jnp.zeros((U, na, batch, max_len, K),
+                                             jnp.float32)
+                state["v_scale"] = jnp.zeros((U, na, batch, max_len, K),
+                                             jnp.float32)
+        if ns:
+            H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+            state["ssm_h"] = jnp.zeros((U, ns, batch, H, P, N), jnp.float32)
+            state["conv"] = jnp.zeros(
+                (U, ns, batch, cfg.conv_width - 1, cfg.d_inner), dtype)
+        if cfg.family == "encdec":
+            assert params is not None and enc_embeds is not None
+            memory = self.encode(params, enc_embeds)
+            ks, vs = [], []
+            # cross K/V per unit (layout has one position for encdec)
+            def per_unit(up):
+                return attn.cross_memory_kv(up["pos0"]["cross"], memory, dtype)
+            kv = jax.vmap(per_unit)(params["blocks"])
+            state["cross_k"], state["cross_v"] = kv
+        return state
+
+    def decode_step(self, params: dict, state: dict,
+                    tokens: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+        """tokens (B, 1) → (logits (B, vocab), new state)."""
+        cfg = self.cfg
+        dt = self.compute_dtype
+        params = self._cast(params)
+        x = jnp.take(params["embed"]["embedding"], tokens, axis=0).astype(dt)
+        index = state["index"]
+        na, ns = self._cache_shapes()
+
+        kv_quant = "k_scale" in state
+
+        xs: list[Any] = [params["blocks"]]
+        if na:
+            xs += [state["k"], state["v"]]
+            if kv_quant:
+                xs += [state["k_scale"], state["v_scale"]]
+        if ns:
+            xs += [state["ssm_h"], state["conv"]]
+        if cfg.family == "encdec":
+            xs += [state["cross_k"], state["cross_v"]]
+
+        def unit_fn(carry, inp):
+            x = carry
+            it = iter(inp)
+            up = next(it)
+            kc = vc = hc = cc = xk = xv = ksc = vsc = None
+            if na:
+                kc, vc = next(it), next(it)
+                if kv_quant:
+                    ksc, vsc = next(it), next(it)
+            if ns:
+                hc, cc = next(it), next(it)
+            if cfg.family == "encdec":
+                xk, xv = next(it), next(it)
+            ai = si = 0
+            new_k, new_v, new_h, new_c = [], [], [], []
+            new_ks, new_vs = [], []
+            for i, pos in enumerate(self.layout):
+                p = up[f"pos{i}"]
+                h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+                if pos.mixer == "attn":
+                    if kv_quant:
+                        h, k2, v2, ks2, vs2 = attn.attn_decode_step(
+                            p["attn"], h, cfg, kc[ai], vc[ai], index,
+                            k_scale=ksc[ai], v_scale=vsc[ai])
+                        new_ks.append(ks2)
+                        new_vs.append(vs2)
+                    else:
+                        h, k2, v2 = attn.attn_decode_step(
+                            p["attn"], h, cfg, kc[ai], vc[ai], index)
+                    new_k.append(k2)
+                    new_v.append(v2)
+                    ai += 1
+                else:
+                    h, h2, c2 = mamba.ssm_decode_step(
+                        p["ssm"], h, cfg, hc[si], cc[si])
+                    new_h.append(h2)
+                    new_c.append(c2)
+                    si += 1
+                x = x + h
+                if pos.cross:
+                    h = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+                    h = attn.cross_attn_decode(p["cross"], h, cfg, xk, xv)
+                    x = x + h
+                if pos.ffn:
+                    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+                    if pos.ffn == "moe":
+                        h, _ = moe.moe_forward(p["moe"], h, cfg)
+                    else:
+                        from .layers import mlp_forward
+                        h = mlp_forward(p["mlp"], h, cfg.mlp)
+                    x = x + h
+            ys = []
+            if na:
+                ys += [jnp.stack(new_k), jnp.stack(new_v)]
+                if kv_quant:
+                    ys += [jnp.stack(new_ks), jnp.stack(new_vs)]
+            if ns:
+                ys += [jnp.stack(new_h), jnp.stack(new_c)]
+            return x, tuple(ys)
+
+        x, ys = jax.lax.scan(unit_fn, x, tuple(xs))
+        x = rmsnorm(x, params["embed"]["final_norm"], cfg.norm_eps)
+        logits = self.logits(params, x)[:, 0]
+        new_state = dict(state)
+        yi = iter(ys)
+        if na:
+            new_state["k"], new_state["v"] = next(yi), next(yi)
+            if kv_quant:
+                new_state["k_scale"] = next(yi)
+                new_state["v_scale"] = next(yi)
+        if ns:
+            new_state["ssm_h"], new_state["conv"] = next(yi), next(yi)
+        new_state["index"] = index + 1
+        return logits, new_state
+
+    # ------------------------------------------------------------ prefill
+    def prefill(self, params: dict, tokens: jnp.ndarray,
+                enc_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Inference prefill: forward trunk, return last-token logits.
+        (Cache filling for the serve path is exercised by decode cells; the
+        prefill dry-run cell measures the forward cost, MaxText-style.)"""
+        h, _ = self.trunk(params, tokens, enc_embeds)
+        return self.logits(params, h[:, -1:, :])[:, 0]

@@ -1,0 +1,100 @@
+"""Top-k Mixture-of-Experts (GShard-style einsum dispatch with capacity).
+
+Expert weights carry the "experts" logical axis → expert-parallel over the
+mesh "model" axis when the expert count divides it (phi3.5-moe/jamba: 16
+experts; grok-1: 8 experts → falls back to tensor-parallel d_ff sharding,
+see distributed/sharding.py resolution rules).
+
+Dispatch is the dense one-hot einsum formulation: tokens are processed in
+groups (sequence chunks) so the dispatch tensor (G, S_g, E, C) stays
+bounded; capacity C = ceil(top_k * S_g / E * capacity_factor). Overflowing
+tokens are dropped (standard GShard semantics) — their combine weight is 0
+and the residual stream passes them through.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import make_mlp_params
+
+
+def make_moe_params(mk, cfg: ArchConfig, extra_axes: tuple = ()) -> dict:
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    ea = tuple(extra_axes)
+    pre = ("layers",) * len(ea)
+    p = {"router": mk(ea + (D, E), pre + ("embed", "experts"))}
+    if cfg.mlp == "swiglu":
+        p["w_gate"] = mk(ea + (E, D, F), pre + ("experts", "embed", "ff"))
+        p["w_up"] = mk(ea + (E, D, F), pre + ("experts", "embed", "ff"))
+        p["w_down"] = mk(ea + (E, F, D), pre + ("experts", "ff", "embed"))
+    else:
+        p["w_up"] = mk(ea + (E, D, F), pre + ("experts", "embed", "ff"))
+        p["w_down"] = mk(ea + (E, F, D), pre + ("experts", "ff", "embed"))
+    return p
+
+
+def moe_forward(p: dict, x: jnp.ndarray, cfg: ArchConfig,
+                group_size: int = 1024) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, D) → (out (B, S, D), aux_loss ()). Top-k routing with
+    capacity; aux = load-balancing loss (Switch §2.2)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    tokens = x.reshape(B * S, D)
+    n_tok = B * S
+    g = max(1, n_tok // group_size) if n_tok >= group_size else 1
+    sg = n_tok // g
+    xt = tokens[: g * sg].reshape(g, sg, D)
+
+    logits = jnp.einsum("gsd,de->gse", xt, p["router"])
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    # capacity: GShard formula for large groups; lossless (cap = group
+    # size) for small groups — decode steps route a handful of tokens and
+    # must produce the same result as the teacher-forced forward pass
+    # (tests/test_models_smoke.py::test_decode_matches_forward).
+    if sg <= 256:
+        cap = sg
+    else:
+        cap = max(1, int(k * sg / E * cfg.capacity_factor))
+
+    # top-k gating with per-expert capacity via cumulative position
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                # (g, sg, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)      # (g, sg, k, E)
+    # position of each (token, choice) in its expert's queue
+    flat = onehot.reshape(g, sg * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                        # (g, sg*k, E)
+    pos = pos.reshape(g, sg, k, E)
+    within = (pos < cap) & (onehot > 0)
+    slot = (pos * onehot).sum(-1).astype(jnp.int32)              # (g, sg, k)
+    keep = within.any(-1)                                        # (g, sg, k)
+
+    # dispatch (g, sg, E, cap) / combine with gate weights
+    slot_oh = jax.nn.one_hot(slot, cap, dtype=jnp.float32)       # (g, sg, k, cap)
+    disp = jnp.einsum("gske,gskc->gsec", onehot * keep[..., None], slot_oh)
+    comb = jnp.einsum("gske,gskc,gsk->gsec", onehot * keep[..., None],
+                      slot_oh, gate_vals)
+
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xt)                  # (g,E,cap,D)
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) \
+            * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, p["w_up"]))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    out = jnp.einsum("gsec,gecd->gsd", comb, ye)
+
+    out = out.reshape(g * sg, D)
+    if g * sg < n_tok:                                           # ragged tail
+        out = jnp.concatenate(
+            [out, jnp.zeros((n_tok - g * sg, D), out.dtype)], axis=0)
+    out = out.reshape(B, S, D).astype(x.dtype)
+
+    # load-balance aux loss: E * Σ_e f_e · p_e
+    f = onehot.mean(axis=(1, 2))                                 # (g, E) frac
+    pm = probs.mean(axis=1)                                      # (g, E)
+    aux = (E * (f * pm).sum(-1)).mean()
+    return out, aux

@@ -1,0 +1,85 @@
+"""Activation-sharding policy unit tests (single-device: constraints must
+be transparent no-ops for numerics, and divisibility rules must hold)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import act_sharding as acts
+
+
+@pytest.fixture(autouse=True)
+def _clean_policy():
+    acts.clear_policy()
+    yield
+    acts.clear_policy()
+
+
+def test_noop_without_policy():
+    x = jnp.ones((4, 8))
+    y = acts.constrain_batch(x)
+    assert y is x                       # literally untouched
+
+
+def test_divisibility_skip():
+    acts.set_policy(("data",), {"data": 16, "model": 16})
+    x = jnp.ones((5, 8))                # 5 % 16 != 0
+    assert acts.constrain_batch(x) is x
+
+
+def test_fallback_to_inner_axis():
+    acts.set_policy(("pod", "data"), {"pod": 2, "data": 16, "model": 16})
+    assert acts._batch_axes_for(32) == ("pod", "data")
+    assert acts._batch_axes_for(16) == ("data",)
+    assert acts._batch_axes_for(7) is None
+
+
+def test_model_axis_size():
+    assert acts.model_axis_size() == 1
+    acts.set_policy(("data",), {"data": 16, "model": 8})
+    assert acts.model_axis_size() == 8
+
+
+def test_constrain_spec_map_skips_indivisible():
+    acts.set_policy(("data",), {"data": 4, "model": 4})
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with mesh:
+        # under a real (1,1) mesh the constraint applies but sizes are 1;
+        # here we only check the no-crash path + value preservation
+        x = jnp.arange(32.0).reshape(4, 8)
+        y = jax.jit(lambda a: acts.constrain(a, {0: "batch", 1: "model"}))(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_policy_context_manager():
+    with acts.policy(("data",), {"data": 2}):
+        assert acts._batch_axes_for(4) == ("data",)
+    assert acts._batch_axes_for(4) is None
+
+
+def test_attn_shard_mode():
+    from repro.models.attention import _attn_shard_mode
+    acts.set_policy(("data",), {"data": 16, "model": 16})
+    assert _attn_shard_mode(96) == "heads"      # command-r
+    assert _attn_shard_mode(15) == "seq"        # smollm
+    assert _attn_shard_mode(24) == "seq"        # starcoder2
+    acts.clear_policy()
+    assert _attn_shard_mode(15) == "none"
+
+
+def test_model_numerics_invariant_under_policy():
+    """Constraints must not change forward values (1-device mesh)."""
+    from repro.configs import get_config
+    from repro.models.model import Model
+    cfg = get_config("smollm_360m").reduced()
+    model = Model(cfg, compute_dtype=jnp.float32, q_chunk=16, ssd_chunk=8,
+                  loss_chunk=16, remat=False)
+    params = model.init_params(jax.random.PRNGKey(0), jnp.float32)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab, size=(2, 32)), jnp.int32)
+    base = np.asarray(model.forward(params, toks))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    acts.policy_from_mesh(mesh)
+    with mesh:
+        got = np.asarray(jax.jit(model.forward)(params, toks))
+    np.testing.assert_allclose(got, base, rtol=1e-6, atol=1e-6)

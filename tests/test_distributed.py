@@ -1,0 +1,241 @@
+"""Distributed substrate: checkpoint, optimizer, compression, sharding
+rules, fault tolerance."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.compression import (compress, compress_tree,
+                                           decompress, init_residuals)
+from repro.distributed.fault_tolerance import (Heartbeat, PreemptionFlag,
+                                               StragglerDetector,
+                                               plan_elastic_restart)
+from repro.distributed.optimizer import Adam, AdamConfig
+from repro.distributed.sharding import resolve_spec
+
+
+# --------------------------------------------------------------------------- #
+# checkpoint
+# --------------------------------------------------------------------------- #
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.int32),
+                  "d": jnp.zeros((), jnp.float32)}}
+
+
+def test_ckpt_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 7, t)
+    got, step = ckpt.restore(str(tmp_path), t)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ckpt_latest_and_cleanup(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, t)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    ckpt.cleanup(str(tmp_path), keep=2)
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_00000004", "step_00000005"]
+    got, step = ckpt.restore(str(tmp_path), t)
+    assert step == 5
+
+
+def test_ckpt_crc_detects_corruption(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    victim = os.path.join(tmp_path, "step_00000001", "arr_0.npy")
+    data = bytearray(open(victim, "rb").read())
+    data[-1] ^= 0xFF
+    open(victim, "wb").write(bytes(data))
+    with pytest.raises(IOError, match="CRC"):
+        ckpt.restore(str(tmp_path), t)
+
+
+def test_ckpt_shape_mismatch_rejected(tmp_path):
+    ckpt.save(str(tmp_path), 1, _tree())
+    bad = {"a": jnp.zeros((2, 4)), "b": {"c": jnp.ones((2,), jnp.int32),
+                                         "d": jnp.zeros(())}}
+    with pytest.raises(AssertionError):
+        ckpt.restore(str(tmp_path), bad)
+
+
+def test_ckpt_atomic_tmp_never_latest(tmp_path):
+    """A stale .tmp dir must not be treated as a checkpoint."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    os.makedirs(os.path.join(tmp_path, "step_00000099.tmp"))
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+# --------------------------------------------------------------------------- #
+# optimizer
+# --------------------------------------------------------------------------- #
+def test_adam_quadratic_convergence():
+    opt = Adam(AdamConfig(lr=0.1))
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}          # d/dw ||w||²
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adam_int8_state_tracks_f32():
+    p0 = {"w": jnp.linspace(-2, 2, 64).reshape(8, 8)}
+    g = {"w": jnp.ones((8, 8)) * 0.5}
+    opt_f = Adam(AdamConfig(lr=0.05, state_dtype="f32"))
+    opt_q = Adam(AdamConfig(lr=0.05, state_dtype="int8"))
+    pf, sf = p0, opt_f.init(p0)
+    pq, sq = p0, opt_q.init(p0)
+    for _ in range(20):
+        pf, sf = opt_f.update(g, sf, pf)
+        pq, sq = opt_q.update(g, sq, pq)
+    np.testing.assert_allclose(np.asarray(pf["w"]), np.asarray(pq["w"]),
+                               rtol=0.05, atol=0.05)
+
+
+def test_adam_int8_state_bytes():
+    p = {"w": jnp.zeros((128, 256))}
+    s = Adam(AdamConfig(state_dtype="int8")).init(p)
+    assert s["m"]["w"]["q"].dtype == jnp.int8
+    assert s["m"]["w"]["scale"].shape == (128, 1)
+
+
+def test_adam_state_logical_specs_shape():
+    opt = Adam(AdamConfig(state_dtype="int8"))
+    logical = {"w": ("embed", "ff")}
+    specs = opt.state_logical_specs(logical)
+    assert specs["m"]["w"]["q"] == ("embed", "ff")
+    assert specs["step"] == ()
+
+
+# --------------------------------------------------------------------------- #
+# gradient compression
+# --------------------------------------------------------------------------- #
+def test_compress_bounded_error():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(0, 1, size=(32, 64)).astype(np.float32))
+    q, scale, resid = compress(g, jnp.zeros_like(g))
+    deq = decompress(q, scale)
+    # per-row max error ≤ scale/2 + rounding
+    err = np.abs(np.asarray(deq - g))
+    assert (err <= np.asarray(scale) * 0.51 + 1e-7).all()
+    np.testing.assert_allclose(np.asarray(resid), np.asarray(g - deq),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_error_feedback_unbiased_over_steps():
+    """With error feedback, the *sum* of dequantized grads converges to the
+    sum of true grads (residual stays bounded)."""
+    rng = np.random.default_rng(1)
+    true_sum = np.zeros((16, 32), np.float32)
+    deq_sum = np.zeros_like(true_sum)
+    resid = {"g": jnp.zeros((16, 32), jnp.float32)}
+    for _ in range(50):
+        g = rng.normal(0, 1, size=(16, 32)).astype(np.float32)
+        true_sum += g
+        deq, resid = compress_tree({"g": jnp.asarray(g)}, resid)
+        deq_sum += np.asarray(deq["g"])
+    # remaining deficit is exactly the residual — bounded, not growing
+    gap = np.abs(true_sum - deq_sum)
+    assert gap.max() < 0.1       # one int8 step of a ~N(0,1) row
+
+
+def test_init_residuals_zeros():
+    r = init_residuals({"a": jnp.ones((3,)), "b": jnp.ones(())})
+    assert all(float(jnp.sum(jnp.abs(x))) == 0 for x in jax.tree.leaves(r))
+
+
+# --------------------------------------------------------------------------- #
+# sharding rules
+# --------------------------------------------------------------------------- #
+class FakeMesh:
+    def __init__(self, shape_dict):
+        self.shape = shape_dict
+        self.axis_names = tuple(shape_dict)
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_resolve_spec_tp_priority():
+    # ff beats heads
+    spec = resolve_spec((1024, 4096), ("embed", "ff"), MESH1)
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+    spec = resolve_spec((64, 1024, 32, 128),
+                        ("layers", "embed", "heads", "head_dim"), MESH1)
+    assert spec[2] == "model"          # heads divisible by 16
+
+
+def test_resolve_spec_head_dim_fallback():
+    # 15 heads (smollm) not divisible by 16 → head_dim picks up TP
+    spec = resolve_spec((960, 15, 64), ("embed", "heads", "head_dim"),
+                        MESH1)
+    assert spec[1] is None and spec[2] == "model"
+
+
+def test_resolve_spec_fsdp_multi_axis():
+    spec = resolve_spec((8192, 22016), ("embed", "ff"), MESH2)
+    assert spec[0] == ("pod", "data") and spec[1] == "model"
+
+
+def test_resolve_spec_replicated_small():
+    spec = resolve_spec((3,), ("ssm_heads",), MESH1)
+    assert spec == jax.sharding.PartitionSpec(None)
+
+
+# --------------------------------------------------------------------------- #
+# fault tolerance
+# --------------------------------------------------------------------------- #
+def test_straggler_detector():
+    det = StragglerDetector(window=8, multiplier=3.0, grace=2)
+    assert not det.observe(60.0)       # grace (compile step)
+    assert not det.observe(1.0)
+    for _ in range(6):
+        assert not det.observe(1.0)
+    assert det.observe(5.0)            # 5 > 3×1.0
+    assert not det.observe(1.1)
+    assert det.median == pytest.approx(1.0, rel=0.2)
+    # straggler must not poison the window
+    assert det.observe(5.0)
+
+
+def test_heartbeat_survey(tmp_path):
+    hb0 = Heartbeat(str(tmp_path), 0)
+    hb1 = Heartbeat(str(tmp_path), 1)
+    hb0.beat(10, now=1000.0)
+    hb1.beat(10, now=900.0)            # stale
+    got = Heartbeat.survey(str(tmp_path), timeout_s=30.0, now=1001.0)
+    assert got[0]["alive"] and not got[1]["alive"]
+    assert got[0]["step"] == 10
+
+
+def test_elastic_plan_shrinks_dp_pow2():
+    plan = plan_elastic_restart(alive=[0, 1, 2, 3, 4, 6], total_hosts=8,
+                                dp_size=8, global_batch=256)
+    assert plan.dp_size == 4
+    assert plan.accum_steps == 2
+    assert plan.global_batch == 256
+    assert 7 in plan.dropped_hosts and 5 in plan.dropped_hosts
+
+
+def test_elastic_plan_all_alive_noop():
+    plan = plan_elastic_restart(alive=list(range(8)), total_hosts=8,
+                                dp_size=8, global_batch=64)
+    assert plan.dp_size == 8 and plan.accum_steps == 1
+    assert plan.dropped_hosts == ()
+
+
+def test_preemption_flag():
+    f = PreemptionFlag()
+    assert not f
+    f.set()
+    assert f

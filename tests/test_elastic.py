@@ -1,0 +1,51 @@
+"""Elastic-restart end-to-end: shrink DP, raise accumulation, restore —
+the loss trajectory must continue as if nothing happened (global batch
+invariant), which is the plan_elastic_restart contract."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.distributed.fault_tolerance import plan_elastic_restart
+from repro.launch.train import Trainer
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("smollm_360m").reduced()
+
+
+def test_accum_matches_full_batch(cfg):
+    """One step with accum=2 ≡ one step with accum=1 (same global batch)."""
+    t1 = Trainer(cfg, batch=4, seq_len=32, accum_steps=1)
+    t2 = Trainer(cfg, batch=4, seq_len=32, accum_steps=2)
+    t1.init_state()
+    t2.init_state()
+    r1 = [t1.train_step() for _ in range(3)]
+    r2 = [t2.train_step() for _ in range(3)]
+    for a, b in zip(r1, r2):
+        assert a["loss"] == pytest.approx(b["loss"], rel=1e-4)
+        assert a["grad_norm"] == pytest.approx(b["grad_norm"], rel=1e-3)
+
+
+def test_elastic_shrink_restart_continues_trajectory(cfg, tmp_path):
+    """Simulated host loss: train on the 'big' config, checkpoint, replan
+    with half the hosts (accum ×2), restore, continue — losses must match
+    the uninterrupted run."""
+    big = Trainer(cfg, batch=4, seq_len=32, accum_steps=1)
+    big.init_state()
+    for _ in range(2):
+        big.train_step()
+    big.save(str(tmp_path))
+    ref = [big.train_step()["loss"] for _ in range(2)]
+
+    plan = plan_elastic_restart(alive=[0], total_hosts=2, dp_size=2,
+                                global_batch=4)
+    assert plan.dp_size == 1 and plan.accum_steps == 2
+    assert plan.global_batch == 4
+
+    small = Trainer(cfg, batch=plan.global_batch, seq_len=32,
+                    accum_steps=plan.accum_steps)
+    got_step = small.restore(str(tmp_path))
+    assert got_step == 2
+    got = [small.train_step()["loss"] for _ in range(2)]
+    np.testing.assert_allclose(got, ref, rtol=1e-4)

@@ -1,0 +1,154 @@
+"""Engine equivalence: every engine ≡ the numpy traversal oracle,
+float and quantized, scalar and multiclass, single- and multi-word."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.quickscorer import (compile_qs, ctz32, eval_batch,
+                                    eval_scalar_numpy, exit_leaf)
+from repro.core.rapidscorer import compile_rs, eval_batch as rs_eval
+
+from conftest import rand_X
+
+ENGINES = ["bitvector", "rapidscorer", "native", "unrolled", "gemm"]
+
+
+# --------------------------------------------------------------------------- #
+# bit helpers
+# --------------------------------------------------------------------------- #
+def test_ctz32_exhaustive_bits():
+    for b in range(32):
+        w = jnp.uint32(1 << b)
+        assert int(ctz32(w)) == b
+
+
+def test_ctz32_composite():
+    assert int(ctz32(jnp.uint32(0b101000))) == 3
+    assert int(ctz32(jnp.uint32(0xFFFFFFFF))) == 0
+
+
+def test_exit_leaf_multiword():
+    # word 0 empty, word 1 has bit 5 → leaf 37
+    idx = jnp.asarray(np.array([[0, 1 << 5]], dtype=np.uint32))
+    assert int(exit_leaf(idx)[0]) == 37
+    idx = jnp.asarray(np.array([[1 << 31, 1 << 5]], dtype=np.uint32))
+    assert int(exit_leaf(idx)[0]) == 31
+
+
+# --------------------------------------------------------------------------- #
+# engines vs oracle
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("fixture", ["small_forest", "class_forest",
+                                     "big_leaf_forest"])
+def test_engine_matches_oracle(engine, fixture, request):
+    forest = request.getfixturevalue(fixture)
+    X = rand_X(forest, B=96)
+    pred = core.compile_forest(forest, engine=engine)
+    expect = forest.predict_oracle(X)
+    got = pred.predict(X)
+    np.testing.assert_allclose(got, expect, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_engine_quantized_matches_quantized_oracle(engine, trained_rf,
+                                                   magic_ds):
+    forest = core.from_random_forest(trained_rf)
+    qf = core.quantize_forest(forest, magic_ds.X_train)
+    X = magic_ds.X_test[:96]
+    pred = core.compile_forest(qf, engine=engine)
+    got = pred.predict(X)
+    from repro.kernels.ref import ref_oracle
+    expect = ref_oracle(qf, X)
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-6)
+
+
+def test_scalar_qs_matches_batch(small_forest):
+    """Faithful Algorithm 1 (sorted features, early break) ≡ predicated
+    batch evaluation — validates the DESIGN.md §2.1 predication claim."""
+    X = rand_X(small_forest, B=16)
+    scalar = eval_scalar_numpy(small_forest, X)
+    batch = np.asarray(eval_batch(compile_qs(small_forest),
+                                  jnp.asarray(X)))
+    np.testing.assert_allclose(scalar, batch, rtol=1e-5, atol=1e-6)
+
+
+def test_rapidscorer_equals_quickscorer(class_forest):
+    X = rand_X(class_forest, B=48)
+    qs = np.asarray(eval_batch(compile_qs(class_forest), jnp.asarray(X)))
+    rs = np.asarray(rs_eval(compile_rs(class_forest), jnp.asarray(X)))
+    np.testing.assert_allclose(qs, rs, rtol=1e-6)
+
+
+def test_merging_reduces_unique_nodes(trained_rf):
+    """RF trees share thresholds (binned training) → merging must help."""
+    forest = core.from_random_forest(trained_rf)
+    frac = core.merge_stats(forest)
+    assert 0.0 < frac < 1.0
+
+
+def test_merge_idempotent_on_distinct_nodes():
+    f = core.random_forest_ir(4, 8, 4, seed=11)
+    # continuous random thresholds: collisions ~impossible
+    frac = core.merge_stats(f)
+    assert frac == pytest.approx(1.0)
+
+
+def test_threshold_boundary_exact():
+    """x == t must go LEFT (predicate is x > t for the mask)."""
+    from repro.trees.cart import Tree, TreeNode
+    l0 = TreeNode(value=np.array([1.0]))
+    l1 = TreeNode(value=np.array([2.0]))
+    root = TreeNode(feature=0, threshold=0.5, left=l0, right=l1)
+    f = core.from_trees([Tree(root, 2, 1)], n_features=1, n_classes=1)
+    X = np.array([[0.5], [0.5 + 1e-6]])
+    for engine in ENGINES:
+        got = core.compile_forest(f, engine=engine).predict(X)
+        np.testing.assert_allclose(got[:, 0], [1.0, 2.0], rtol=1e-6,
+                                   err_msg=engine)
+
+
+def test_single_leaf_tree():
+    """Degenerate trees (no splits) must contribute their constant."""
+    from repro.trees.cart import Tree, TreeNode
+    stump = Tree(TreeNode(value=np.array([7.0])), 1, 0)
+    l0 = TreeNode(value=np.array([1.0]))
+    l1 = TreeNode(value=np.array([2.0]))
+    real = Tree(TreeNode(feature=0, threshold=0.0, left=l0, right=l1), 2, 1)
+    f = core.from_trees([stump, real], n_features=1, n_classes=1)
+    X = np.array([[-1.0], [1.0]])
+    expect = np.array([[8.0], [9.0]])
+    for engine in ENGINES:
+        got = core.compile_forest(f, engine=engine).predict(X)
+        np.testing.assert_allclose(got, expect, rtol=1e-6, err_msg=engine)
+
+
+def test_gbt_forest_roundtrip(magic_ds):
+    from repro.trees.gradient_boosting import (GradientBoosting,
+                                               GradientBoostingConfig)
+    gb = GradientBoosting(GradientBoostingConfig(
+        n_trees=20, max_leaves=8, objective="l2", seed=0)).fit(
+        magic_ds.X_train, magic_ds.y_train.astype(np.float64))
+    forest = core.from_gradient_boosting(gb)
+    X = magic_ds.X_test[:64]
+    direct = gb.predict(X)
+    via_ir = forest.predict_oracle(X)[:, 0]
+    np.testing.assert_allclose(via_ir, direct, rtol=1e-6, atol=1e-8)
+    for engine in ENGINES:
+        got = core.compile_forest(forest, engine=engine).predict(X)[:, 0]
+        np.testing.assert_allclose(got, direct, rtol=1e-4, atol=1e-5,
+                                   err_msg=engine)
+
+
+def test_softmax_gbt_class_embedding(magic_ds):
+    from repro.trees.gradient_boosting import (GradientBoosting,
+                                               GradientBoostingConfig)
+    gb = GradientBoosting(GradientBoostingConfig(
+        n_trees=12, max_leaves=8, objective="softmax", seed=0)).fit(
+        magic_ds.X_train, magic_ds.y_train)
+    forest = core.from_gradient_boosting(gb)
+    assert forest.n_classes == 2
+    X = magic_ds.X_test[:64]
+    np.testing.assert_allclose(forest.predict_oracle(X), gb.predict(X),
+                               rtol=1e-6, atol=1e-8)

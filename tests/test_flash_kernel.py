@@ -1,0 +1,93 @@
+"""Pallas flash-attention kernel: shape/dtype sweep vs the pure-jnp
+oracle (models.attention.flash_attention) and a naive softmax reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention_kernel import flash_attention_bshd
+from repro.models.attention import flash_attention
+
+
+def _naive(q, k, v, causal):
+    H, K = q.shape[2], k.shape[2]
+    rep = H // K
+    kr = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr)
+    s = s * (q.shape[-1] ** -0.5)
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, vr)
+
+
+SWEEP = [
+    # (B, Sq, Sk, H, K, hd, causal, bq, bk)
+    (1, 32, 32, 4, 4, 8, True, 8, 8),        # MHA causal
+    (2, 64, 64, 6, 2, 16, True, 16, 16),     # GQA 3:1
+    (2, 64, 64, 8, 1, 16, True, 32, 16),     # MQA
+    (1, 48, 96, 4, 4, 8, False, 16, 32),     # cross-shaped, non-causal
+    (2, 128, 128, 15, 5, 4, True, 64, 32),   # smollm-like ratios
+]
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,K,hd,causal,bq,bk", SWEEP)
+def test_flash_kernel_matches_naive(B, Sq, Sk, H, K, hd, causal, bq, bk):
+    rng = np.random.default_rng(hash((B, Sq, H)) % 2**31)
+    q = jnp.asarray(rng.normal(size=(B, Sq, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Sk, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Sk, K, hd)), jnp.float32)
+    got = flash_attention_bshd(q, k, v, causal=causal, block_q=bq,
+                               block_k=bk)
+    ref = _naive(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_kernel_matches_pure_jax_engine():
+    """The kernel and the XLA engine (which the dry-run lowers) must agree
+    — they are the same math at different memory-hierarchy levels."""
+    rng = np.random.default_rng(0)
+    B, S, K, R, hd = 2, 64, 3, 5, 16
+    q = jnp.asarray(rng.normal(size=(B, S, K * R, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.float32)
+    got = flash_attention_bshd(q, k, v, causal=True, block_q=16, block_k=16)
+    ref = flash_attention(q, k, v, causal=True, q_chunk=16, k_chunk=16,
+                          n_rep=R)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_flash_kernel_bf16_inputs():
+    rng = np.random.default_rng(3)
+    B, S, H, hd = 1, 32, 4, 8
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.bfloat16)
+    got = flash_attention_bshd(q, k, v, causal=True, block_q=8, block_k=8)
+    assert got.dtype == jnp.bfloat16
+    ref = _naive(q.astype(jnp.float32), k.astype(jnp.float32),
+                 v.astype(jnp.float32), True)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(ref), rtol=3e-2, atol=3e-2)
+
+
+def test_flash_kernel_block_shape_independence():
+    rng = np.random.default_rng(4)
+    B, S, H, hd = 2, 64, 4, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    ref = None
+    for bq, bk in [(8, 8), (16, 32), (64, 64)]:
+        got = np.asarray(flash_attention_bshd(q, k, v, causal=True,
+                                              block_q=bq, block_k=bk))
+        if ref is None:
+            ref = got
+        else:
+            np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6,
+                                       err_msg=f"bq={bq} bk={bk}")

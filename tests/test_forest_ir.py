@@ -1,0 +1,104 @@
+"""Forest IR invariants: canonicalisation, interval masks, leafidx."""
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.forest import WORD, _interval_bits
+from repro.trees.cart import Tree, TreeNode
+
+
+def test_interval_bits_basic():
+    bits = _interval_bits(0, 4, 1)
+    assert bits[0] == 0b1111
+    bits = _interval_bits(2, 5, 1)
+    assert bits[0] == 0b11100
+
+
+def test_interval_bits_cross_word():
+    bits = _interval_bits(30, 34, 2)
+    assert bits[0] == (1 << 30) | (1 << 31)
+    assert bits[1] == 0b11
+
+
+def test_interval_bits_empty():
+    bits = _interval_bits(5, 5, 2)
+    assert (bits == 0).all()
+
+
+def _manual_tree():
+    """      n0(f0 <= 0.5)
+            /      \
+       leaf0       n1(f1 <= -1)
+                   /    \
+               leaf1    leaf2
+    """
+    l0 = TreeNode(value=np.array([1.0]))
+    l1 = TreeNode(value=np.array([2.0]))
+    l2 = TreeNode(value=np.array([3.0]))
+    n1 = TreeNode(feature=1, threshold=-1.0, left=l1, right=l2)
+    n0 = TreeNode(feature=0, threshold=0.5, left=l0, right=n1)
+    return Tree(n0, 3, 2)
+
+
+def test_from_trees_canonical():
+    f = core.from_trees([_manual_tree()], n_features=2, n_classes=1)
+    assert f.n_trees == 1 and f.n_leaves == 3
+    assert f.n_nodes[0] == 2 and f.n_leaves_per_tree[0] == 3
+    # preorder: node0 = root, node1 = right child
+    assert f.feature[0, 0] == 0 and f.feature[0, 1] == 1
+    # leaf intervals: root covers [0,3) split at 1; n1 covers [1,3) at 2
+    assert (f.leaf_lo[0, 0], f.leaf_mid[0, 0], f.leaf_hi[0, 0]) == (0, 1, 3)
+    assert (f.leaf_lo[0, 1], f.leaf_mid[0, 1], f.leaf_hi[0, 1]) == (1, 2, 3)
+    # leaves numbered left-to-right
+    assert f.leaf_value[0, :, 0].tolist() == [1.0, 2.0, 3.0]
+
+
+def test_oracle_matches_hand_eval():
+    f = core.from_trees([_manual_tree()], n_features=2, n_classes=1)
+    X = np.array([[0.0, 0.0],      # left at root → leaf0
+                  [1.0, -2.0],     # right, left → leaf1
+                  [1.0, 0.0]])     # right, right → leaf2
+    np.testing.assert_allclose(f.predict_oracle(X)[:, 0], [1.0, 2.0, 3.0])
+
+
+def test_node_masks_clear_left_interval():
+    f = core.from_trees([_manual_tree()], n_features=2, n_classes=1)
+    masks = f.node_masks()
+    # root mask clears leaf 0 (bit 0)
+    assert masks[0, 0, 0] & 0b1 == 0
+    assert masks[0, 0, 0] & 0b110 == 0b110
+    # n1 mask clears leaf 1
+    assert masks[0, 1, 0] & 0b10 == 0
+    # padding node (index 2+, none here since N = L-1 = 2) — all nodes real
+
+
+def test_init_leafidx_only_real_leaves(class_forest):
+    idx = class_forest.init_leafidx()
+    for t in range(class_forest.n_trees):
+        n_set = sum(bin(int(w)).count("1") for w in idx[t])
+        assert n_set == class_forest.n_leaves_per_tree[t]
+
+
+def test_padding_invariants(class_forest):
+    f = class_forest
+    pad = f.feature < 0
+    # padded nodes have identity masks
+    masks = f.node_masks()
+    assert (masks[pad] == 0xFFFFFFFF).all()
+
+
+def test_oracle_matches_trainer_trees(trained_rf, magic_ds):
+    forest = core.from_random_forest(trained_rf)
+    X = magic_ds.X_test[:128]
+    np.testing.assert_allclose(forest.predict_oracle(X),
+                               trained_rf.predict_proba(X), rtol=1e-6,
+                               atol=1e-9)
+
+
+def test_random_forest_ir_shapes():
+    f = core.random_forest_ir(5, 16, 4, n_classes=2, seed=9)
+    assert f.feature.shape == (5, 15)
+    assert f.leaf_value.shape == (5, 16, 2)
+    assert f.n_words == 1
+    f64 = core.random_forest_ir(3, 64, 4, seed=9)
+    assert f64.n_words == 2

@@ -1,0 +1,132 @@
+"""Unit tests for the trip-count-aware HLO roofline analyzer."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_computations
+
+
+def _hlo(f, *shapes):
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_flops_match_unroll():
+    def scanned(x, w):
+        def body(c, _):
+            return c @ w, None
+        c, _ = jax.lax.scan(body, x, None, length=10)
+        return c
+
+    def unrolled(x, w):
+        for _ in range(10):
+            x = x @ w
+        return x
+
+    fs = analyze(_hlo(scanned, (64, 64), (64, 64))).flops
+    fu = analyze(_hlo(unrolled, (64, 64), (64, 64))).flops
+    assert fs == pytest.approx(fu)
+    assert fs == pytest.approx(10 * 2 * 64 ** 3, rel=0.01)
+
+
+def test_nested_scan_multipliers():
+    def nested(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        c, _ = jax.lax.scan(outer, x, None, length=5)
+        return c
+
+    f = analyze(_hlo(nested, (32, 32), (32, 32))).flops
+    assert f == pytest.approx(15 * 2 * 32 ** 3, rel=0.01)
+
+
+def test_slice_aware_bytes_not_quadratic():
+    """Chunked scan reading slices of a big array must not charge the full
+    array per iteration."""
+    N, C = 64, 128
+
+    def chunked(big):
+        def body(acc, i):
+            blk = jax.lax.dynamic_slice(big, (i * C, 0), (C, big.shape[1]))
+            return acc + blk.sum(), None
+        acc, _ = jax.lax.scan(body, jnp.zeros(()),
+                              jnp.arange(N, dtype=jnp.int32))
+        return acc
+
+    cost = analyze(_hlo(chunked, (N * C, 16)))
+    total = N * C * 16 * 4
+    # slice-aware: each element read O(1) times (plus loop overheads),
+    # NOT O(N) times
+    assert cost.bytes_hbm < 20 * total
+    assert cost.bytes_hbm > total  # but it did read the data
+
+
+def test_tuple_param_computations_parsed():
+    """while bodies have tuple-typed params with /*index=N*/ comments —
+    the regression that silently dropped all loop collectives once."""
+    hlo = """
+HloModule m
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[8,8]) %p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element((s32[], /*index=1*/f32[8,8]) %p), index=1
+  %ar = f32[8,8]{1,0} all-reduce(%x), to_apply=%add
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+    st = analyze(hlo).collectives
+    assert st.per_op["all-reduce"] == 8 * 8 * 4 * 7     # trip count 7
+    assert st.link_bytes == 2 * 8 * 8 * 4 * 7
+
+
+def test_backend_config_trip_count_precedence():
+    hlo = """
+HloModule m
+
+%body (p: (f32[4])) -> (f32[4]) {
+  %x = f32[4]{0} get-tuple-element((f32[4]) %p), index=0
+  %ag = f32[4]{0} all-gather(%x), dimensions={0}
+  ROOT %t = (f32[4]) tuple(%ag)
+}
+
+%cond (p: (f32[4])) -> pred[] {
+  %c = s32[] constant(999)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %w = (f32[4]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"3"}}
+  ROOT %r = f32[4] get-tuple-element(%w), index=0
+}
+"""
+    st = analyze(hlo).collectives
+    assert st.per_op["all-gather"] == 16 * 3    # backend_config wins over 999
+
+
+def test_dot_inside_fusion_counted():
+    def f(x, w):
+        return jax.nn.relu(x @ w) @ w
+
+    cost = analyze(_hlo(f, (32, 32), (32, 32)))
+    assert cost.flops == pytest.approx(2 * 2 * 32 ** 3, rel=0.01)
+
+
+def test_parse_computation_count_real_module():
+    txt = _hlo(lambda x: jnp.sin(x).sum(), (128,))
+    comps, entry = parse_computations(txt)
+    assert entry in comps
+    assert len(comps) >= 1

@@ -1,0 +1,89 @@
+"""Pallas kernel validation (interpret mode): shape/dtype sweep, each cell
+asserted allclose against the pure-jnp ref.py oracle AND the numpy
+traversal oracle."""
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.quantize import QuantSpec, quantize_forest
+from repro.kernels.ops import pallas_gemm_predictor, pallas_qs_predictor
+from repro.kernels.ref import ref_gemm, ref_oracle, ref_qs
+
+SHAPE_SWEEP = [
+    # (n_trees, n_leaves, n_features, n_classes, batch)
+    (4, 8, 4, 1, 16),
+    (8, 16, 6, 1, 64),
+    (12, 32, 10, 3, 96),
+    (6, 64, 8, 2, 33),          # multi-word leafidx + ragged batch
+    (16, 32, 784, 10, 40),      # wide features (mnist-like)
+    (3, 16, 5, 1, 1),           # single instance
+]
+
+
+def _forest(T, L, d, C, seed=0):
+    return core.random_forest_ir(T, L, d, n_classes=C, seed=seed,
+                                 full=(seed % 2 == 0))
+
+
+@pytest.mark.parametrize("T,L,d,C,B", SHAPE_SWEEP)
+def test_pallas_qs_matches_ref(T, L, d, C, B):
+    forest = _forest(T, L, d, C, seed=T)
+    X = np.random.default_rng(B).normal(0, 1.3, size=(B, d))
+    pred = pallas_qs_predictor(forest, block_b=32, block_t=4)
+    got = pred.predict(X)
+    np.testing.assert_allclose(got, ref_qs(forest, X), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got, ref_oracle(forest, X), rtol=1e-4,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("T,L,d,C,B", SHAPE_SWEEP[:4])
+def test_pallas_gemm_matches_ref(T, L, d, C, B):
+    forest = _forest(T, L, d, C, seed=T + 1)
+    X = np.random.default_rng(B + 1).normal(0, 1.3, size=(B, d))
+    pred = pallas_gemm_predictor(forest, block_b=32, block_t=4)
+    got = pred.predict(X)
+    np.testing.assert_allclose(got, ref_gemm(forest, X), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(got, ref_oracle(forest, X), rtol=1e-4,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [16, 8])
+def test_pallas_qs_quantized(bits, trained_rf, magic_ds):
+    forest = core.from_random_forest(trained_rf)
+    qf = quantize_forest(forest, magic_ds.X_train, spec=QuantSpec(bits=bits))
+    X = magic_ds.X_test[:64]
+    pred = pallas_qs_predictor(qf, block_b=32, block_t=8)
+    got = pred.predict(X)
+    np.testing.assert_allclose(got, ref_oracle(qf, X), rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_block_shape_independence(small_forest):
+    """Result must not depend on the BlockSpec tiling."""
+    X = np.random.default_rng(7).normal(size=(70, small_forest.n_features))
+    ref = ref_qs(small_forest, X)
+    for bb, bt in [(8, 2), (32, 4), (128, 8)]:
+        got = pallas_qs_predictor(small_forest, block_b=bb,
+                                  block_t=bt).predict(X)
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"block_b={bb} block_t={bt}")
+
+
+def test_pallas_padding_batch_edge(small_forest):
+    """Batch not a multiple of block_b: padded rows must not leak."""
+    rng = np.random.default_rng(8)
+    X = rng.normal(size=(5, small_forest.n_features))
+    got = pallas_qs_predictor(small_forest, block_b=64).predict(X)
+    assert got.shape == (5, 1)
+    np.testing.assert_allclose(got, ref_qs(small_forest, X), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_pallas_tree_padding(class_forest):
+    """Tree count not a multiple of block_t: zero-leaf padding trees must
+    contribute exactly nothing."""
+    X = np.random.default_rng(9).normal(size=(16, class_forest.n_features))
+    got = pallas_qs_predictor(class_forest, block_b=16,
+                              block_t=8).predict(X)   # 12 trees → pad to 16
+    np.testing.assert_allclose(got, ref_qs(class_forest, X), rtol=1e-5,
+                               atol=1e-6)

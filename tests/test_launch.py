@@ -1,0 +1,151 @@
+"""Launch layer: HLO collective parsing, input specs, shape applicability,
+mesh construction, MODEL_FLOPS accounting, tiny-mesh lowering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.specs import enc_len, input_specs
+
+
+# --------------------------------------------------------------------------- #
+# HLO collective parsing
+# --------------------------------------------------------------------------- #
+SYNTH_HLO = """
+HloModule jit_step
+
+%body (p: (f32[16,8])) -> (f32[16,8]) {
+  %ag = f32[16,8]{1,0} all-gather(f32[4,8]{1,0} %x), dimensions={0}
+  %ar = bf16[32]{0} all-reduce(bf16[32]{0} %y), to_apply=%add
+  ROOT %t = tuple(%ag)
+}
+
+%cond (p: (f32[16,8])) -> pred[] {
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[16,8]) -> f32[16,8] {
+  %w = (f32[16,8]) while((f32[16,8]) %init), condition=%cond, body=%body
+  %rs = f32[8,8]{1,0} reduce-scatter(f32[16,8]{1,0} %a), dimensions={0}
+  %cp = f32[128]{0} collective-permute(f32[128]{0} %b), source_target_pairs={{0,1}}
+  ROOT %r = f32[16,8] get-tuple-element(%w), index=0
+}
+"""
+
+
+def test_collective_bytes_synthetic():
+    st = collective_bytes(SYNTH_HLO)
+    # while body ×10: all-gather 16*8*4 = 512 B ×10; all-reduce 32*2 ×10
+    assert st.per_op["all-gather"] == 512 * 10
+    assert st.per_op["all-reduce"] == 64 * 10
+    assert st.per_op["reduce-scatter"] == 8 * 8 * 4
+    assert st.per_op["collective-permute"] == 128 * 4
+    # link weights: all-reduce counts 2× (reduce-scatter + all-gather phases)
+    assert st.link_bytes == 512 * 10 + 2 * 64 * 10 + 256 + 512
+    assert st.counts["all-gather"] == 1
+
+
+def test_collective_bytes_empty():
+    st = collective_bytes("ENTRY %main () -> f32[] { ROOT %c = f32[] constant(0) }")
+    assert st.total_bytes == 0 and st.link_bytes == 0
+
+
+def test_collective_bytes_real_lowering():
+    """Parse an actual jax lowering with a psum over a real 1-device mesh."""
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def f(x):
+        return jax.lax.with_sharding_constraint(
+            x.sum(), NamedSharding(mesh, P()))
+
+    with mesh:
+        xs = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+        txt = jax.jit(f, in_shardings=NamedSharding(mesh, P("data"))) \
+            .lower(xs).compile().as_text()
+    st = collective_bytes(txt)          # may be 0 collectives on 1 device —
+    assert st.total_bytes >= 0          # just must not crash on real HLO
+
+
+# --------------------------------------------------------------------------- #
+# input specs / applicability
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_specs_all_cells(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        assert "sub-quadratic" in reason or "quadratic" in reason
+        return
+    specs = input_specs(cfg, shape)
+    B = shape.global_batch
+    if shape.kind == "decode":
+        assert specs["tokens"].shape == (B, 1)
+    else:
+        assert specs["tokens"].shape == (B, shape.seq_len)
+    assert specs["tokens"].dtype == jnp.int32
+    if cfg.family == "encdec" and shape.kind != "decode":
+        se = enc_len(cfg, shape.seq_len)
+        assert specs["enc_embeds"].shape == (B, se, cfg.d_model)
+
+
+def test_long500k_skips_are_exactly_the_full_attn_archs():
+    skipped = [a for a in ARCH_IDS
+               if not shape_applicable(get_config(a), SHAPES["long_500k"])[0]]
+    assert sorted(skipped) == sorted([
+        "chameleon_34b", "smollm_360m", "phi3_mini_3_8b",
+        "command_r_plus_104b", "starcoder2_3b", "phi3_5_moe_42b",
+        "grok_1_314b", "seamless_m4t_large_v2"])
+
+
+def test_model_flops_accounting():
+    from repro.launch.dryrun import _model_flops
+    cfg = get_config("phi3_mini_3_8b")
+    tr = SHAPES["train_4k"]
+    got = _model_flops(cfg, tr)
+    N = cfg.param_count()
+    assert got == pytest.approx(6 * N * tr.global_batch * tr.seq_len)
+    dec = SHAPES["decode_32k"]
+    assert _model_flops(cfg, dec) == pytest.approx(2 * N * dec.global_batch)
+    # MoE uses active params
+    moe = get_config("grok_1_314b")
+    assert _model_flops(moe, tr) < 6 * moe.param_count() * tr.global_batch \
+        * tr.seq_len
+
+
+def test_debug_mesh_and_production_mesh_shapes():
+    from repro.launch.mesh import make_debug_mesh
+    m = make_debug_mesh(1, 1)
+    assert m.axis_names == ("data", "model")
+    assert m.shape["data"] == 1
+    # production mesh construction requires 256 devices — only check the
+    # shape contract here (dryrun.py exercises the real thing)
+
+
+def test_tiny_mesh_lowering_with_shardings():
+    """End-to-end: reduced config lowers + compiles on the 1-device debug
+    mesh with the same sharding-resolution code path as production."""
+    from repro.distributed.sharding import data_spec, tree_shardings
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models.model import Model
+    from jax.sharding import NamedSharding
+
+    cfg = get_config("smollm_360m").reduced()
+    model = Model(cfg, q_chunk=16, ssd_chunk=8, loss_chunk=16, remat=True)
+    mesh = make_debug_mesh(1, 1)
+    p_shapes = jax.eval_shape(
+        lambda k: model.init_params(k, jnp.float32), jax.random.PRNGKey(0))
+    shards = tree_shardings(p_shapes, model.param_logical_specs(), mesh)
+    toks = jax.ShapeDtypeStruct((2, 32), jnp.int32)
+    tok_shard = NamedSharding(mesh, data_spec(mesh, 2, 2))
+    with mesh:
+        lowered = jax.jit(model.loss_fn, in_shardings=(shards, tok_shard)) \
+            .lower(p_shapes, toks)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    assert float(cost.get("flops", 0)) > 0

@@ -1,0 +1,134 @@
+"""Property-based tests (hypothesis) over the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+from repro.core.forest import WORD, _interval_bits
+from repro.core.quickscorer import compile_qs, eval_batch
+from repro.core.rapidscorer import compile_rs, eval_batch as rs_eval
+from repro.core.baselines import (compile_gemm, compile_native, eval_gemm,
+                                  eval_native)
+from repro.core.quantize import QuantSpec, quantize_forest, quantize_inputs
+
+import jax.numpy as jnp
+
+
+forest_params = st.tuples(
+    st.integers(1, 6),           # n_trees
+    st.sampled_from([2, 4, 8, 16, 33, 64]),   # n_leaves
+    st.integers(1, 12),          # n_features
+    st.integers(1, 4),           # n_classes
+    st.integers(0, 10_000),      # seed
+    st.booleans(),               # full/unbalanced
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(forest_params, st.integers(1, 32), st.integers(0, 10_000))
+def test_all_engines_agree_with_oracle(fp, batch, xseed):
+    T, L, d, C, seed, full = fp
+    forest = core.random_forest_ir(T, L, d, n_classes=C, seed=seed,
+                                   full=full)
+    X = np.random.default_rng(xseed).normal(0, 2.0, size=(batch, d))
+    expect = forest.predict_oracle(X)
+    Xj = jnp.asarray(X)
+    qs = np.asarray(eval_batch(compile_qs(forest), Xj))
+    rs = np.asarray(rs_eval(compile_rs(forest), Xj))
+    nat = np.asarray(eval_native(compile_native(forest), Xj))
+    gem = np.asarray(eval_gemm(compile_gemm(forest), Xj))
+    np.testing.assert_allclose(qs, expect, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(rs, expect, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(nat, expect, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gem, expect, rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 64), st.integers(0, 64), st.integers(1, 2))
+def test_interval_bits_popcount(lo_raw, hi_raw, W):
+    lo, hi = sorted((lo_raw % (W * WORD), hi_raw % (W * WORD)))
+    bits = _interval_bits(lo, hi, W)
+    total = sum(bin(int(w)).count("1") for w in bits)
+    assert total == hi - lo
+    # every bit in [lo, hi) is set
+    for j in range(lo, hi):
+        assert (int(bits[j // WORD]) >> (j % WORD)) & 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(forest_params, st.integers(0, 10_000), st.sampled_from([16, 8]))
+def test_quantized_engines_internally_consistent(fp, xseed, bits):
+    """All engines must agree EXACTLY on a quantized forest (integer
+    comparisons have no float slack)."""
+    T, L, d, C, seed, full = fp
+    forest = core.random_forest_ir(T, L, d, n_classes=C, seed=seed,
+                                   full=full)
+    qf = quantize_forest(forest, spec=QuantSpec(bits=bits))
+    X = np.random.default_rng(xseed).normal(0, 2.0, size=(8, d))
+    Xq = jnp.asarray(quantize_inputs(qf, X))
+    qs = np.asarray(eval_batch(compile_qs(qf), Xq))
+    rs = np.asarray(rs_eval(compile_rs(qf), Xq))
+    nat = np.asarray(eval_native(compile_native(qf), Xq))
+    np.testing.assert_array_equal(qs, rs)
+    np.testing.assert_array_equal(qs, nat)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 1000), st.floats(-100, 100),
+       st.floats(0.01, 10.0))
+def test_quantization_preserves_comparisons(seed, t, span):
+    """Order consistency: if q(x) > q(t) then x > t (floor is monotone)."""
+    rng = np.random.default_rng(seed)
+    xs = t + rng.uniform(-span, span, size=64)
+    s = 2.0 ** 15
+    lo, hi = min(xs.min(), t), max(xs.max(), t)
+    if hi - lo < 1e-9:
+        return
+    nx = (xs - lo) / (hi - lo)
+    nt = (t - lo) / (hi - lo)
+    qx, qt = np.floor(s * nx), np.floor(s * nt)
+    # monotone: quantized comparison can only flip pairs within one grid cell
+    flip = (qx > qt) != (xs > t)
+    assert (np.abs(nx[flip] - nt) <= 1.0 / s + 1e-12).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5), st.sampled_from([4, 8, 16]), st.integers(1, 8),
+       st.integers(0, 99))
+def test_merge_never_changes_predictions(T, L, d, seed):
+    """Node merging is a pure re-indexing: predictions are identical even
+    with artificially duplicated thresholds."""
+    forest = core.random_forest_ir(T, L, d, seed=seed)
+    # force duplicates: round thresholds to one decimal
+    forest.threshold = np.round(forest.threshold, 1)
+    X = np.random.default_rng(seed).normal(size=(16, d))
+    qs = np.asarray(eval_batch(compile_qs(forest), jnp.asarray(X)))
+    rs = np.asarray(rs_eval(compile_rs(forest), jnp.asarray(X)))
+    np.testing.assert_array_equal(qs, rs)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 500))
+def test_exit_leaf_is_reached_leaf(seed):
+    """The QuickScorer exit leaf equals the leaf the plain traversal
+    reaches, for every (instance, tree)."""
+    from repro.core.quickscorer import exit_leaf, mask_reduce
+    forest = core.random_forest_ir(3, 16, 5, seed=seed, full=False)
+    X = np.random.default_rng(seed + 1).normal(size=(8, 5))
+    qs = compile_qs(forest)
+    Xj = jnp.asarray(X)
+    cond = (Xj[:, qs.feat] > qs.thr[None]) & qs.valid[None]
+    leafidx = mask_reduce(cond, qs.masks, qs.init_idx)
+    leaves = np.asarray(exit_leaf(leafidx))            # (B, T)
+    # numpy traversal per tree
+    for t in range(forest.n_trees):
+        for i in range(X.shape[0]):
+            node = 0
+            while True:
+                f = forest.feature[t, node]
+                nxt = (forest.left[t, node]
+                       if X[i, f] <= forest.threshold[t, node]
+                       else forest.right[t, node])
+                if nxt < 0:
+                    assert leaves[i, t] == -nxt - 1
+                    break
+                node = nxt

@@ -1,0 +1,131 @@
+"""Fixed-point quantization (paper §5): semantics + accuracy invariants."""
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.quantize import (QuantSpec, feature_ranges,
+                                 normalize_features, quantize_forest,
+                                 quantize_inputs)
+
+
+def test_qspec_defaults():
+    s = QuantSpec()
+    assert s.default_scale == 2 ** 15 and s.dtype == np.int16
+    s8 = QuantSpec(bits=8)
+    assert s8.default_scale == 2 ** 7 and s8.dtype == np.int8
+
+
+def test_quantize_dtype_and_metadata(small_forest):
+    qf = quantize_forest(small_forest)
+    assert qf.threshold.dtype == np.int16
+    assert qf.leaf_value.dtype == np.int32
+    assert qf.quant_scale == 2 ** 15
+    assert qf.quant_bits == 16
+    # original untouched
+    assert small_forest.threshold.dtype == np.float32
+    assert small_forest.quant_scale is None
+
+
+def test_double_quantize_rejected(small_forest):
+    qf = quantize_forest(small_forest)
+    with pytest.raises(AssertionError):
+        quantize_forest(qf)
+
+
+def test_splits_only_and_leaves_only(small_forest):
+    qs_only = quantize_forest(small_forest,
+                              spec=QuantSpec(quantize_leaves=False))
+    assert qs_only.threshold.dtype == np.int16
+    assert qs_only.leaf_value.dtype == np.float32
+    ql_only = quantize_forest(small_forest,
+                              spec=QuantSpec(quantize_splits=False))
+    assert ql_only.threshold.dtype == np.float32
+    assert ql_only.leaf_value.dtype == np.int32
+    # leaves-only: raw inputs pass through untouched
+    X = np.random.default_rng(0).normal(size=(4, small_forest.n_features))
+    np.testing.assert_array_equal(quantize_inputs(ql_only, X), X)
+
+
+def test_normalization_order_preserving():
+    rng = np.random.default_rng(0)
+    X = rng.normal(0, 10, size=(100, 3))
+    lo, hi = X.min(0), X.max(0)
+    Xn = normalize_features(X, lo, hi)
+    assert Xn.min() >= 0.0 and Xn.max() <= 1.0
+    for f in range(3):
+        order = np.argsort(X[:, f])
+        assert (np.diff(Xn[order, f]) >= 0).all()
+
+
+def test_quantized_prediction_close_to_float(trained_rf, magic_ds):
+    """Paper Table 3: quantization changes accuracy by ≲ tenths of a point
+    on well-scaled data."""
+    forest = core.from_random_forest(trained_rf)
+    qf = quantize_forest(forest, magic_ds.X_train)
+    X, y = magic_ds.X_test, magic_ds.y_test
+    p_f = core.compile_forest(forest, engine="bitvector").predict_class(X)
+    p_q = core.compile_forest(qf, engine="bitvector").predict_class(X)
+    acc_f = (p_f == y).mean()
+    acc_q = (p_q == y).mean()
+    assert abs(acc_f - acc_q) < 0.02
+
+
+def test_leaf_scale_auto_shrink():
+    """GBT leaves can exceed 1.0; scale must auto-shrink to fit the word."""
+    f = core.random_forest_ir(4, 8, 4, seed=5)
+    f.leaf_value *= 100.0                 # huge leaves
+    qf = quantize_forest(f)
+    assert qf.leaf_scale < 2 ** 15
+    imax = np.abs(qf.leaf_value).max()
+    assert imax <= 2 ** 31 - 1            # stored in int32 accumulator space
+    # leaves-only quantization isolates the rounding error: traversal is
+    # unchanged, so |err| ≤ T / s_leaf per class
+    ql = quantize_forest(f, spec=QuantSpec(quantize_splits=False))
+    X = np.random.default_rng(1).normal(size=(32, 4))
+    from repro.kernels.ref import ref_oracle
+    got = ref_oracle(ql, X)
+    expect = f.predict_oracle(X)
+    bound = f.n_trees / ql.leaf_scale + 1e-9
+    assert np.abs(got - expect).max() <= bound
+
+
+def test_feature_ranges_from_forest_thresholds(small_forest):
+    lo, hi = feature_ranges(small_forest, None)
+    assert lo.shape == (small_forest.n_features,)
+    assert (hi >= lo).all()
+
+
+def test_quantize_inputs_clips_outliers(trained_rf, magic_ds):
+    forest = quantize_forest(core.from_random_forest(trained_rf),
+                             magic_ds.X_train)
+    X = magic_ds.X_test.copy()
+    X[0] = 1e9                               # outlier beyond training range
+    Xq = quantize_inputs(forest, X)
+    assert Xq.max() <= 2 ** 15 - 1
+    assert Xq.min() >= -(2 ** 15)
+
+
+def test_int8_beyond_paper(trained_rf, magic_ds):
+    forest = core.from_random_forest(trained_rf)
+    qf = quantize_forest(forest, magic_ds.X_train, spec=QuantSpec(bits=8))
+    assert qf.threshold.dtype == np.int8
+    X, y = magic_ds.X_test, magic_ds.y_test
+    acc_f = (core.compile_forest(forest).predict_class(X) == y).mean()
+    acc_q = (core.compile_forest(qf).predict_class(X) == y).mean()
+    assert abs(acc_f - acc_q) < 0.05          # int8 is coarser but usable
+
+
+def test_eeg_merging_collapse():
+    """Paper Table 4: heavy-tailed features → quantization collapses unique
+    thresholds (EEG), while bounded features (mnist-like) are unaffected."""
+    from repro.data import datasets
+    from repro.trees.random_forest import RandomForest, RandomForestConfig
+    eeg = datasets.load("eeg", n=2000)
+    rf = RandomForest(RandomForestConfig(n_trees=32, max_leaves=16,
+                                         seed=0)).fit(eeg.X_train,
+                                                      eeg.y_train)
+    forest = core.from_random_forest(rf)
+    frac_float = core.merge_stats(forest)
+    qf = quantize_forest(forest, eeg.X_train)
+    frac_quant = core.merge_stats(qf)
+    assert frac_quant < frac_float * 0.9      # ≥10% collapse

@@ -1,0 +1,111 @@
+"""Tree-training substrate: CART, Random Forest, Gradient Boosting."""
+import numpy as np
+import pytest
+
+from repro.data import datasets
+from repro.trees.cart import Binner, CartConfig, grow_tree
+from repro.trees.gradient_boosting import (GradientBoosting,
+                                           GradientBoostingConfig)
+from repro.trees.random_forest import RandomForest, RandomForestConfig
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return datasets.load("magic", n=2000)
+
+
+def test_binner_roundtrip(ds):
+    b = Binner.fit(ds.X_train, 32)
+    Xb = b.transform(ds.X_train)
+    assert Xb.dtype == np.int16
+    assert Xb.min() >= 0
+    for f in range(ds.n_features):
+        assert Xb[:, f].max() <= len(b.edges[f])
+
+
+def test_binner_threshold_consistency(ds):
+    """'bin <= b' and 'x <= threshold(f, b)' must agree on the data."""
+    b = Binner.fit(ds.X_train, 16)
+    Xb = b.transform(ds.X_train)
+    for f in range(min(4, ds.n_features)):
+        for bb in range(len(b.edges[f])):
+            t = b.threshold(f, bb)
+            np.testing.assert_array_equal(Xb[:, f] <= bb,
+                                          ds.X_train[:, f] <= t)
+
+
+def test_grow_tree_respects_limits(ds):
+    b = Binner.fit(ds.X_train, 32)
+    Xb = b.transform(ds.X_train)
+    rng = np.random.default_rng(0)
+    for max_leaves in (2, 8, 32):
+        t = grow_tree(Xb, b, CartConfig(max_leaves=max_leaves,
+                                        criterion="gini"),
+                      rng, y=ds.y_train, n_classes=2)
+        assert t.n_leaves <= max_leaves
+    t = grow_tree(Xb, b, CartConfig(max_leaves=64, max_depth=3,
+                                    criterion="gini"),
+                  rng, y=ds.y_train, n_classes=2)
+    assert t.max_depth_seen <= 3
+
+
+def test_tree_predict_fast_equals_slow(ds):
+    b = Binner.fit(ds.X_train, 32)
+    Xb = b.transform(ds.X_train)
+    rng = np.random.default_rng(1)
+    t = grow_tree(Xb, b, CartConfig(max_leaves=16, criterion="gini"),
+                  rng, y=ds.y_train, n_classes=2)
+    X = ds.X_test[:200]
+    np.testing.assert_allclose(t.predict(X), t.predict_slow(X))
+
+
+def test_rf_beats_majority(ds):
+    rf = RandomForest(RandomForestConfig(n_trees=32, max_leaves=32,
+                                         seed=0)).fit(ds.X_train, ds.y_train)
+    acc = (rf.predict(ds.X_test) == ds.y_test).mean()
+    majority = max(np.bincount(ds.y_test)) / len(ds.y_test)
+    assert acc > majority + 0.1
+
+
+def test_rf_proba_sums_to_one(ds):
+    rf = RandomForest(RandomForestConfig(n_trees=16, max_leaves=8,
+                                         seed=0)).fit(ds.X_train, ds.y_train)
+    p = rf.predict_proba(ds.X_test[:64])
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, rtol=1e-9)
+    assert (p >= 0).all()
+
+
+def test_gbt_l2_train_loss_decreases(ds):
+    y = ds.y_train.astype(np.float64)
+    losses = []
+    for n in (5, 20, 60):
+        gb = GradientBoosting(GradientBoostingConfig(
+            n_trees=n, max_leaves=8, objective="l2", seed=0)).fit(
+            ds.X_train, y)
+        losses.append(np.mean((gb.predict(ds.X_train) - y) ** 2))
+    assert losses[0] > losses[1] > losses[2]
+
+
+def test_gbt_logistic(ds):
+    gb = GradientBoosting(GradientBoostingConfig(
+        n_trees=40, max_leaves=8, objective="logistic", seed=0)).fit(
+        ds.X_train, ds.y_train)
+    acc = ((gb.predict(ds.X_test) > 0) == ds.y_test).mean()
+    assert acc > 0.75
+
+
+def test_gbt_softmax_multiclass():
+    mn = datasets.load("mnist", n=1500)
+    gb = GradientBoosting(GradientBoostingConfig(
+        n_trees=60, max_leaves=8, objective="softmax", seed=0)).fit(
+        mn.X_train, mn.y_train)
+    acc = (gb.predict(mn.X_test).argmax(1) == mn.y_test).mean()
+    assert acc > 0.5         # 10 classes, random = 0.1
+
+
+def test_rf_multiclass_mnist_like():
+    mn = datasets.load("mnist", n=1500)
+    rf = RandomForest(RandomForestConfig(n_trees=24, max_leaves=32,
+                                         seed=0)).fit(mn.X_train, mn.y_train)
+    acc = (rf.predict(mn.X_test) == mn.y_test).mean()
+    assert acc > 0.6

@@ -1,0 +1,60 @@
+"""run_loop fault-tolerance integration: straggler flagging and
+preemption-checkpoint, driven through the real loop."""
+import signal
+
+import pytest
+
+from repro.configs import get_config
+from repro.distributed import checkpoint as ckpt
+from repro.launch.train import Trainer, run_loop
+
+
+@pytest.fixture(scope="module")
+def tiny_trainer():
+    cfg = get_config("smollm_360m").reduced()
+
+    def make():
+        return Trainer(cfg, batch=2, seq_len=32)
+    return make
+
+
+def test_straggler_flagged_in_records(tiny_trainer, monkeypatch):
+    tr = tiny_trainer()
+    tr.init_state()
+    real_step = tr.train_step
+    count = {"n": 0}
+
+    import time as _time
+
+    def slow_sometimes():
+        count["n"] += 1
+        rec = real_step()
+        if count["n"] == 8:              # one injected straggler
+            _time.sleep(2.0)
+        return rec
+
+    monkeypatch.setattr(tr, "train_step", slow_sometimes)
+    records = run_loop(tr, steps=10, ckpt_dir=None, log_every=100)
+    stragglers = [r["step"] for r in records if r.get("straggler")]
+    assert stragglers == [8]
+
+
+def test_preemption_checkpoints_and_exits(tiny_trainer, tmp_path,
+                                          monkeypatch):
+    tr = tiny_trainer()
+    tr.init_state()
+    real_step = tr.train_step
+    count = {"n": 0}
+
+    def step_then_sigterm():
+        count["n"] += 1
+        rec = real_step()
+        if count["n"] == 3:
+            signal.raise_signal(signal.SIGTERM)   # delivered synchronously
+        return rec
+
+    monkeypatch.setattr(tr, "train_step", step_then_sigterm)
+    records = run_loop(tr, steps=100, ckpt_dir=str(tmp_path),
+                       ckpt_every=1000, log_every=100)
+    assert len(records) == 3                      # stopped early
+    assert ckpt.latest_step(str(tmp_path)) == 3   # checkpointed on the flag

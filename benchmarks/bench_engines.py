@@ -1,0 +1,104 @@
+"""Engine A/B harness: every XLA engine (and optionally the Pallas
+variants) timed on the same forests, with the bit-matmul vs seed-QS
+speedup called out — the acceptance gate for the MXU bit-matmul work.
+
+    PYTHONPATH=src python -m benchmarks.bench_engines            # table
+    PYTHONPATH=src python -m benchmarks.bench_engines --json     # + snapshot
+
+``--json`` writes ``BENCH_engines.json`` at the repo root (a perf
+trajectory for future PRs) in addition to the usual CSV under
+``experiments/bench/``.  Shapes follow REPRO_BENCH_SCALE; every scale
+includes at least one forest with >= 64 leaves/tree, where eliminating
+``mask_reduce``'s (B, T, N, W) intermediate matters most.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro import core
+from repro.core import engine_select
+
+from .common import Table, save_json, scale_pick, time_predict, \
+    us_per_instance
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SNAPSHOT = os.path.join(REPO_ROOT, "BENCH_engines.json")
+
+
+def shapes():
+    # (n_trees, n_leaves, n_features, batch)
+    return scale_pick(
+        [(100, 32, 136, 256), (200, 64, 136, 512)],
+        [(100, 32, 136, 256), (200, 64, 136, 512), (400, 64, 136, 512)],
+        [(400, 32, 136, 1024), (1024, 64, 136, 1024),
+         (1024, 128, 136, 1024)],
+    )
+
+
+def run(engines=None, repeats: int = 5):
+    engines = tuple(engines) if engines else engine_select.default_engines()
+    cols = ["trees", "leaves", "batch"] + [f"{e}_us" for e in engines] + \
+        ["bitmm_vs_qs"]
+    t = Table("bench_engines", cols)
+    records = []
+    for (T, L, d, B) in shapes():
+        forest = core.random_forest_ir(T, L, d, seed=T + L)
+        X = np.random.default_rng(0).normal(0, 1, size=(B, d))
+        us = {}
+        for e in engines:
+            pred = engine_select.ENGINE_FACTORIES[e](forest)
+            us[e] = us_per_instance(
+                time_predict(lambda: pred.predict(X), repeats=repeats), B)
+        speedup = us["qs"] / us["qs-bitmm"] \
+            if "qs" in us and "qs-bitmm" in us else float("nan")
+        t.add(T, L, B, *(f"{us[e]:.1f}" for e in engines),
+              f"{speedup:.2f}x")
+        records.append({"trees": T, "leaves": L, "features": d, "batch": B,
+                        "us_per_instance": us,
+                        "speedup_bitmm_vs_qs": speedup})
+    return t, records
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_engines.json at the repo root")
+    ap.add_argument("--engines", type=str, default=None,
+                    help="comma-separated engine subset "
+                         f"(default: {engine_select.default_engines()})")
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    engines = args.engines.split(",") if args.engines else None
+    if engines:
+        unknown = [e for e in engines
+                   if e not in engine_select.ENGINE_FACTORIES]
+        if unknown:
+            ap.error(f"unknown engine(s) {unknown}; choose from "
+                     f"{sorted(engine_select.ENGINE_FACTORIES)}")
+    tbl, records = run(engines=engines, repeats=args.repeats)
+    tbl.print()
+    tbl.save()
+    best = max((r["speedup_bitmm_vs_qs"] for r in records
+                if r["leaves"] >= 64), default=float("nan"))
+    print(f"\nbitmm vs seed-QS speedup on L>=64 forests: best {best:.2f}x")
+    if args.json:
+        snapshot = {
+            "scale": os.environ.get("REPRO_BENCH_SCALE", "default"),
+            "records": records,
+            "best_bitmm_vs_qs_L64": best,
+        }
+        save_json("bench_engines_raw", snapshot)
+        with open(SNAPSHOT, "w") as f:
+            json.dump(snapshot, f, indent=1, default=float)
+        print(f"snapshot written to {SNAPSHOT}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

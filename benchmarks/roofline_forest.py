@@ -34,7 +34,8 @@ def run() -> list[dict]:
     from repro.core.quickscorer import compile_qs, eval_batch as qs_eval
     from repro.core.baselines import compile_gemm, eval_gemm
     from repro.core.quantize import QuantSpec
-    from repro.launch.hlo_analysis import collective_bytes
+    from repro.launch.hlo_analysis import (collective_bytes,
+                                           normalize_cost_analysis)
     from repro.launch.mesh import make_production_mesh
     from repro.launch.dryrun import PEAK_FLOPS, HBM_BW, ICI_BW
 
@@ -76,7 +77,7 @@ def run() -> list[dict]:
                     out_shardings=NamedSharding(
                         mesh, P(("data", "model"), None))).lower(xs)
                 comp = lowered.compile()
-            cost = comp.cost_analysis()
+            cost = normalize_cost_analysis(comp.cost_analysis())
             coll = collective_bytes(comp.as_text())
             flops = float(cost.get("flops", 0.0))
             byt = float(cost.get("bytes accessed", 0.0))
@@ -142,7 +143,7 @@ def run() -> list[dict]:
                 xs, a_specs["feat"], a_specs["thr"], a_specs["valid"],
                 a_specs["masks"], a_specs["init_idx"],
                 a_specs["leaf_val"]).compile()
-        cost = comp.cost_analysis()
+        cost = normalize_cost_analysis(comp.cost_analysis())
         coll = collective_bytes(comp.as_text())
         terms = {
             "compute_s": float(cost.get("flops", 0)) / PEAK_FLOPS,

@@ -1,15 +1,20 @@
 """Benchmark driver: one function per paper table/figure + the TPU
-roofline benches.
+roofline benches + the engine A/B harness.
 
     PYTHONPATH=src python -m benchmarks.run            # default scale
     REPRO_BENCH_SCALE=quick  python -m benchmarks.run  # CI-sized
     REPRO_BENCH_SCALE=full   python -m benchmarks.run  # paper-sized (hours)
+    PYTHONPATH=src python -m benchmarks.run --json     # + BENCH_engines.json
+
+``--json`` makes the engine bench write a ``BENCH_engines.json`` perf
+snapshot at the repo root, so successive PRs accumulate a trajectory.
 
 The forest-roofline bench needs 512 placeholder devices, so it runs as a
 subprocess (this process keeps the single real CPU device).
 """
 from __future__ import annotations
 
+import argparse
 import os
 import subprocess
 import sys
@@ -19,11 +24,17 @@ from .common import SCALE
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="write the BENCH_engines.json perf snapshot")
+    args = ap.parse_args()
+
     t0 = time.time()
     print(f"[bench] scale={SCALE}")
 
-    from . import (fig1_speedup, table2_ranking, table3_quant_accuracy,
-                   table4_merging, table5_classification)
+    from . import (bench_engines, fig1_speedup, table2_ranking,
+                   table3_quant_accuracy, table4_merging,
+                   table5_classification)
 
     for name, mod in [("table2_ranking", table2_ranking),
                       ("table3_quant_accuracy", table3_quant_accuracy),
@@ -34,6 +45,11 @@ def main() -> None:
         print(f"\n[bench] running {name} ...", flush=True)
         mod.main()
         print(f"[bench] {name} done in {time.time()-t:.1f}s", flush=True)
+
+    t = time.time()
+    print("\n[bench] running bench_engines ...", flush=True)
+    bench_engines.main(["--json"] if args.json else [])
+    print(f"[bench] bench_engines done in {time.time()-t:.1f}s", flush=True)
 
     # roofline (512-device dry-run) in a subprocess
     print("\n[bench] running roofline_forest (subprocess) ...", flush=True)

@@ -1,6 +1,8 @@
 """Batched tree-ensemble serving: Poisson request stream through the
-micro-batcher into a quantized RapidScorer engine — the paper's IoT
-workload as a service.
+micro-batcher into the autotuned fastest engine for this forest — the
+paper's IoT workload as a service, with its "best implementation depends
+on the forest and the device" conclusion applied automatically
+(docs/ENGINES.md).
 
     PYTHONPATH=src python examples/serve_forest.py
 """
@@ -17,14 +19,18 @@ def main() -> None:
     rf = RandomForest(RandomForestConfig(n_trees=128, max_leaves=64,
                                          seed=0)).fit(ds.X_train, ds.y_train)
     forest = core.quantize_forest(core.from_random_forest(rf), ds.X_train)
-    pred = core.compile_forest(forest, engine="rapidscorer")
+
+    # autotune: microbenchmark the engine matrix at the dispatch batch
+    # size, cache the winner (JSON on disk — restarts skip the sweep)
+    server = ForestServer.from_forest(forest, max_batch=128, max_wait_ms=2.0)
+    print(f"autotuned engine: {server.engine_choice.engine} "
+          f"(cached: {server.engine_choice.from_cache})")
+    pred = server.predictor
 
     # warm the jit cache for the batch shapes the server will see, so
     # latency percentiles measure serving, not compilation
     for b in (1, 128):
         pred.predict(ds.X_test[:b])
-
-    server = ForestServer(pred, max_batch=128, max_wait_ms=2.0)
     rng = np.random.default_rng(0)
     n_requests = 2000
     arrivals = np.cumsum(rng.exponential(1 / 5000.0, size=n_requests))

@@ -12,7 +12,7 @@ forest = core.from_random_forest(rf)
 X = ds.X_test[:64]
 oracle = forest.predict_oracle(X)
 
-for engine in ("bitvector", "rapidscorer", "native", "unrolled", "gemm"):
+for engine in ("bitvector", "bitmm", "rapidscorer", "native", "unrolled", "gemm"):
     pred = core.compile_forest(forest, engine=engine)
     got = pred.predict(X)
     err = np.abs(got - oracle).max()
@@ -25,7 +25,7 @@ print(f"{'scalar-QS':12s} max_err={np.abs(sc - oracle[:8]).max():.2e}")
 # quantized
 qf = core.quantize_forest(forest, ds.X_train)
 oq = qf.predict_oracle(core.quantize_inputs(qf, X)) / core.leaf_scale(qf)
-for engine in ("bitvector", "rapidscorer", "native", "gemm"):
+for engine in ("bitvector", "bitmm", "rapidscorer", "native", "gemm"):
     pred = core.compile_forest(qf, engine=engine)
     got = pred.predict(X)
     err = np.abs(got - oq).max()

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verify: run the full test suite with the src layout on the path.
+#   scripts/test.sh              # whole suite
+#   scripts/test.sh tests/test_bitmm.py -k quantized
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

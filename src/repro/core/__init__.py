@@ -13,15 +13,17 @@ from .forest import (Forest, from_gradient_boosting, from_random_forest,
                      from_trees, random_forest_ir)
 from .quantize import (QuantSpec, feature_ranges, leaf_scale,
                        normalize_features, quantize_forest, quantize_inputs)
-from .quickscorer import (CompiledQS, QSPredictor, compile_qs, eval_batch,
-                          eval_scalar_numpy, exit_leaf)
+from .quickscorer import (BitMMPredictor, CompiledBitMM, CompiledQS,
+                          QSPredictor, compile_qs, compile_qs_bitmm,
+                          eval_batch, eval_batch_bitmm, eval_scalar_numpy,
+                          exit_leaf)
 from .rapidscorer import (CompiledRS, RSPredictor, compile_rs, merge_nodes,
                           merge_stats)
 from .baselines import (BaselinePredictor, compile_gemm, compile_native,
                         eval_gemm, eval_native, gemm_predictor,
                         native_predictor)
 
-ENGINES = ("bitvector", "rapidscorer", "native", "unrolled", "gemm")
+ENGINES = ("bitvector", "bitmm", "rapidscorer", "native", "unrolled", "gemm")
 
 
 def compile_forest(forest: Forest, engine: str = "bitvector",
@@ -36,11 +38,16 @@ def compile_forest(forest: Forest, engine: str = "bitvector",
         from ..kernels import ops
         if engine == "bitvector":
             return ops.pallas_qs_predictor(forest, **kw)
+        if engine == "bitmm":
+            return ops.pallas_bitmm_predictor(forest, **kw)
         if engine == "gemm":
             return ops.pallas_gemm_predictor(forest, **kw)
-        raise ValueError(f"pallas backend supports bitvector|gemm, got {engine}")
+        raise ValueError(
+            f"pallas backend supports bitvector|bitmm|gemm, got {engine}")
     if engine == "bitvector":
         return QSPredictor(compile_qs(forest))
+    if engine == "bitmm":
+        return BitMMPredictor(compile_qs_bitmm(forest, **kw))
     if engine == "rapidscorer":
         return RSPredictor(compile_rs(forest))
     if engine == "native":
@@ -57,6 +64,8 @@ __all__ = [
     "random_forest_ir", "QuantSpec", "quantize_forest", "quantize_inputs",
     "feature_ranges", "normalize_features", "leaf_scale",
     "CompiledQS", "compile_qs", "QSPredictor", "eval_batch",
+    "CompiledBitMM", "compile_qs_bitmm", "BitMMPredictor",
+    "eval_batch_bitmm",
     "eval_scalar_numpy", "exit_leaf", "CompiledRS", "compile_rs",
     "RSPredictor", "merge_nodes", "merge_stats", "BaselinePredictor",
     "compile_native", "compile_gemm", "eval_native", "eval_gemm",

@@ -1,0 +1,206 @@
+"""Per-forest engine autotuner — the paper's conclusion as an API.
+
+The paper's central finding is that the fastest tree-traversal
+implementation depends on both the forest shape and the target hardware.
+``choose(forest, batch)`` operationalises that: it microbenchmarks every
+candidate engine on the actual forest at the caller's (bucketed) batch
+size, returns the winner, and caches the decision — in memory for the
+process, and as JSON on disk so later processes (and the serving path,
+``inference.server.ForestServer.from_forest``) skip the sweep entirely.
+
+Cache key: ``(jax backend, n_trees, n_leaves, n_classes, n_features,
+max_depth, threshold dtype, batch bucket)``.  Runtime is independent of
+the learned values, so device + shape/structure + dtype fully determine
+the ranking — and a winner measured on CPU is never replayed on TPU (or
+vice versa).
+
+Pallas engines run in interpret mode on CPU (orders of magnitude slower
+than compiled XLA), so they only enter the candidate set on a real TPU
+backend — or explicitly via ``engines=``/``include_pallas=True``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from .forest import Forest
+
+# autotuner engine name → (core.compile_forest engine, backend); one
+# dispatch table, so new engines register once in core/__init__.py and
+# appear here with only a name-pair entry.
+ENGINE_SPECS: dict[str, tuple[str, str]] = {
+    "qs": ("bitvector", "jax"),
+    "qs-bitmm": ("bitmm", "jax"),
+    "rapidscorer": ("rapidscorer", "jax"),
+    "gemm": ("gemm", "jax"),
+    "native": ("native", "jax"),
+    "unrolled": ("unrolled", "jax"),
+    "pallas-qs": ("bitvector", "pallas"),
+    "pallas-bitmm": ("bitmm", "pallas"),
+    "pallas-gemm": ("gemm", "pallas"),
+}
+
+
+def _make_factory(name: str) -> Callable[[Forest], object]:
+    engine, backend = ENGINE_SPECS[name]
+
+    def factory(forest: Forest):
+        from . import compile_forest
+        kw = {"interpret": _interpret()} if backend == "pallas" else {}
+        return compile_forest(forest, engine=engine, backend=backend, **kw)
+
+    return factory
+
+
+ENGINE_FACTORIES: dict[str, Callable[[Forest], object]] = {
+    name: _make_factory(name) for name in ENGINE_SPECS
+}
+
+XLA_ENGINES = ("qs", "qs-bitmm", "rapidscorer", "gemm", "native", "unrolled")
+PALLAS_ENGINES = ("pallas-qs", "pallas-bitmm", "pallas-gemm")
+
+
+def _on_tpu() -> bool:
+    import jax
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def default_engines(include_pallas: Optional[bool] = None) -> tuple:
+    if include_pallas is None:
+        include_pallas = _on_tpu()
+    return XLA_ENGINES + PALLAS_ENGINES if include_pallas else XLA_ENGINES
+
+
+def bucket_batch(batch: int) -> int:
+    """Next power of two — one autotune decision per batch octave."""
+    return 1 << max(int(batch) - 1, 0).bit_length()
+
+
+def shape_key(forest: Forest, batch_bucket: int) -> str:
+    # max_depth is part of the structure key: native/unrolled run
+    # O(depth) iterations and bitmm's field packing widens with depth, so
+    # a balanced and a chain-shaped forest with identical T/L/C/d rank
+    # engines very differently.
+    import jax
+    return (f"{jax.default_backend()}"
+            f"_T{forest.n_trees}_L{forest.n_leaves}_C{forest.n_classes}"
+            f"_d{forest.n_features}_D{forest.max_depth}"
+            f"_{np.dtype(forest.threshold.dtype).name}_B{batch_bucket}")
+
+
+DEFAULT_CACHE_PATH = os.environ.get(
+    "REPRO_ENGINE_CACHE",
+    os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                 "engine_cache.json"))
+
+_MEM_CACHE: dict[str, dict] = {}
+
+
+def _load_disk(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _store_disk(path: str, key: str, entry: dict) -> None:
+    data = _load_disk(path)
+    data[key] = entry
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=1)
+        os.replace(tmp, path)
+    except OSError:
+        pass                       # cache is an optimisation, never fatal
+
+
+@dataclass
+class EngineChoice:
+    engine: str                    # winning engine name
+    key: str                       # shape/batch cache key
+    predictor: object              # ready-to-serve predictor for `engine`
+    timings: dict = field(default_factory=dict)   # engine → median seconds
+    from_cache: bool = False
+
+    def predict(self, X):
+        return self.predictor.predict(X)
+
+
+def _bench_once(pred, X: np.ndarray, repeats: int) -> float:
+    pred.predict(X)                # warmup + compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        pred.predict(X)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def choose(forest: Forest, batch: int, *, engines=None,
+           include_pallas: Optional[bool] = None,
+           cache_path: Optional[str] = DEFAULT_CACHE_PATH,
+           force: bool = False, repeats: int = 3,
+           seed: int = 0) -> EngineChoice:
+    """Pick the fastest engine for ``forest`` at this batch-size bucket.
+
+    Cache hits (in-memory, then the JSON file at ``cache_path``) skip the
+    sweep and only build the winning predictor.  ``cache_path=None``
+    disables the disk layer; ``force=True`` re-benchmarks regardless."""
+    engines = tuple(engines) if engines is not None \
+        else default_engines(include_pallas)
+    bucket = bucket_batch(batch)
+    key = shape_key(forest, bucket)
+
+    entry = None
+    if not force:
+        entry = _MEM_CACHE.get(key)
+        if entry is None and cache_path:
+            entry = _load_disk(cache_path).get(key)
+        if entry is not None and entry.get("engine") not in engines:
+            entry = None           # cached winner excluded by the caller
+    if entry is not None:
+        return EngineChoice(engine=entry["engine"], key=key,
+                            predictor=ENGINE_FACTORIES[entry["engine"]](forest),
+                            timings=entry.get("timings", {}),
+                            from_cache=True)
+
+    X = np.random.default_rng(seed).normal(
+        0, 1.0, size=(bucket, forest.n_features))
+    timings: dict[str, float] = {}
+    best_pred, best_t = None, float("inf")
+    for name in engines:
+        pred = ENGINE_FACTORIES[name](forest)
+        timings[name] = _bench_once(pred, X, repeats)
+        # keep only the best-so-far predictor: peak memory stays
+        # max(current, best) instead of the sum over the engine matrix
+        if timings[name] < best_t:
+            best_pred, best_t = pred, timings[name]
+    winner = min(timings, key=timings.get)
+    entry = {"engine": winner, "timings": timings}
+    _MEM_CACHE[key] = entry
+    if cache_path:
+        _store_disk(cache_path, key, entry)
+    return EngineChoice(engine=winner, key=key, predictor=best_pred,
+                        timings=timings, from_cache=False)
+
+
+def clear_cache(cache_path: Optional[str] = None) -> None:
+    """Drop the in-memory cache (and the disk file, if a path is given)."""
+    _MEM_CACHE.clear()
+    if cache_path:
+        try:
+            os.remove(cache_path)
+        except OSError:
+            pass

@@ -19,6 +19,16 @@ full predication (all nodes evaluated, masked select) — lockstep VPU lanes
 make data-dependent early exit counterproductive. A faithful scalar QS with
 the sorted-feature early exit is kept in ``eval_scalar_numpy`` for oracle
 cross-checks and CPU-semantics benchmarking.
+
+``eval_batch_bitmm`` is the bit-matmul reformulation (DESIGN.md §2.4): the
+predicated AND-reduction over the node axis is replaced by one batched
+matmul ``cleared = cond @ clearbits`` so the dominant reduction runs on the
+MXU (BLAS on CPU) instead of VPU AND-chains, and the ``(B, T, N, W)``
+intermediate of ``mask_reduce`` is never materialised.  Per-leaf clear
+*counts* are packed, several leaves per f32 mantissa lane, and the exit
+leaf is recovered with the classic lowest-zero-field borrow trick — exact
+for the *lowest* zero field, which is exactly QuickScorer's exit-leaf
+semantics.  See ``compile_qs_bitmm`` for the layout.
 """
 from __future__ import annotations
 
@@ -135,6 +145,223 @@ class QSPredictor:
 
     def predict(self, X: np.ndarray) -> np.ndarray:
         Xq = self.qs.transform_inputs(np.asarray(X))
+        return np.asarray(self._fn(jnp.asarray(Xq)))
+
+    def predict_class(self, X: np.ndarray) -> np.ndarray:
+        return self.predict(X).argmax(axis=1)
+
+
+# --------------------------------------------------------------------------- #
+# Bit-matmul QuickScorer (DESIGN.md §2.4) — MXU-resident mask reduction
+# --------------------------------------------------------------------------- #
+@dataclass
+class CompiledBitMM:
+    """Packed clear-count arrays for the bit-matmul engine.
+
+    Layout: leaf ``l`` owns a ``bits``-wide field of packed word
+    ``l // npack`` (field ``l % npack``, LSB-first).  ``packed[t, n, g]``
+    holds node ``n``'s contribution to group ``g``: ``2^(bits*(l%npack))``
+    summed over the leaves ``l`` of its clear interval ``[lo, mid)``.
+    ``cond @ packed`` therefore accumulates, per leaf field, the number of
+    firing ancestors that clear that leaf — exact in f32 because every
+    packed word stays below 2^24.  ``bias`` marks padding leaves
+    (``l >= n_leaves_per_tree``) as permanently cleared.
+    """
+    feat: jnp.ndarray        # (Tp, N) int32, padding → 0
+    thr: jnp.ndarray         # (Tp, N) f32 | i16 | i8
+    valid: jnp.ndarray       # (Tp, N) bool
+    packed: jnp.ndarray      # (Tp, N, G) f32 packed clear-count weights
+    bias: jnp.ndarray        # (Tp, G) f32 padding-leaf fields (always on)
+    leaf_val: jnp.ndarray    # (Tp, L, C) f32 | i32
+    bits: int                # field width (holds max clear count)
+    npack: int               # leaves per packed word (bits * npack <= 24)
+    n_leaves: int
+    n_classes: int
+    n_features: int
+    n_trees: int             # real tree count (Tp >= n_trees is padded)
+    tree_chunk: int          # scan tile size over the tree axis
+    leaf_scale: float
+    forest: Optional[Forest] = None
+
+    @property
+    def n_groups(self) -> int:
+        return self.packed.shape[-1]
+
+    def transform_inputs(self, X: np.ndarray) -> np.ndarray:
+        return quantize_inputs(self.forest, X) if self.forest is not None else X
+
+
+def bitmm_full_word(bits: int, npack: int) -> int:
+    """Packed word with every field set to 1 — 'all leaves cleared'.  Used
+    for padding-tree bias rows; as a uint32 it is also the borrow-trick
+    low mask.  Single source of truth for the field layout."""
+    return sum(1 << (bits * i) for i in range(npack))
+
+
+def bitmm_pack_arrays(forest: Forest):
+    """Host-side packed clearbits: returns (packed (T,N,G) f32,
+    bias (T,G) f32, bits, npack).  Shared by the XLA engine and the Pallas
+    kernel wrapper."""
+    T, L, N = forest.n_trees, forest.n_leaves, forest.nodes_per_tree
+    valid = forest.feature >= 0
+    lo = np.where(valid, forest.leaf_lo, 0)
+    mid = np.where(valid, forest.leaf_mid, 0)
+
+    # per-leaf clear counts via a difference array → field width
+    diff = np.zeros((T, L + 1), dtype=np.int64)
+    t_idx = np.repeat(np.arange(T), N)[valid.ravel()]
+    np.add.at(diff, (t_idx, lo.ravel()[valid.ravel()]), 1)
+    np.add.at(diff, (t_idx, mid.ravel()[valid.ravel()]), -1)
+    counts = np.cumsum(diff[:, :L], axis=1)
+    field_max = max(int(counts.max(initial=0)), 1)   # bias fields hold 1
+    bits = max(int(np.ceil(np.log2(field_max + 1))), 1)
+    npack = max(24 // bits, 1)
+    G = (L + npack - 1) // npack
+    Lp = G * npack
+
+    # packed interval weights via cumulative per-group weight table:
+    # CW[l, g] = sum of 2^(bits*(l'%npack)) over l' < l with l'//npack == g,
+    # so a node's row is CW[mid] - CW[lo].
+    w = np.power(2.0, bits * (np.arange(Lp) % npack))
+    gid = np.arange(Lp) // npack
+    CW = np.zeros((Lp + 1, G))
+    np.add.at(CW, (np.arange(Lp) + 1, gid), w)
+    CW = np.cumsum(CW, axis=0)
+    packed = (CW[mid] - CW[lo]) * valid[..., None]            # (T, N, G)
+    bias = CW[Lp][None] - CW[forest.n_leaves_per_tree]        # (T, G)
+    return packed.astype(np.float32), bias.astype(np.float32), bits, npack
+
+
+def compile_qs_bitmm(forest: Forest,
+                     tree_chunk: Optional[int] = None) -> CompiledBitMM:
+    """Compile the bit-matmul engine.  ``tree_chunk`` bounds peak memory:
+    evaluation scans over tiles of that many trees (auto: ~16k nodes per
+    tile, so 1024-tree forests never materialise a full (B, T, ·) buffer)."""
+    T, N = forest.n_trees, forest.nodes_per_tree
+    packed, bias, bits, npack = bitmm_pack_arrays(forest)
+    G = packed.shape[-1]
+    if tree_chunk is None:
+        tree_chunk = min(T, max(1, 16384 // max(N, 1)))
+    tree_chunk = max(1, min(tree_chunk, T))
+    # rebalance so the last tile is nearly full (pad < n_chunks trees)
+    n_chunks = -(-T // tree_chunk)
+    tree_chunk = -(-T // n_chunks)
+    pad = n_chunks * tree_chunk - T
+
+    feat = np.maximum(forest.feature, 0).astype(np.int32)
+    valid = forest.feature >= 0
+    thr = forest.threshold
+    leaf_val = forest.leaf_value
+    if pad:
+        # padding trees: no valid nodes, every leaf field biased "cleared"
+        # → no survivor → leaf 0 → all-zero leaf row → contributes nothing.
+        feat = np.concatenate([feat, np.zeros((pad, N), np.int32)])
+        thr = np.concatenate([thr, np.zeros((pad, N), thr.dtype)])
+        valid = np.concatenate([valid, np.zeros((pad, N), bool)])
+        packed = np.concatenate([packed, np.zeros((pad, N, G), np.float32)])
+        full = np.float32(bitmm_full_word(bits, npack))
+        bias = np.concatenate([bias, np.full((pad, G), full, np.float32)])
+        leaf_val = np.concatenate(
+            [leaf_val, np.zeros((pad,) + leaf_val.shape[1:],
+                                leaf_val.dtype)])
+    return CompiledBitMM(
+        feat=jnp.asarray(feat), thr=jnp.asarray(thr),
+        valid=jnp.asarray(valid), packed=jnp.asarray(packed),
+        bias=jnp.asarray(bias), leaf_val=jnp.asarray(leaf_val),
+        bits=bits, npack=npack, n_leaves=forest.n_leaves,
+        n_classes=forest.n_classes, n_features=forest.n_features,
+        n_trees=T, tree_chunk=tree_chunk, leaf_scale=leaf_scale(forest),
+        forest=forest,
+    )
+
+
+def bitmm_exit_leaf(words: jnp.ndarray, *, bits: int, npack: int,
+                    n_leaves: int) -> jnp.ndarray:
+    """Packed clear-count words (..., G) f32 → exit leaf (...,) int32.
+
+    Lowest-zero-field borrow trick: ``(v - lo) & ~v & hi`` flags the high
+    bit of every zero field; borrows only corrupt flags *above* the lowest
+    genuine zero, so the least-significant set bit is always the true first
+    surviving leaf of the word.  Pure jnp — shared by the XLA engine and
+    the Pallas kernel.  Rows with no survivor (padding trees) map to 0."""
+    G = words.shape[-1]
+    lo_mask = jnp.uint32(bitmm_full_word(bits, npack))
+    hi_mask = jnp.uint32(bitmm_full_word(bits, npack) << (bits - 1))
+    v = words.astype(jnp.uint32)
+    t = (v - lo_mask) & ~v & hi_mask
+    lsb = t & (jnp.uint32(0) - t)
+    fidx = (jax.lax.population_count(lsb - jnp.uint32(1))
+            // jnp.uint32(bits)).astype(jnp.int32)
+    big = jnp.int32(G * npack + 1)
+    giota = jax.lax.broadcasted_iota(jnp.int32, words.shape, words.ndim - 1)
+    cand = jnp.where(t != jnp.uint32(0), giota * npack + fidx, big)
+    leaf = cand.min(axis=-1)
+    return jnp.where(leaf < n_leaves, leaf, 0)
+
+
+def _bitmm_tile(bm: CompiledBitMM, X: jnp.ndarray, feat, thr, valid,
+                packed, bias, lv, acc_dtype) -> jnp.ndarray:
+    """Score one tile of trees: X (B, d) × tile arrays → (B, C) partial."""
+    xf = X.T[feat]                                        # (Tc, N, B)
+    cond = (xf > thr[..., None]) & valid[..., None]
+    condT = jnp.transpose(cond, (0, 2, 1)).astype(jnp.float32)   # (Tc, B, N)
+    # HIGHEST precision: packed words are exact integers up to 2^23 and a
+    # TPU's default bf16 multiplies would truncate them (CPU f32 is exact
+    # either way, so CI can't catch the downgrade).
+    cleared = jax.lax.dot_general(
+        condT, packed, (((2,), (1,)), ((0,), (0,))),
+        precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32)               # (Tc, B, G) MXU
+    words = cleared + bias[:, None, :]
+    leaf = bitmm_exit_leaf(words, bits=bm.bits, npack=bm.npack,
+                           n_leaves=bm.n_leaves).T        # (B, Tc)
+    vals = jnp.take_along_axis(
+        lv[None], leaf[..., None, None], axis=2)[:, :, 0]  # (B, Tc, C)
+    return vals.astype(acc_dtype).sum(axis=1)
+
+
+def eval_batch_bitmm(bm: CompiledBitMM, X: jnp.ndarray) -> jnp.ndarray:
+    """Bit-matmul QuickScorer: X (B, d) → scores (B, C).
+
+    Tree-chunked: a ``lax.scan`` over tiles of ``bm.tree_chunk`` trees keeps
+    peak memory at O(B × tree_chunk × max(N, G)) regardless of forest size."""
+    B = X.shape[0]
+    Tp, N = bm.feat.shape
+    G = bm.n_groups
+    acc_dtype = (jnp.float32 if bm.leaf_val.dtype == jnp.float32
+                 else jnp.int32)
+    nc = Tp // bm.tree_chunk
+    if nc <= 1:
+        score = _bitmm_tile(bm, X, bm.feat, bm.thr, bm.valid, bm.packed,
+                            bm.bias, bm.leaf_val, acc_dtype)
+    else:
+        Tc = bm.tree_chunk
+        tiles = (bm.feat.reshape(nc, Tc, N), bm.thr.reshape(nc, Tc, N),
+                 bm.valid.reshape(nc, Tc, N),
+                 bm.packed.reshape(nc, Tc, N, G),
+                 bm.bias.reshape(nc, Tc, G),
+                 bm.leaf_val.reshape((nc, Tc) + bm.leaf_val.shape[1:]))
+
+        def body(acc, tile):
+            feat, thr, valid, packed, bias, lv = tile
+            return acc + _bitmm_tile(bm, X, feat, thr, valid, packed,
+                                     bias, lv, acc_dtype), None
+
+        score, _ = jax.lax.scan(
+            body, jnp.zeros((B, bm.n_classes), acc_dtype), tiles)
+    return score.astype(jnp.float32) / bm.leaf_scale
+
+
+class BitMMPredictor:
+    """Engine wrapper for the bit-matmul path (same interface as
+    QSPredictor: input quantization + jit cache)."""
+
+    def __init__(self, bm: CompiledBitMM):
+        self.bm = bm
+        self._fn = jax.jit(lambda X: eval_batch_bitmm(self.bm, X))
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        Xq = self.bm.transform_inputs(np.asarray(X))
         return np.asarray(self._fn(jnp.asarray(Xq)))
 
     def predict_class(self, X: np.ndarray) -> np.ndarray:

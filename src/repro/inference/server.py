@@ -109,7 +109,33 @@ class ForestServer:
         self.predictor = predictor
         self.batcher = MicroBatcher(max_batch, max_wait_ms)
         self.stats = ServerStats()
+        self.engine_choice = None          # set by from_forest()
         self._rid = 0
+
+    _CACHE_UNSET = object()       # distinguish "not given" from None
+
+    @classmethod
+    def from_forest(cls, forest, *, max_batch: int = 256,
+                    max_wait_ms: float = 2.0, engines=None,
+                    cache_path=_CACHE_UNSET, **choose_kw) -> "ForestServer":
+        """Build a server on the autotuned fastest engine for this forest.
+
+        The dispatch batch cap is the autotune batch: the winner is picked
+        for the batch shape the micro-batcher will actually emit.  The
+        decision comes from ``core.engine_select``'s cache when one exists
+        (in-memory or the JSON file), so restarts skip the sweep.
+        ``cache_path=None`` disables the disk layer (as in ``choose``);
+        omitting it uses the default cache file."""
+        from ..core import engine_select
+        kw = dict(choose_kw)
+        if cache_path is not cls._CACHE_UNSET:
+            kw["cache_path"] = cache_path
+        choice = engine_select.choose(forest, max_batch, engines=engines,
+                                      **kw)
+        srv = cls(choice.predictor, max_batch=max_batch,
+                  max_wait_ms=max_wait_ms)
+        srv.engine_choice = choice
+        return srv
 
     def submit(self, features: np.ndarray,
                arrival_s: Optional[float] = None) -> Request:

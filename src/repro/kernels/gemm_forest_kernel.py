@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .quickscorer_kernel import mosaic_params
+
 
 def _gemm_kernel(x_ref, feat_ref, thr_ref, a_ref, b_ref, leaf_ref, out_ref):
     """x (Bt,d) f32 | feat (Tt,N) i32 | thr (Tt,N) f32 (padding -inf → S=0…
@@ -72,7 +74,6 @@ def gemm_forward(x, feat, thr, A, Bvec, leaf_val, *,
         out_specs=pl.BlockSpec((block_b, C), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
         interpret=interpret,
-        compiler_params=dict(
-            mosaic=dict(dimension_semantics=("parallel", "arbitrary"))
-        ) if not interpret else None,
+        compiler_params=mosaic_params("parallel", "arbitrary")
+        if not interpret else None,
     )(x, feat, thr, A, Bvec, leaf_val)

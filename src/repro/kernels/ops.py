@@ -2,12 +2,15 @@
 predictor objects matching the XLA engines' interface."""
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.forest import Forest
 from ..core.quantize import leaf_scale, quantize_inputs
+from ..core.quickscorer import bitmm_full_word, bitmm_pack_arrays
 from . import gemm_forest_kernel, quickscorer_kernel
 
 
@@ -27,22 +30,40 @@ def _thr_pad_value(forest: Forest):
     return np.float32(np.inf)
 
 
+def bucket_rows(n: int, block_b: int) -> int:
+    """Padded batch size: ``block_b × 2^k`` — power-of-two buckets so any
+    stream of batch sizes triggers at most O(log B_max) kernel compiles
+    instead of one per distinct padded batch."""
+    if n <= block_b:
+        return block_b
+    return block_b * (1 << math.ceil(math.log2(n / block_b)))
+
+
 class _PallasPredictor:
     def __init__(self, forest: Forest, fn, block_b: int):
         self.forest = forest
         self._fn = fn
         self.block_b = block_b
         self.leaf_scale = leaf_scale(forest)
+        self._buckets: set[int] = set()
 
     def predict(self, X: np.ndarray) -> np.ndarray:
         Xq = quantize_inputs(self.forest, np.asarray(X)).astype(np.float32)
         B = Xq.shape[0]
-        Xp = _pad_to(Xq, 0, self.block_b)
+        bucket = bucket_rows(B, self.block_b)
+        self._buckets.add(bucket)
+        Xp = _pad_to(Xq, 0, bucket)
         out = np.asarray(self._fn(jnp.asarray(Xp)))
         return out[:B] / self.leaf_scale
 
     def predict_class(self, X: np.ndarray) -> np.ndarray:
         return self.predict(X).argmax(axis=1)
+
+    @property
+    def n_compiles(self) -> int:
+        """Distinct compiled kernel variants: the jit cache is keyed on the
+        padded input shape, so distinct buckets == distinct compiles."""
+        return len(self._buckets)
 
 
 def pallas_qs_predictor(forest: Forest, block_b: int = 128, block_t: int = 8,
@@ -68,6 +89,41 @@ def pallas_qs_predictor(forest: Forest, block_b: int = 128, block_t: int = 8,
         return quickscorer_kernel.qs_forward(
             X, feat_j, thr_j, masks_j, init_j, leaf_j,
             block_b=block_b, block_t=block_t, interpret=interpret)
+
+    return _PallasPredictor(forest, fn, block_b)
+
+
+def pallas_bitmm_predictor(forest: Forest, block_b: int = 128,
+                           block_t: int = 8, block_n: int = 128,
+                           interpret: bool = True) -> _PallasPredictor:
+    """Bit-matmul QuickScorer engine, Pallas backend (DESIGN.md §2.4).
+
+    Fuses cond-compute, the packed clear-count bit-matmul, exit-leaf
+    recovery, and the leaf-table lookup in one VMEM-resident tile."""
+    packed, bias, bits, npack = bitmm_pack_arrays(forest)
+    G = packed.shape[-1]
+    feat = _pad_to(np.maximum(forest.feature, 0).astype(np.int32), 0, block_t)
+    thr = forest.threshold.astype(np.float32).copy()
+    thr[forest.feature < 0] = np.float32(np.inf)
+    thr = _pad_to(thr, 0, block_t, fill=np.float32(np.inf))
+    packed = _pad_to(packed, 0, block_t)                       # pad: 0
+    # padding trees: every leaf field biased "cleared" → no survivor →
+    # leaf 0 → all-zero leaf row → contributes nothing.
+    bias = _pad_to(bias, 0, block_t, fill=float(bitmm_full_word(bits, npack)))
+    leaf_val = _pad_to(forest.leaf_value.astype(np.float32), 0, block_t)
+
+    feat_j, thr_j = jnp.asarray(feat), jnp.asarray(thr)
+    packed_j, bias_j = jnp.asarray(packed), jnp.asarray(bias)
+    leaf_j = jnp.asarray(leaf_val)
+    n_leaves = forest.n_leaves
+
+    @jax.jit
+    def fn(X):
+        return quickscorer_kernel.qs_bitmm_forward(
+            X, feat_j, thr_j, packed_j, bias_j, leaf_j,
+            bits=bits, npack=npack, n_leaves=n_leaves,
+            block_b=block_b, block_t=block_t, block_n=block_n,
+            interpret=interpret)
 
     return _PallasPredictor(forest, fn, block_b)
 

@@ -26,8 +26,19 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.quickscorer import bitmm_exit_leaf
 
 WORD = 32
+
+
+def mosaic_params(*semantics: str):
+    """Grid dimension semantics via the current Pallas TPU compiler-params
+    class (``CompilerParams`` in new JAX, ``TPUCompilerParams`` before the
+    rename) — replaces the removed ``dict(mosaic=dict(...))`` form."""
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(dimension_semantics=tuple(semantics))
 
 
 def _ctz(w: jnp.ndarray) -> jnp.ndarray:
@@ -58,7 +69,9 @@ def _qs_kernel(x_ref, feat_ref, thr_ref, masks_ref, init_ref, leaf_ref,
     # ---- feature select via one-hot matmul (MXU) ------------------------- #
     onehot = (jax.lax.broadcasted_iota(jnp.int32, (d, Tt * N), 0)
               == feat[None, :]).astype(jnp.float32)
-    xsel = jnp.dot(x, onehot,
+    # HIGHEST: the select must return x bit-exactly or near-threshold
+    # predicates flip under TPU bf16 multiplies.
+    xsel = jnp.dot(x, onehot, precision=jax.lax.Precision.HIGHEST,
                    preferred_element_type=jnp.float32)           # (Bt, Tt*N)
     cond = xsel.reshape(Bt, Tt, N) > thr_ref[...][None]          # (Bt, Tt, N)
 
@@ -122,7 +135,117 @@ def qs_forward(x, feat, thr, masks, init_idx, leaf_val, *,
         out_specs=pl.BlockSpec((block_b, C), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
         interpret=interpret,
-        compiler_params=dict(
-            mosaic=dict(dimension_semantics=("parallel", "arbitrary"))
-        ) if not interpret else None,
+        compiler_params=mosaic_params("parallel", "arbitrary")
+        if not interpret else None,
     )(x, feat, thr, masks, init_idx, leaf_val)
+
+
+# --------------------------------------------------------------------------- #
+# Bit-matmul variant (DESIGN.md §2.4): the node-axis reduction is a batched
+# MXU matmul against packed clear-count words instead of a VPU AND-chain.
+# --------------------------------------------------------------------------- #
+def _qs_bitmm_kernel(x_ref, feat_ref, thr_ref, packed_ref, bias_ref,
+                     leaf_ref, out_ref, *, bits: int, npack: int,
+                     n_leaves: int, block_n: int):
+    """One (block_b, block_t) tile, fully VMEM-resident.
+
+    x_ref      (Bt, d)      f32  — inputs (quantized forests: ints cast f32)
+    feat_ref   (Tt, N)      i32  — per-node feature id (padding: 0)
+    thr_ref    (Tt, N)      f32  — thresholds (padding: +inf → never fires)
+    packed_ref (Tt, N, G)   f32  — packed clear-count weights
+    bias_ref   (Tt, G)      f32  — padding-leaf fields (always cleared)
+    leaf_ref   (Tt, L, C)   f32  — leaf table (padding trees: 0)
+    out_ref    (Bt, C)      f32  — accumulated over the tree grid axis
+
+    Stages: one-hot feature select (MXU) → predicate → bit-matmul over
+    ``block_n`` node chunks (MXU) → lowest-zero-field exit leaf (VPU bit
+    tricks) → leaf one-hot × leaf table (MXU).
+    """
+    Bt, d = x_ref.shape
+    Tt, N = feat_ref.shape
+    G = packed_ref.shape[-1]
+    L, C = leaf_ref.shape[-2:]
+
+    x = x_ref[...].astype(jnp.float32)
+    feat = feat_ref[...].reshape(Tt * N)
+    # ---- feature select via one-hot matmul (MXU) ------------------------- #
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (d, Tt * N), 0)
+              == feat[None, :]).astype(jnp.float32)
+    # HIGHEST: the select must return x bit-exactly or near-threshold
+    # predicates flip under TPU bf16 multiplies.
+    xsel = jnp.dot(x, onehot, precision=jax.lax.Precision.HIGHEST,
+                   preferred_element_type=jnp.float32)           # (Bt, Tt*N)
+    cond = (xsel.reshape(Bt, Tt, N)
+            > thr_ref[...][None]).astype(jnp.float32)            # (Bt, Tt, N)
+
+    # ---- bit-matmul over node chunks (MXU) -------------------------------- #
+    # HIGHEST precision: packed words are exact integers up to 2^23; the
+    # TPU default bf16 multiply would truncate their low fields.
+    packed = packed_ref[...]
+    words = jnp.broadcast_to(bias_ref[...][:, None, :], (Tt, Bt, G))
+    for n0 in range(0, N, block_n):
+        n1 = min(n0 + block_n, N)
+        words = words + jax.lax.dot_general(
+            cond[:, :, n0:n1], packed[:, n0:n1, :],
+            dimension_numbers=(((2,), (1,)), ((1,), (0,))),
+            precision=jax.lax.Precision.HIGHEST,
+            preferred_element_type=jnp.float32)                  # (Tt, Bt, G)
+
+    # ---- exit leaf: lowest zero field (borrow trick, shared helper) ------- #
+    # padding trees (bias all-on) have no survivor → leaf 0 → zero row.
+    leaf = bitmm_exit_leaf(words, bits=bits, npack=npack,
+                           n_leaves=n_leaves)                    # (Tt, Bt)
+
+    # ---- leaf one-hot × leaf table (MXU) ---------------------------------- #
+    # f32 accumulation, like the mask-based kernel: quantized leaf sums are
+    # exact while |sum| < 2^24 (int16 leaves: fine to ~1k trees); beyond
+    # that the XLA path's int32 accumulator is the bit-exact engine.
+    lhot = (jax.lax.broadcasted_iota(jnp.int32, (Tt, Bt, L), 2)
+            == leaf[..., None]).astype(jnp.float32)
+    part = jax.lax.dot_general(
+        lhot, leaf_ref[...].astype(jnp.float32),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32)                      # (Tt, Bt, C)
+    part = part.sum(axis=0)                                      # (Bt, C)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(pl.program_id(1) != 0)
+    def _acc():
+        out_ref[...] += part
+
+
+def qs_bitmm_forward(x, feat, thr, packed, bias, leaf_val, *, bits: int,
+                     npack: int, n_leaves: int, block_b: int = 128,
+                     block_t: int = 8, block_n: int = 128,
+                     interpret: bool = True):
+    """Padded full arrays → scores (B, C).  B and T must be multiples of the
+    block sizes (ops.py pads); ``block_n`` tiles the in-kernel bit-matmul so
+    the MXU sees well-shaped contractions on wide forests."""
+    B, d = x.shape
+    T, N = feat.shape
+    G = packed.shape[-1]
+    L, C = leaf_val.shape[-2:]
+    grid = (B // block_b, T // block_t)
+    kernel = functools.partial(_qs_bitmm_kernel, bits=bits, npack=npack,
+                               n_leaves=n_leaves, block_n=block_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_t, N), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, N), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, N, G), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((block_t, G), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, L, C), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, C), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        interpret=interpret,
+        compiler_params=mosaic_params("parallel", "arbitrary")
+        if not interpret else None,
+    )(x, feat, thr, packed, bias, leaf_val)

@@ -27,7 +27,7 @@ from ..distributed.sharding import (data_spec, decode_state_specs,
                                     tree_shardings)
 from ..models.config import ArchConfig, ShapeConfig
 from ..models.model import Model
-from .hlo_analysis import analyze
+from .hlo_analysis import analyze, normalize_cost_analysis
 from .mesh import make_production_mesh
 from .specs import input_specs
 
@@ -296,7 +296,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = normalize_cost_analysis(compiled.cost_analysis())
         hlo = compiled.as_text()
         # trip-count-aware accounting (XLA's cost_analysis counts while
         # bodies once — see hlo_analysis module docstring)

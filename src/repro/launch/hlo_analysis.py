@@ -339,3 +339,25 @@ def _fusion_param_slice_bytes(fused: Computation, idx: int):
 def collective_bytes(hlo: str) -> CollectiveStats:
     """Back-compat entry point (dryrun.py, tests)."""
     return analyze(hlo).collectives
+
+
+def normalize_cost_analysis(cost) -> dict:
+    """``compiled.cost_analysis()`` → plain dict across JAX versions.
+
+    Older JAX returns a dict; newer versions return a list with one dict
+    per partition (usually length 1).  Multi-entry lists are merged by
+    summing numeric values; None/empty → {}."""
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return dict(cost)
+    out: dict = {}
+    for part in cost:
+        if not isinstance(part, dict):
+            continue
+        for k, v in part.items():
+            if isinstance(v, (int, float)) and k in out:
+                out[k] += v
+            else:
+                out[k] = v
+    return out

@@ -15,15 +15,25 @@ def cfg():
 
 
 def test_accum_matches_full_batch(cfg):
-    """One step with accum=2 ≡ one step with accum=1 (same global batch)."""
+    """One step with accum=2 ≡ one step with accum=1 (same global batch).
+
+    Tolerances: the accumulated path sums microbatch losses/grads in f32
+    in a different order than the full-batch reduction, so step 0 agrees
+    only to f32 rounding (measured ~5e-7 rel).  Adam amplifies that seed
+    difference ~10× per step (eps/sqrt sensitivity near zero second
+    moments), so later steps get a correspondingly looser bound.  A true
+    averaging/dtype bug shows up orders of magnitude above these."""
     t1 = Trainer(cfg, batch=4, seq_len=32, accum_steps=1)
     t2 = Trainer(cfg, batch=4, seq_len=32, accum_steps=2)
     t1.init_state()
     t2.init_state()
     r1 = [t1.train_step() for _ in range(3)]
     r2 = [t2.train_step() for _ in range(3)]
-    for a, b in zip(r1, r2):
-        assert a["loss"] == pytest.approx(b["loss"], rel=1e-4)
+    # step 0: same params, same data — only summation order differs
+    assert r1[0]["loss"] == pytest.approx(r2[0]["loss"], rel=1e-5)
+    assert r1[0]["grad_norm"] == pytest.approx(r2[0]["grad_norm"], rel=1e-5)
+    for a, b in zip(r1[1:], r2[1:]):
+        assert a["loss"] == pytest.approx(b["loss"], rel=1e-3)
         assert a["grad_norm"] == pytest.approx(b["grad_norm"], rel=1e-3)
 
 

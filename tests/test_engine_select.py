@@ -1,0 +1,105 @@
+"""Autotuner: winner selection, two-layer caching, server integration,
+and the Pallas batch-bucketing recompile bound."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import engine_select
+from repro.inference.server import ForestServer
+
+CHEAP = ("qs", "qs-bitmm", "native")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    engine_select.clear_cache()
+    yield
+    engine_select.clear_cache()
+
+
+def test_choose_benchmarks_and_caches(small_forest, tmp_path):
+    cache = str(tmp_path / "engines.json")
+    c1 = engine_select.choose(small_forest, 64, engines=CHEAP,
+                              cache_path=cache, repeats=1)
+    assert c1.engine in CHEAP and not c1.from_cache
+    assert set(c1.timings) == set(CHEAP)
+    assert all(t > 0 for t in c1.timings.values())
+    # winner really is the fastest measured engine
+    assert c1.engine == min(c1.timings, key=c1.timings.get)
+
+    # in-memory hit
+    c2 = engine_select.choose(small_forest, 64, engines=CHEAP,
+                              cache_path=cache, repeats=1)
+    assert c2.from_cache and c2.engine == c1.engine
+
+    # disk hit (fresh process simulated by clearing the memory layer)
+    engine_select.clear_cache()
+    with open(cache) as f:
+        assert c1.key in json.load(f)
+    c3 = engine_select.choose(small_forest, 64, engines=CHEAP,
+                              cache_path=cache, repeats=1)
+    assert c3.from_cache and c3.engine == c1.engine
+
+
+def test_choose_batch_bucketing(small_forest, tmp_path):
+    cache = str(tmp_path / "engines.json")
+    c1 = engine_select.choose(small_forest, 33, engines=CHEAP,
+                              cache_path=cache, repeats=1)
+    c2 = engine_select.choose(small_forest, 64, engines=CHEAP,
+                              cache_path=cache, repeats=1)
+    # 33 and 64 share the 64 bucket → one sweep, one cache entry
+    assert c1.key == c2.key and c2.from_cache
+
+
+def test_choice_predictor_correct(small_forest):
+    from conftest import rand_X
+    c = engine_select.choose(small_forest, 32, engines=CHEAP,
+                             cache_path=None, repeats=1)
+    X = rand_X(small_forest, B=32)
+    np.testing.assert_allclose(c.predict(X),
+                               small_forest.predict_oracle(X),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_forest_server_uses_autotuned_winner(small_forest, tmp_path):
+    cache = str(tmp_path / "engines.json")
+    choice = engine_select.choose(small_forest, 16, engines=CHEAP,
+                                  cache_path=cache, repeats=1)
+    srv = ForestServer.from_forest(small_forest, max_batch=16,
+                                   engines=CHEAP, cache_path=cache)
+    # the server's decision came from the cache and matches the winner
+    assert srv.engine_choice is not None
+    assert srv.engine_choice.from_cache
+    assert srv.engine_choice.engine == choice.engine
+    assert srv.predictor is srv.engine_choice.predictor
+
+    # and the served scores are the winner's predictions
+    rng = np.random.default_rng(1)
+    feats = rng.normal(size=(16, small_forest.n_features))
+    for i in range(16):
+        srv.submit(feats[i], arrival_s=float(i) * 1e-4)
+    done = srv.poll(now_s=1.0)
+    assert len(done) == 16
+    got = np.stack([r.result for r in done])
+    np.testing.assert_allclose(got, choice.predict(feats), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_pallas_batch_bucketing_bounds_recompiles(small_forest):
+    """Satellite regression: distinct batch sizes inside one power-of-two
+    bucket must reuse one compiled kernel."""
+    from repro.kernels.ops import bucket_rows, pallas_qs_predictor
+    assert [bucket_rows(b, 32) for b in (1, 32, 33, 64, 65, 100, 129)] == \
+        [32, 32, 64, 64, 128, 128, 256]
+    pred = pallas_qs_predictor(small_forest, block_b=32, block_t=4)
+    rng = np.random.default_rng(0)
+    for B in (3, 17, 31, 32):          # one bucket: 32
+        pred.predict(rng.normal(size=(B, small_forest.n_features)))
+    assert pred.n_compiles == 1
+    for B in (33, 50, 64):             # second bucket: 64
+        pred.predict(rng.normal(size=(B, small_forest.n_features)))
+    assert pred.n_compiles == 2
+    if hasattr(pred._fn, "_cache_size"):    # actual jit cache, where exposed
+        assert pred._fn._cache_size() == pred.n_compiles

@@ -11,7 +11,7 @@ from repro.core.rapidscorer import compile_rs, eval_batch as rs_eval
 
 from conftest import rand_X
 
-ENGINES = ["bitvector", "rapidscorer", "native", "unrolled", "gemm"]
+ENGINES = ["bitvector", "bitmm", "rapidscorer", "native", "unrolled", "gemm"]
 
 
 # --------------------------------------------------------------------------- #

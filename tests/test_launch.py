@@ -147,5 +147,7 @@ def test_tiny_mesh_lowering_with_shardings():
         lowered = jax.jit(model.loss_fn, in_shardings=(shards, tok_shard)) \
             .lower(p_shapes, toks)
         compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    from repro.launch.hlo_analysis import normalize_cost_analysis
+    # newer JAX returns a list of per-partition dicts, older a plain dict
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     assert float(cost.get("flops", 0)) > 0

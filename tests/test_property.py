@@ -1,5 +1,8 @@
 """Property-based tests (hypothesis) over the system's invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro import core

@@ -40,11 +40,17 @@ def shapes():
     )
 
 
-def run(engines=None, repeats: int = 5):
-    engines = tuple(engines) if engines else engine_select.default_engines()
+def run(engines, repeats: int = 5):
+    """Benchmark the given engine tuple (resolve defaults in the caller).
+
+    A subset of the default matrix gets a ``bench_engines_subset`` table:
+    its 'fastest' column only ranks the engines that ran, so its
+    artifacts must never replace the canonical full-matrix ones — the
+    rename protects every caller of ``run()``, not just ``main()``."""
+    subset = set(engines) != set(engine_select.default_engines())
     cols = ["trees", "leaves", "batch"] + [f"{e}_us" for e in engines] + \
-        ["bitmm_vs_qs"]
-    t = Table("bench_engines", cols)
+        ["fastest", "bitmm_vs_qs"]
+    t = Table("bench_engines_subset" if subset else "bench_engines", cols)
     records = []
     for (T, L, d, B) in shapes():
         forest = core.random_forest_ir(T, L, d, seed=T + L)
@@ -54,12 +60,15 @@ def run(engines=None, repeats: int = 5):
             pred = engine_select.ENGINE_FACTORIES[e](forest)
             us[e] = us_per_instance(
                 time_predict(lambda: pred.predict(X), repeats=repeats), B)
+        fastest = min(us, key=us.get)
+        # None (JSON null), not NaN: NaN is invalid strict JSON and would
+        # make the --engines subset artifacts unparseable
         speedup = us["qs"] / us["qs-bitmm"] \
-            if "qs" in us and "qs-bitmm" in us else float("nan")
-        t.add(T, L, B, *(f"{us[e]:.1f}" for e in engines),
-              f"{speedup:.2f}x")
+            if "qs" in us and "qs-bitmm" in us else None
+        t.add(T, L, B, *(f"{us[e]:.1f}" for e in engines), fastest,
+              f"{speedup:.2f}x" if speedup is not None else "n/a")
         records.append({"trees": T, "leaves": L, "features": d, "batch": B,
-                        "us_per_instance": us,
+                        "us_per_instance": us, "fastest": fastest,
                         "speedup_bitmm_vs_qs": speedup})
     return t, records
 
@@ -74,29 +83,40 @@ def main(argv=None) -> int:
     ap.add_argument("--repeats", type=int, default=5)
     args = ap.parse_args(argv)
 
-    engines = args.engines.split(",") if args.engines else None
+    engines = list(dict.fromkeys(args.engines.split(","))) \
+        if args.engines else None
     if engines:
         unknown = [e for e in engines
                    if e not in engine_select.ENGINE_FACTORIES]
         if unknown:
             ap.error(f"unknown engine(s) {unknown}; choose from "
                      f"{sorted(engine_select.ENGINE_FACTORIES)}")
-    tbl, records = run(engines=engines, repeats=args.repeats)
+    engines_run = tuple(engines) if engines \
+        else engine_select.default_engines()
+    tbl, records = run(engines_run, repeats=args.repeats)
+    subset = tbl.name.endswith("_subset")
     tbl.print()
     tbl.save()
     best = max((r["speedup_bitmm_vs_qs"] for r in records
-                if r["leaves"] >= 64), default=float("nan"))
-    print(f"\nbitmm vs seed-QS speedup on L>=64 forests: best {best:.2f}x")
+                if r["leaves"] >= 64
+                and r["speedup_bitmm_vs_qs"] is not None), default=None)
+    if best is not None:
+        print(f"\nbitmm vs seed-QS speedup on L>=64 forests: "
+              f"best {best:.2f}x")
     if args.json:
         snapshot = {
             "scale": os.environ.get("REPRO_BENCH_SCALE", "default"),
+            "engines": list(engines_run),
             "records": records,
             "best_bitmm_vs_qs_L64": best,
         }
-        save_json("bench_engines_raw", snapshot)
-        with open(SNAPSHOT, "w") as f:
-            json.dump(snapshot, f, indent=1, default=float)
-        print(f"snapshot written to {SNAPSHOT}")
+        save_json(f"{tbl.name}_raw", snapshot)
+        if subset:
+            print(f"--engines subset: {SNAPSHOT} left untouched")
+        else:
+            with open(SNAPSHOT, "w") as f:
+                json.dump(snapshot, f, indent=1, default=float)
+            print(f"snapshot written to {SNAPSHOT}")
     return 0
 
 

@@ -97,12 +97,22 @@ def shape_key(forest: Forest, batch_bucket: int) -> str:
             f"_{np.dtype(forest.threshold.dtype).name}_B{batch_bucket}")
 
 
-DEFAULT_CACHE_PATH = os.environ.get(
-    "REPRO_ENGINE_CACHE",
-    os.path.join(os.path.expanduser("~"), ".cache", "repro",
-                 "engine_cache.json"))
+_CACHE_DEFAULT = object()          # "cache_path not given" sentinel
+
+
+def default_cache_path() -> str:
+    # resolved per call, not at import, so REPRO_ENGINE_CACHE set after
+    # `import repro.core` (e.g. pytest monkeypatch) still takes effect
+    return os.environ.get(
+        "REPRO_ENGINE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "engine_cache.json"))
+
 
 _MEM_CACHE: dict[str, dict] = {}
+# (path, key) pairs whose in-memory entry is known to be on disk already —
+# lets cache hits skip the read-merge-rewrite of the JSON file
+_PERSISTED: set[tuple[str, str]] = set()
 
 
 def _load_disk(path: str) -> dict:
@@ -113,15 +123,27 @@ def _load_disk(path: str) -> dict:
         return {}
 
 
+def _merge_entry(old: Optional[dict], new: dict) -> dict:
+    """Union of two sweeps' timings — cached coverage only ever grows."""
+    if not old:
+        return new
+    timings = {**old.get("timings", {}), **new.get("timings", {})}
+    return {"engine": min(timings, key=timings.get), "timings": timings}
+
+
 def _store_disk(path: str, key: str, entry: dict) -> None:
+    # read-merge-replace without a file lock: concurrent writers can drop
+    # each other's timings (last replace wins). Acceptable — the cache is
+    # an optimisation, and the cost is one redundant re-sweep later.
     data = _load_disk(path)
-    data[key] = entry
+    data[key] = _merge_entry(data.get(key), entry)
     try:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(data, f, indent=1)
         os.replace(tmp, path)
+        _PERSISTED.add((path, key))
     except OSError:
         pass                       # cache is an optimisation, never fatal
 
@@ -150,55 +172,99 @@ def _bench_once(pred, X: np.ndarray, repeats: int) -> float:
 
 def choose(forest: Forest, batch: int, *, engines=None,
            include_pallas: Optional[bool] = None,
-           cache_path: Optional[str] = DEFAULT_CACHE_PATH,
+           cache_path=_CACHE_DEFAULT,
            force: bool = False, repeats: int = 3,
            seed: int = 0) -> EngineChoice:
     """Pick the fastest engine for ``forest`` at this batch-size bucket.
 
     Cache hits (in-memory, then the JSON file at ``cache_path``) skip the
-    sweep and only build the winning predictor.  ``cache_path=None``
-    disables the disk layer; ``force=True`` re-benchmarks regardless."""
+    sweep and only build the winning predictor.  A cached entry counts as
+    a hit only if its accumulated sweeps covered every engine the caller
+    asked for — the winner is then re-derived over the requested subset —
+    so a narrow ``engines=`` sweep can never answer for the full matrix;
+    a partial-coverage miss benchmarks only the engines not yet measured.
+    New sweeps merge into the cached entry (timings union, both layers),
+    so within a process coverage only grows and a narrow re-sweep never
+    erases wider measurements; cross-process disk merges are best-effort
+    (unlocked read-merge-replace — see ``_store_disk``).  Merged timings
+    may come from different runs (machine load, ``repeats``) — the cache
+    assumes per-shape rankings are stable enough that this is fine.
+    When ``cache_path`` is omitted it defaults to ``$REPRO_ENGINE_CACHE``
+    (or ``~/.cache/repro/engine_cache.json``); ``cache_path=None``
+    disables the disk layer entirely.  ``force=True`` re-benchmarks
+    regardless of any cached entry."""
     engines = tuple(engines) if engines is not None \
         else default_engines(include_pallas)
+    if cache_path is _CACHE_DEFAULT:
+        cache_path = default_cache_path()
     bucket = bucket_batch(batch)
     key = shape_key(forest, bucket)
 
-    entry = None
-    if not force:
-        entry = _MEM_CACHE.get(key)
-        if entry is None and cache_path:
-            entry = _load_disk(cache_path).get(key)
-        if entry is not None and entry.get("engine") not in engines:
-            entry = None           # cached winner excluded by the caller
-    if entry is not None:
-        return EngineChoice(engine=entry["engine"], key=key,
-                            predictor=ENGINE_FACTORIES[entry["engine"]](forest),
-                            timings=entry.get("timings", {}),
-                            from_cache=True)
+    prior = _MEM_CACHE.get(key)
+    if cache_path and not (prior is not None
+                           and set(engines) <= set(prior.get("timings", {}))):
+        disk = _load_disk(cache_path).get(key)
+        if disk is not None:           # warm/widen the memory layer
+            if prior is None:
+                prior = disk
+                _PERSISTED.add((cache_path, key))
+            else:
+                # memory may hold timings the file lacks — not persisted
+                prior = _merge_entry(disk, prior)
+                _PERSISTED.discard((cache_path, key))
+            _MEM_CACHE[key] = prior
+    if not force and prior is not None:
+        cached = prior.get("timings", {})
+        if set(engines) <= set(cached):
+            winner = min(engines, key=cached.get)
+            if cache_path and (cache_path, key) not in _PERSISTED:
+                # write-through: the entry may exist only in memory (e.g.
+                # swept earlier with cache_path=None); a merge against the
+                # file is idempotent and trivial next to the compile below
+                _store_disk(cache_path, key, prior)
+            return EngineChoice(engine=winner, key=key,
+                                predictor=ENGINE_FACTORIES[winner](forest),
+                                timings={e: cached[e] for e in engines},
+                                from_cache=True)
 
+    cached = (prior or {}).get("timings", {})
+    to_bench = engines if force \
+        else tuple(e for e in engines if e not in cached)
     X = np.random.default_rng(seed).normal(
         0, 1.0, size=(bucket, forest.n_features))
-    timings: dict[str, float] = {}
+    fresh: dict[str, float] = {}
     best_pred, best_t = None, float("inf")
-    for name in engines:
+    for name in to_bench:
         pred = ENGINE_FACTORIES[name](forest)
-        timings[name] = _bench_once(pred, X, repeats)
+        fresh[name] = _bench_once(pred, X, repeats)
         # keep only the best-so-far predictor: peak memory stays
         # max(current, best) instead of the sum over the engine matrix
-        if timings[name] < best_t:
-            best_pred, best_t = pred, timings[name]
+        if fresh[name] < best_t:
+            best_pred, best_t = pred, fresh[name]
+    # partial-coverage miss: cached timings fill in the engines we skipped
+    timings = {e: fresh.get(e, cached.get(e)) for e in engines}
     winner = min(timings, key=timings.get)
-    entry = {"engine": winner, "timings": timings}
-    _MEM_CACHE[key] = entry
+    # the stored engine must be the winner over the entry's own timings
+    # (merges re-derive it over the union; lookups re-derive per request)
+    entry = {"engine": min(fresh, key=fresh.get), "timings": fresh}
+    _MEM_CACHE[key] = _merge_entry(prior, entry)
+    # the memory entry just changed: any disk copy of this key is stale
+    _PERSISTED.difference_update({pk for pk in _PERSISTED if pk[1] == key})
     if cache_path:
-        _store_disk(cache_path, key, entry)
-    return EngineChoice(engine=winner, key=key, predictor=best_pred,
-                        timings=timings, from_cache=False)
+        # persist the merged union, not just this sweep: coverage that so
+        # far existed only in memory reaches disk too (file re-merged)
+        _store_disk(cache_path, key, _MEM_CACHE[key])
+    return EngineChoice(
+        engine=winner, key=key,
+        predictor=best_pred if winner in fresh
+        else ENGINE_FACTORIES[winner](forest),
+        timings=timings, from_cache=False)
 
 
 def clear_cache(cache_path: Optional[str] = None) -> None:
     """Drop the in-memory cache (and the disk file, if a path is given)."""
     _MEM_CACHE.clear()
+    _PERSISTED.clear()
     if cache_path:
         try:
             os.remove(cache_path)

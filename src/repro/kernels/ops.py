@@ -2,12 +2,11 @@
 predictor objects matching the XLA engines' interface."""
 from __future__ import annotations
 
-import math
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.engine_select import bucket_batch
 from ..core.forest import Forest
 from ..core.quantize import leaf_scale, quantize_inputs
 from ..core.quickscorer import bitmm_full_word, bitmm_pack_arrays
@@ -33,10 +32,9 @@ def _thr_pad_value(forest: Forest):
 def bucket_rows(n: int, block_b: int) -> int:
     """Padded batch size: ``block_b × 2^k`` — power-of-two buckets so any
     stream of batch sizes triggers at most O(log B_max) kernel compiles
-    instead of one per distinct padded batch."""
-    if n <= block_b:
-        return block_b
-    return block_b * (1 << math.ceil(math.log2(n / block_b)))
+    instead of one per distinct padded batch.  Same bucketing policy as
+    the autotuner's ``engine_select.bucket_batch``, in units of blocks."""
+    return block_b * bucket_batch(-(-n // block_b))
 
 
 class _PallasPredictor:

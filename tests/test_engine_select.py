@@ -43,6 +43,120 @@ def test_choose_benchmarks_and_caches(small_forest, tmp_path):
     assert c3.from_cache and c3.engine == c1.engine
 
 
+def test_subset_sweep_never_answers_for_full_matrix(small_forest, tmp_path):
+    cache = str(tmp_path / "engines.json")
+    narrow = engine_select.choose(small_forest, 64, engines=("qs",),
+                                  cache_path=cache, repeats=1)
+    assert narrow.engine == "qs" and not narrow.from_cache
+    # the qs-only entry must not satisfy a lookup for a wider engine set
+    full = engine_select.choose(small_forest, 64, engines=CHEAP,
+                                cache_path=cache, repeats=1)
+    assert not full.from_cache and set(full.timings) == set(CHEAP)
+    # ...but the wide entry answers later narrow lookups, re-deriving the
+    # winner over just the requested subset
+    again = engine_select.choose(small_forest, 64, engines=("qs", "native"),
+                                 cache_path=cache, repeats=1)
+    assert again.from_cache
+    assert again.engine == min(("qs", "native"), key=full.timings.get)
+
+
+def test_narrow_resweep_keeps_richer_cache_entry(small_forest, tmp_path):
+    cache = str(tmp_path / "engines.json")
+    full = engine_select.choose(small_forest, 64, engines=CHEAP,
+                                cache_path=cache, repeats=1)
+    # a forced qs-only re-benchmark must not clobber the CHEAP-wide entry
+    engine_select.choose(small_forest, 64, engines=("qs",),
+                         cache_path=cache, force=True, repeats=1)
+    with open(cache) as f:
+        entry = json.load(f)[full.key]
+    assert set(entry["timings"]) == set(CHEAP)
+    c = engine_select.choose(small_forest, 64, engines=CHEAP,
+                             cache_path=cache, repeats=1)
+    assert c.from_cache
+
+
+def test_narrow_resweep_cannot_clobber_disk_via_memory_layer(small_forest,
+                                                            tmp_path):
+    """A narrow entry cached only in memory (cache_path=None) must not let
+    a later forced narrow sweep erase a wider entry on disk."""
+    cache = str(tmp_path / "engines.json")
+    full = engine_select.choose(small_forest, 64, engines=CHEAP,
+                                cache_path=cache, repeats=1)
+    engine_select.clear_cache()
+    engine_select.choose(small_forest, 64, engines=("qs",),
+                         cache_path=None, repeats=1)   # memory-only, narrow
+    engine_select.choose(small_forest, 64, engines=("qs",),
+                         cache_path=cache, force=True, repeats=1)
+    with open(cache) as f:
+        assert set(json.load(f)[full.key]["timings"]) == set(CHEAP)
+
+
+def test_partial_miss_benches_only_missing_engines(small_forest, tmp_path):
+    cache = str(tmp_path / "engines.json")
+    narrow = engine_select.choose(small_forest, 64, engines=("qs",),
+                                  cache_path=cache, repeats=1)
+    wider = engine_select.choose(small_forest, 64, engines=CHEAP,
+                                 cache_path=cache, repeats=1)
+    assert not wider.from_cache and set(wider.timings) == set(CHEAP)
+    # qs was not re-benchmarked: its cached timing is reused verbatim
+    assert wider.timings["qs"] == narrow.timings["qs"]
+
+
+def test_partial_miss_persists_merged_union_to_disk(small_forest, tmp_path):
+    cache = str(tmp_path / "engines.json")
+    narrow = engine_select.choose(small_forest, 64, engines=("qs",),
+                                  cache_path=None, repeats=1)  # memory-only
+    engine_select.choose(small_forest, 64, engines=CHEAP,
+                         cache_path=cache, repeats=1)
+    # the memory-only qs timing reached disk along with the fresh ones
+    with open(cache) as f:
+        entry = json.load(f)[narrow.key]
+    assert set(entry["timings"]) == set(CHEAP)
+
+
+def test_memory_hit_writes_through_to_disk(small_forest, tmp_path):
+    cache = str(tmp_path / "engines.json")
+    c1 = engine_select.choose(small_forest, 64, engines=CHEAP,
+                              cache_path=None, repeats=1)   # memory-only
+    c2 = engine_select.choose(small_forest, 64, engines=CHEAP,
+                              cache_path=cache, repeats=1)
+    assert c2.from_cache
+    with open(cache) as f:
+        assert set(json.load(f)[c1.key]["timings"]) == set(CHEAP)
+
+
+def test_overlapping_sweeps_merge_coverage(small_forest, tmp_path):
+    cache = str(tmp_path / "engines.json")
+    engine_select.choose(small_forest, 64, engines=("qs", "native"),
+                         cache_path=cache, repeats=1)
+    c2 = engine_select.choose(small_forest, 64, engines=("qs-bitmm",),
+                              cache_path=cache, repeats=1)
+    assert not c2.from_cache
+    # both sweeps' timings accumulated → the union now hits the cache
+    c3 = engine_select.choose(small_forest, 64, engines=CHEAP,
+                              cache_path=cache, repeats=1)
+    assert c3.from_cache and set(c3.timings) == set(CHEAP)
+
+
+def test_env_cache_path_resolved_per_call(small_forest, tmp_path,
+                                          monkeypatch):
+    cache = tmp_path / "env_cache.json"
+    monkeypatch.setenv("REPRO_ENGINE_CACHE", str(cache))
+    c = engine_select.choose(small_forest, 64, engines=("qs",), repeats=1)
+    assert cache.exists() and c.key in json.loads(cache.read_text())
+
+
+def test_disk_hit_warms_memory_layer(small_forest, tmp_path):
+    cache = str(tmp_path / "engines.json")
+    c1 = engine_select.choose(small_forest, 64, engines=CHEAP,
+                              cache_path=cache, repeats=1)
+    engine_select.clear_cache()             # simulate a fresh process
+    c2 = engine_select.choose(small_forest, 64, engines=CHEAP,
+                              cache_path=cache, repeats=1)
+    assert c2.from_cache
+    assert engine_select._MEM_CACHE[c1.key]["timings"] == c2.timings
+
+
 def test_choose_batch_bucketing(small_forest, tmp_path):
     cache = str(tmp_path / "engines.json")
     c1 = engine_select.choose(small_forest, 33, engines=CHEAP,

@@ -10,6 +10,10 @@ trajectory for future PRs) in addition to the usual CSV under
 ``experiments/bench/``.  Shapes follow REPRO_BENCH_SCALE; every scale
 includes at least one forest with >= 64 leaves/tree, where eliminating
 ``mask_reduce``'s (B, T, N, W) intermediate matters most.
+
+The candidate set comes from ``core.registry`` (via
+``engine_select.default_engines``) — engines registered once appear here
+automatically; there is no engine list to keep in sync.
 """
 from __future__ import annotations
 

@@ -1,7 +1,13 @@
-"""Dev sanity check: all engines vs the traversal oracle."""
+"""Dev sanity check: all registered engines vs the traversal oracle.
+
+The engine list comes from ``core.registry`` — a newly registered engine
+shows up here (and in the benchmarks and the agreement tests) with no
+edits to this file.
+"""
 import numpy as np
 
 from repro import core
+from repro.core import registry
 from repro.data import load
 from repro.trees import RandomForest, RandomForestConfig
 
@@ -12,7 +18,7 @@ forest = core.from_random_forest(rf)
 X = ds.X_test[:64]
 oracle = forest.predict_oracle(X)
 
-for engine in ("bitvector", "bitmm", "rapidscorer", "native", "unrolled", "gemm"):
+for engine in registry.engines("jax"):
     pred = core.compile_forest(forest, engine=engine)
     got = pred.predict(X)
     err = np.abs(got - oracle).max()
@@ -25,7 +31,7 @@ print(f"{'scalar-QS':12s} max_err={np.abs(sc - oracle[:8]).max():.2e}")
 # quantized
 qf = core.quantize_forest(forest, ds.X_train)
 oq = qf.predict_oracle(core.quantize_inputs(qf, X)) / core.leaf_scale(qf)
-for engine in ("bitvector", "bitmm", "rapidscorer", "native", "gemm"):
+for engine in registry.engines("jax"):
     pred = core.compile_forest(qf, engine=engine)
     got = pred.predict(X)
     err = np.abs(got - oq).max()

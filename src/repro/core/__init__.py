@@ -8,11 +8,20 @@ Typical use::
     forest = core.quantize_forest(forest, X_train)    # optional, paper §5
     pred = core.compile_forest(forest, engine="bitvector", backend="pallas")
     scores = pred.predict(X)                          # (B, C)
+
+Engines live in a single registry (``core.registry``); compilation runs
+through an explicit pass pipeline (``core.pipeline``: canonicalize →
+quantize → layout → lower), and any XLA engine can execute tree-sharded
+across a device mesh (``core.shard``).  See docs/DESIGN.md.
 """
 from .forest import (Forest, from_gradient_boosting, from_random_forest,
                      from_trees, random_forest_ir)
 from .quantize import (QuantSpec, feature_ranges, leaf_scale,
                        normalize_features, quantize_forest, quantize_inputs)
+from . import registry
+from .registry import (BasePredictor, EngineSpec, ForestEngine, Predictor,
+                       normalize_scores, register_engine)
+# importing the engine modules registers the XLA engines
 from .quickscorer import (BitMMPredictor, CompiledBitMM, CompiledQS,
                           QSPredictor, compile_qs, compile_qs_bitmm,
                           eval_batch, eval_batch_bitmm, eval_scalar_numpy,
@@ -23,40 +32,45 @@ from .baselines import (BaselinePredictor, compile_gemm, compile_native,
                         eval_gemm, eval_native, gemm_predictor,
                         native_predictor)
 
-ENGINES = ("bitvector", "bitmm", "rapidscorer", "native", "unrolled", "gemm")
+# the Pallas builders register lazily: resolving one imports the kernel
+# stack (repro.kernels.ops) on first use, never at `import repro.core`
+registry.register_deferred(
+    "bitvector", backend="pallas", tune_name="pallas-qs",
+    target="repro.kernels.ops:pallas_qs_predictor",
+    doc="QuickScorer with explicit VMEM tiling (Pallas kernel)")
+from .quickscorer import bitmm_pallas_layout
+registry.register_deferred(
+    "bitmm", backend="pallas", tune_name="pallas-bitmm",
+    target="repro.kernels.ops:pallas_bitmm_predictor",
+    layout=bitmm_pallas_layout,
+    doc="fused bit-matmul QuickScorer kernel (Pallas)")
+registry.register_deferred(
+    "gemm", backend="pallas", tune_name="pallas-gemm",
+    target="repro.kernels.ops:pallas_gemm_predictor",
+    doc="Hummingbird tensor traversal kernel (Pallas)")
+
+from .pipeline import CompilePlan, PassRecord, compile_plan
+
+
+def __getattr__(name):
+    # live view: engines registered after import (plugins, tests) appear
+    # in core.ENGINES too, matching registry.engines() at all times
+    if name == "ENGINES":
+        return registry.engines()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def compile_forest(forest: Forest, engine: str = "bitvector",
                    backend: str = "jax", **kw):
-    """Build a predictor for ``forest``.
+    """Build a predictor for ``forest`` via the pass pipeline.
 
-    engine:  bitvector (QS/VQS semantics) | rapidscorer (node merging) |
-             native | unrolled | gemm
-    backend: jax (XLA) | pallas (explicit TPU kernel; interpret mode on CPU)
+    engine / backend resolve through ``core.registry`` (no dispatch ladder
+    — registered engines: ``core.ENGINES``); ``**kw`` is forwarded to the
+    engine builder.  For quantization-as-a-pass or multi-device plans use
+    ``core.compile_plan`` directly.
     """
-    if backend == "pallas":
-        from ..kernels import ops
-        if engine == "bitvector":
-            return ops.pallas_qs_predictor(forest, **kw)
-        if engine == "bitmm":
-            return ops.pallas_bitmm_predictor(forest, **kw)
-        if engine == "gemm":
-            return ops.pallas_gemm_predictor(forest, **kw)
-        raise ValueError(
-            f"pallas backend supports bitvector|bitmm|gemm, got {engine}")
-    if engine == "bitvector":
-        return QSPredictor(compile_qs(forest))
-    if engine == "bitmm":
-        return BitMMPredictor(compile_qs_bitmm(forest, **kw))
-    if engine == "rapidscorer":
-        return RSPredictor(compile_rs(forest))
-    if engine == "native":
-        return native_predictor(forest, unroll=False)
-    if engine == "unrolled":
-        return native_predictor(forest, unroll=True)
-    if engine == "gemm":
-        return gemm_predictor(forest, **kw)
-    raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+    return compile_plan(forest, CompilePlan(engine=engine, backend=backend,
+                                            engine_kw=kw))
 
 
 __all__ = [
@@ -70,4 +84,7 @@ __all__ = [
     "RSPredictor", "merge_nodes", "merge_stats", "BaselinePredictor",
     "compile_native", "compile_gemm", "eval_native", "eval_gemm",
     "native_predictor", "gemm_predictor", "compile_forest", "ENGINES",
+    "registry", "register_engine", "EngineSpec", "ForestEngine",
+    "Predictor", "BasePredictor", "normalize_scores",
+    "CompilePlan", "PassRecord", "compile_plan",
 ]

@@ -21,6 +21,7 @@ import numpy as np
 
 from .forest import Forest
 from .quantize import leaf_scale, quantize_inputs
+from .registry import BasePredictor, register_engine
 
 
 # --------------------------------------------------------------------------- #
@@ -146,24 +147,40 @@ def eval_gemm(g: CompiledGEMM, X: jnp.ndarray) -> jnp.ndarray:
     return score.astype(jnp.float32) / g.leaf_scale
 
 
-class BaselinePredictor:
-    def __init__(self, compiled, fn):
-        self.compiled = compiled
-        self._fn = jax.jit(fn)
+def eval_unrolled(nat: CompiledNative, X: jnp.ndarray) -> jnp.ndarray:
+    """``native`` with the depth loop python-unrolled (IF-ELSE analogue)."""
+    return eval_native(nat, X, unroll=True)
 
-    def predict(self, X: np.ndarray) -> np.ndarray:
-        Xq = self.compiled.transform_inputs(np.asarray(X))
-        return np.asarray(self._fn(jnp.asarray(Xq)))
 
-    def predict_class(self, X: np.ndarray) -> np.ndarray:
-        return self.predict(X).argmax(axis=1)
+class BaselinePredictor(BasePredictor):
+    """Wrapper for the baseline engines (shared base: quantization + jit)."""
 
 
 def native_predictor(forest: Forest, unroll=False) -> BaselinePredictor:
     nat = compile_native(forest)
-    return BaselinePredictor(nat, lambda X: eval_native(nat, X, unroll=unroll))
+    return BaselinePredictor(nat, eval_unrolled if unroll else eval_native)
 
 
 def gemm_predictor(forest: Forest, compute_dtype=jnp.float32) -> BaselinePredictor:
     g = compile_gemm(forest, compute_dtype)
-    return BaselinePredictor(g, lambda X: eval_gemm(g, X))
+    return BaselinePredictor(g, eval_gemm)
+
+
+register_engine(
+    "native", tune_name="native", compile=compile_native,
+    evaluate=eval_native, predictor_cls=BaselinePredictor, shardable=True,
+    doc="per-level pointer-chasing traversal (fori_loop over depth)")
+register_engine(
+    "unrolled", tune_name="unrolled", compile=compile_native,
+    evaluate=eval_unrolled, predictor_cls=BaselinePredictor, shardable=True,
+    doc="native with the depth loop unrolled to straight-line HLO")
+def _gemm_layout(forest: Forest, plan) -> str:
+    dt = plan.engine_kw.get("compute_dtype")
+    return (f"dense (T,N,L) traversal matrices, "
+            f"dtype={getattr(dt, '__name__', dt) or 'f32'}")
+
+
+register_engine(
+    "gemm", tune_name="gemm", compile=compile_gemm, evaluate=eval_gemm,
+    predictor_cls=BaselinePredictor, shardable=True, layout=_gemm_layout,
+    doc="Hummingbird tensor traversal (two matmuls per tree block)")

@@ -8,11 +8,20 @@ size, returns the winner, and caches the decision — in memory for the
 process, and as JSON on disk so later processes (and the serving path,
 ``inference.server.ForestServer.from_forest``) skip the sweep entirely.
 
+Candidates come from ``core.registry`` (one registration per engine — no
+second table here); the autotuner's short names are the registry specs'
+``tune_name``.  Beyond the engine axis, the sweep can cover the other
+pipeline passes: ``quant_specs=`` adds fixed-point variants (paper §5) as
+``<engine>@q<bits>`` candidates, ``layout_specs=`` adds engine-kw layout
+variants (``<engine>@tree_chunk=32``), and ``n_devices=`` tunes the
+tree-sharded multi-device wrapper (``core.shard``) instead of
+single-device engines.
+
 Cache key: ``(jax backend, n_trees, n_leaves, n_classes, n_features,
-max_depth, threshold dtype, batch bucket)``.  Runtime is independent of
-the learned values, so device + shape/structure + dtype fully determine
-the ranking — and a winner measured on CPU is never replayed on TPU (or
-vice versa).
+max_depth, threshold dtype, batch bucket, n_devices)``.  Runtime is
+independent of the learned values, so device + shape/structure + dtype
+fully determine the ranking — and a winner measured on CPU is never
+replayed on TPU (or vice versa).
 
 Pallas engines run in interpret mode on CPU (orders of magnitude slower
 than compiled XLA), so they only enter the candidate set on a real TPU
@@ -23,46 +32,69 @@ from __future__ import annotations
 import json
 import os
 import time
+from collections.abc import Mapping
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import numpy as np
 
+from . import registry
 from .forest import Forest
+from .quantize import QuantSpec, quantize_forest
 
-# autotuner engine name → (core.compile_forest engine, backend); one
-# dispatch table, so new engines register once in core/__init__.py and
-# appear here with only a name-pair entry.
-ENGINE_SPECS: dict[str, tuple[str, str]] = {
-    "qs": ("bitvector", "jax"),
-    "qs-bitmm": ("bitmm", "jax"),
-    "rapidscorer": ("rapidscorer", "jax"),
-    "gemm": ("gemm", "jax"),
-    "native": ("native", "jax"),
-    "unrolled": ("unrolled", "jax"),
-    "pallas-qs": ("bitvector", "pallas"),
-    "pallas-bitmm": ("bitmm", "pallas"),
-    "pallas-gemm": ("gemm", "pallas"),
-}
+
+class _TuneTable(Mapping):
+    """Live view of ``registry.tune_table()`` — autotuner name →
+    (engine, backend).  A mapping object (not a snapshot dict) so engines
+    registered after import (plugins, tests) appear automatically."""
+
+    def __getitem__(self, name: str) -> tuple:
+        return registry.tune_table()[name]
+
+    def __iter__(self):
+        return iter(registry.tune_table())
+
+    def __len__(self):
+        return len(registry.tune_table())
+
+
+ENGINE_SPECS = _TuneTable()
 
 
 def _make_factory(name: str) -> Callable[[Forest], object]:
-    engine, backend = ENGINE_SPECS[name]
+    spec = registry.by_tune_name(name)
 
     def factory(forest: Forest):
-        from . import compile_forest
-        kw = {"interpret": _interpret()} if backend == "pallas" else {}
-        return compile_forest(forest, engine=engine, backend=backend, **kw)
+        kw = {"interpret": _interpret()} if spec.backend == "pallas" else {}
+        return registry.build(forest, spec.name, spec.backend, **kw)
 
     return factory
 
 
-ENGINE_FACTORIES: dict[str, Callable[[Forest], object]] = {
-    name: _make_factory(name) for name in ENGINE_SPECS
-}
+class _FactoryTable(Mapping):
+    """tune name → predictor factory, resolved through the registry."""
 
-XLA_ENGINES = ("qs", "qs-bitmm", "rapidscorer", "gemm", "native", "unrolled")
-PALLAS_ENGINES = ("pallas-qs", "pallas-bitmm", "pallas-gemm")
+    def __getitem__(self, name: str) -> Callable[[Forest], object]:
+        if name not in registry.tune_table():
+            raise KeyError(name)
+        return _make_factory(name)
+
+    def __iter__(self):
+        return iter(registry.tune_table())
+
+    def __len__(self):
+        return len(registry.tune_table())
+
+
+ENGINE_FACTORIES = _FactoryTable()
+
+
+def xla_engines() -> tuple:
+    return tuple(s.tune_name for s in registry.specs("jax"))
+
+
+def pallas_engines() -> tuple:
+    return tuple(s.tune_name for s in registry.specs("pallas"))
 
 
 def _on_tpu() -> bool:
@@ -77,7 +109,8 @@ def _interpret() -> bool:
 def default_engines(include_pallas: Optional[bool] = None) -> tuple:
     if include_pallas is None:
         include_pallas = _on_tpu()
-    return XLA_ENGINES + PALLAS_ENGINES if include_pallas else XLA_ENGINES
+    return xla_engines() + pallas_engines() if include_pallas \
+        else xla_engines()
 
 
 def bucket_batch(batch: int) -> int:
@@ -85,16 +118,18 @@ def bucket_batch(batch: int) -> int:
     return 1 << max(int(batch) - 1, 0).bit_length()
 
 
-def shape_key(forest: Forest, batch_bucket: int) -> str:
+def shape_key(forest: Forest, batch_bucket: int, n_devices: int = 1) -> str:
     # max_depth is part of the structure key: native/unrolled run
     # O(depth) iterations and bitmm's field packing widens with depth, so
     # a balanced and a chain-shaped forest with identical T/L/C/d rank
-    # engines very differently.
+    # engines very differently.  n_devices is part of the key because a
+    # tree-sharded winner on 8 devices says nothing about 1 device.
     import jax
     return (f"{jax.default_backend()}"
             f"_T{forest.n_trees}_L{forest.n_leaves}_C{forest.n_classes}"
             f"_d{forest.n_features}_D{forest.max_depth}"
-            f"_{np.dtype(forest.threshold.dtype).name}_B{batch_bucket}")
+            f"_{np.dtype(forest.threshold.dtype).name}_B{batch_bucket}"
+            f"_dev{n_devices}")
 
 
 _CACHE_DEFAULT = object()          # "cache_path not given" sentinel
@@ -150,10 +185,10 @@ def _store_disk(path: str, key: str, entry: dict) -> None:
 
 @dataclass
 class EngineChoice:
-    engine: str                    # winning engine name
+    engine: str                    # winning candidate name
     key: str                       # shape/batch cache key
     predictor: object              # ready-to-serve predictor for `engine`
-    timings: dict = field(default_factory=dict)   # engine → median seconds
+    timings: dict = field(default_factory=dict)   # candidate → median secs
     from_cache: bool = False
 
     def predict(self, X):
@@ -170,39 +205,145 @@ def _bench_once(pred, X: np.ndarray, repeats: int) -> float:
     return float(np.median(ts))
 
 
+def _layout_tag(kw: dict) -> str:
+    return ",".join(f"{k}={kw[k]}" for k in sorted(kw))
+
+
+def _quant_tag(q: QuantSpec) -> str:
+    """Candidate-name tag for a QuantSpec — encodes every field that
+    changes the compiled variant, so distinct specs never alias in the
+    timing cache (``q16`` for the default, suffixes otherwise)."""
+    tag = f"q{q.bits}"
+    if q.scale is not None:
+        tag += f"s{q.scale:g}"
+    if not q.quantize_splits:
+        tag += "-nosplits"
+    if not q.quantize_leaves:
+        tag += "-noleaves"
+    return tag
+
+
+def _candidate_factories(forest: Forest, engines: tuple,
+                         quant_specs: Optional[tuple],
+                         layout_specs: Optional[dict],
+                         n_devices: int) -> dict[str, Callable]:
+    """Candidate name → zero-arg predictor factory.
+
+    The candidate axis is the (engine × quantization × layout) product of
+    the pipeline's passes: plain tune names for the forest as-is,
+    ``<engine>@q<bits>`` per ``QuantSpec``, and ``<engine>@<kw=v,...>``
+    per entry of ``layout_specs[engine]`` (engine-kw overrides such as
+    bitmm's ``tree_chunk`` or gemm block sizes).  With ``n_devices > 1``
+    each candidate is wrapped tree-sharded (non-shardable engines are
+    rejected up front)."""
+    if quant_specs and forest.quant_scale is not None:
+        raise ValueError("quant_specs sweep needs a float forest "
+                         "(this one is already quantized)")
+    unknown = set(layout_specs or ()) - set(engines)
+    if unknown:
+        # a silently ignored key would make the caller believe the cached
+        # winner was layout-tuned when the sweep never ran
+        raise ValueError(f"layout_specs keys {sorted(unknown)} are not in "
+                         f"the requested engine set {tuple(engines)} "
+                         "(use autotuner tune names, e.g. 'qs-bitmm')")
+    quants: tuple = (None,) + (tuple(quant_specs) if quant_specs else ())
+    variants: list[tuple[str, Optional[QuantSpec], Optional[dict]]] = [
+        (e, q, kw)
+        for e in engines for q in quants
+        for kw in (None,) + tuple((layout_specs or {}).get(e, ()))]
+
+    qforests: dict[int, Forest] = {}   # one quantized forest per spec
+
+    def qf(q: Optional[QuantSpec]) -> Forest:
+        if q is None:
+            return forest
+        if id(q) not in qforests:
+            qforests[id(q)] = quantize_forest(forest, None, q)
+        return qforests[id(q)]
+
+    def make(name: str, q: Optional[QuantSpec],
+             kw: Optional[dict]) -> Callable:
+        spec = registry.by_tune_name(name)
+        ekw = dict(kw or {})
+        if n_devices > 1:
+            if not spec.shardable:
+                raise ValueError(
+                    f"engine {name!r} cannot run tree-sharded "
+                    f"(n_devices={n_devices}); restrict engines= to "
+                    f"{[s.tune_name for s in registry.specs() if s.shardable]}")
+
+            def factory():
+                from . import shard
+                return shard.tree_sharded(qf(q), spec.name,
+                                          n_devices=n_devices, **ekw)
+        else:
+            if spec.backend == "pallas":
+                ekw.setdefault("interpret", _interpret())
+
+            def factory():
+                return registry.build(qf(q), spec.name, spec.backend, **ekw)
+
+        return factory
+
+    def cname(e: str, q: Optional[QuantSpec], kw: Optional[dict]) -> str:
+        name = e if q is None else f"{e}@{_quant_tag(q)}"
+        return name if kw is None else f"{name}@{_layout_tag(kw)}"
+
+    return {cname(e, q, kw): make(e, q, kw) for e, q, kw in variants}
+
+
 def choose(forest: Forest, batch: int, *, engines=None,
            include_pallas: Optional[bool] = None,
+           quant_specs: Optional[tuple] = None,
+           layout_specs: Optional[dict] = None,
+           n_devices: int = 1,
            cache_path=_CACHE_DEFAULT,
            force: bool = False, repeats: int = 3,
            seed: int = 0) -> EngineChoice:
-    """Pick the fastest engine for ``forest`` at this batch-size bucket.
+    """Pick the fastest candidate for ``forest`` at this batch-size bucket.
 
-    Cache hits (in-memory, then the JSON file at ``cache_path``) skip the
-    sweep and only build the winning predictor.  A cached entry counts as
-    a hit only if its accumulated sweeps covered every engine the caller
-    asked for — the winner is then re-derived over the requested subset —
-    so a narrow ``engines=`` sweep can never answer for the full matrix;
-    a partial-coverage miss benchmarks only the engines not yet measured.
-    New sweeps merge into the cached entry (timings union, both layers),
-    so within a process coverage only grows and a narrow re-sweep never
-    erases wider measurements; cross-process disk merges are best-effort
-    (unlocked read-merge-replace — see ``_store_disk``).  Merged timings
-    may come from different runs (machine load, ``repeats``) — the cache
-    assumes per-shape rankings are stable enough that this is fine.
+    Candidates are (engine × quantization × layout) variants — see
+    ``_candidate_factories``; ``n_devices > 1`` tunes the tree-sharded
+    wrapper instead.  Cache hits (in-memory, then the JSON file at
+    ``cache_path``) skip the sweep and only build the winning predictor.
+    A cached entry counts as a hit only if its accumulated sweeps covered
+    every candidate the caller asked for — the winner is then re-derived
+    over the requested subset — so a narrow ``engines=`` sweep can never
+    answer for the full matrix; a partial-coverage miss benchmarks only
+    the candidates not yet measured.  New sweeps merge into the cached
+    entry (timings union, both layers), so within a process coverage only
+    grows and a narrow re-sweep never erases wider measurements;
+    cross-process disk merges are best-effort (unlocked
+    read-merge-replace — see ``_store_disk``).  Merged timings may come
+    from different runs (machine load, ``repeats``) — the cache assumes
+    per-shape rankings are stable enough that this is fine.
     When ``cache_path`` is omitted it defaults to ``$REPRO_ENGINE_CACHE``
     (or ``~/.cache/repro/engine_cache.json``); ``cache_path=None``
     disables the disk layer entirely.  ``force=True`` re-benchmarks
     regardless of any cached entry."""
-    engines = tuple(engines) if engines is not None \
-        else default_engines(include_pallas)
+    if engines is None:
+        engines = default_engines(include_pallas)
+        if n_devices > 1:
+            # the *default* set narrows to shardable engines (on TPU it
+            # includes pallas, which can't tree-shard); an explicit
+            # engines= list still errors loudly on non-shardable entries
+            engines = tuple(e for e in engines
+                            if registry.by_tune_name(e).shardable)
+    else:
+        engines = tuple(engines)
+    factories = _candidate_factories(forest, engines,
+                                     tuple(quant_specs) if quant_specs
+                                     else None, layout_specs, n_devices)
+    candidates = tuple(factories)
     if cache_path is _CACHE_DEFAULT:
         cache_path = default_cache_path()
     bucket = bucket_batch(batch)
-    key = shape_key(forest, bucket)
+    key = shape_key(forest, bucket, n_devices)
 
     prior = _MEM_CACHE.get(key)
     if cache_path and not (prior is not None
-                           and set(engines) <= set(prior.get("timings", {}))):
+                           and set(candidates)
+                           <= set(prior.get("timings", {}))):
         disk = _load_disk(cache_path).get(key)
         if disk is not None:           # warm/widen the memory layer
             if prior is None:
@@ -215,34 +356,34 @@ def choose(forest: Forest, batch: int, *, engines=None,
             _MEM_CACHE[key] = prior
     if not force and prior is not None:
         cached = prior.get("timings", {})
-        if set(engines) <= set(cached):
-            winner = min(engines, key=cached.get)
+        if set(candidates) <= set(cached):
+            winner = min(candidates, key=cached.get)
             if cache_path and (cache_path, key) not in _PERSISTED:
                 # write-through: the entry may exist only in memory (e.g.
                 # swept earlier with cache_path=None); a merge against the
                 # file is idempotent and trivial next to the compile below
                 _store_disk(cache_path, key, prior)
             return EngineChoice(engine=winner, key=key,
-                                predictor=ENGINE_FACTORIES[winner](forest),
-                                timings={e: cached[e] for e in engines},
+                                predictor=factories[winner](),
+                                timings={e: cached[e] for e in candidates},
                                 from_cache=True)
 
     cached = (prior or {}).get("timings", {})
-    to_bench = engines if force \
-        else tuple(e for e in engines if e not in cached)
+    to_bench = candidates if force \
+        else tuple(e for e in candidates if e not in cached)
     X = np.random.default_rng(seed).normal(
         0, 1.0, size=(bucket, forest.n_features))
     fresh: dict[str, float] = {}
     best_pred, best_t = None, float("inf")
     for name in to_bench:
-        pred = ENGINE_FACTORIES[name](forest)
+        pred = factories[name]()
         fresh[name] = _bench_once(pred, X, repeats)
         # keep only the best-so-far predictor: peak memory stays
         # max(current, best) instead of the sum over the engine matrix
         if fresh[name] < best_t:
             best_pred, best_t = pred, fresh[name]
     # partial-coverage miss: cached timings fill in the engines we skipped
-    timings = {e: fresh.get(e, cached.get(e)) for e in engines}
+    timings = {e: fresh.get(e, cached.get(e)) for e in candidates}
     winner = min(timings, key=timings.get)
     # the stored engine must be the winner over the entry's own timings
     # (merges re-derive it over the union; lookups re-derive per request)
@@ -257,7 +398,7 @@ def choose(forest: Forest, batch: int, *, engines=None,
     return EngineChoice(
         engine=winner, key=key,
         predictor=best_pred if winner in fresh
-        else ENGINE_FACTORIES[winner](forest),
+        else factories[winner](),
         timings=timings, from_cache=False)
 
 

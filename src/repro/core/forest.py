@@ -10,10 +10,13 @@ kernels) compile from this IR. Canonicalisation guarantees:
   * every tree is padded to the ensemble-wide ``n_leaves_max`` (L) /
     ``n_nodes_max`` (L-1) so arrays are rectangular.
 
-Bit convention (differs from the paper, see DESIGN.md §2.2): leaf ``j`` of a
-tree owns bit ``j % 32`` of word ``j // 32`` (LSB-first). The paper's
+Bit convention (differs from the paper, see docs/DESIGN.md §2.2): leaf ``j``
+of a tree owns bit ``j % 32`` of word ``j // 32`` (LSB-first). The paper's
 "leftmost set bit" becomes "lowest set bit across words", computed with
 ``popcount((w & -w) - 1)``.
+
+Canonicalisation is the ``canonicalize`` pass of the compile pipeline
+(``core/pipeline.py``); ``from_trees`` below is its workhorse.
 """
 from __future__ import annotations
 

@@ -1,0 +1,186 @@
+"""Pass-based forest compiler: canonicalize → quantize → layout → lower.
+
+``compile_forest`` used to be an if/elif ladder and quantization an ad-hoc
+mutation the caller had to remember.  This module restructures the
+``Forest → predictor`` path into an explicit pass pipeline (docs/DESIGN.md
+§3), the way InTreeger treats integer-only lowering and PACSET treats
+layout as compiler stages:
+
+  * **canonicalize** — accept a trainer (RandomForest / GradientBoosting),
+    a list of CART trees, or an already-canonical ``Forest`` and produce
+    the padded SoA IR (in-order leaves, preorder nodes — DESIGN.md §1).
+  * **quantize**     — apply ``QuantSpec`` fixed-point lowering (paper §5)
+    as a named pass; a no-op when the plan carries no spec or the forest
+    is already quantized.
+  * **layout**       — engine-aware memory-layout decisions: bitmm's leaf
+    field packing (bits × npack) and tree-tile size, gemm's compute dtype —
+    recorded on the plan so the autotuner can sweep them.
+  * **lower**        — resolve the engine through ``core.registry`` and
+    build the predictor; wraps it in tree-sharded multi-device execution
+    (``core/shard.py``) when ``plan.n_devices > 1``.
+
+Every pass appends a ``PassRecord`` to the ``CompilePlan``, so a compiled
+predictor can always explain how it was built (``pred.plan.describe()``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from . import registry
+from .forest import Forest, from_trees
+from .quantize import QuantSpec, quantize_forest
+
+
+@dataclass(frozen=True)
+class PassRecord:
+    name: str
+    detail: str
+
+
+@dataclass
+class CompilePlan:
+    """Declarative compile request + the record of what each pass did.
+
+    ``engine_kw`` is forwarded to the engine's registered builder; passes
+    may fill defaults into it (e.g. layout's ``tree_chunk``) but never
+    override caller-provided values.
+    """
+    engine: str = "bitvector"
+    backend: str = "jax"
+    quant: Optional[QuantSpec] = None     # None → keep the forest's dtypes
+    n_devices: int = 1
+    engine_kw: dict = field(default_factory=dict)
+    records: list = field(default_factory=list)
+
+    def record(self, name: str, detail: str) -> None:
+        self.records.append(PassRecord(name, detail))
+
+    def describe(self) -> str:
+        return " → ".join(f"{r.name}[{r.detail}]" for r in self.records)
+
+
+# --------------------------------------------------------------------------- #
+# Pass registry
+# --------------------------------------------------------------------------- #
+PASSES: dict[str, Callable] = {}
+PIPELINE = ("canonicalize", "quantize", "layout", "lower")
+
+
+def forest_pass(name: str):
+    def deco(fn):
+        PASSES[name] = fn
+        return fn
+    return deco
+
+
+@forest_pass("canonicalize")
+def canonicalize(obj, plan: CompilePlan, ctx: dict) -> Forest:
+    """Anything tree-shaped → canonical padded SoA ``Forest`` IR."""
+    if isinstance(obj, Forest):
+        forest = obj
+        how = "already canonical"
+    elif hasattr(obj, "cfg") and hasattr(obj.cfg, "objective"):
+        from .forest import from_gradient_boosting
+        forest = from_gradient_boosting(obj)
+        how = "from GradientBoosting"
+    elif hasattr(obj, "trees") and hasattr(obj, "n_classes"):
+        from .forest import from_random_forest
+        forest = from_random_forest(obj)
+        how = "from RandomForest"
+    elif isinstance(obj, (list, tuple)):
+        forest = from_trees(list(obj), n_features=ctx["n_features"],
+                            n_classes=ctx.get("n_classes", 1))
+        how = f"from {len(obj)} trees"
+    else:
+        raise TypeError(f"cannot canonicalize {type(obj).__name__} into a "
+                        "Forest (expected Forest, trainer, or tree list)")
+    plan.record("canonicalize",
+                f"{how}: T={forest.n_trees} L={forest.n_leaves} "
+                f"C={forest.n_classes} d={forest.n_features} "
+                f"depth={forest.max_depth}")
+    return forest
+
+
+@forest_pass("quantize")
+def quantize(forest: Forest, plan: CompilePlan, ctx: dict) -> Forest:
+    """Fixed-point lowering (paper §5) as a compilation stage."""
+    if plan.quant is None:
+        plan.record("quantize", "skipped (float forest)")
+        return forest
+    if forest.quant_scale is not None:
+        plan.record("quantize", "skipped (already quantized)")
+        return forest
+    qf = quantize_forest(forest, ctx.get("X_calib"), plan.quant)
+    calib = "data" if ctx.get("X_calib") is not None else "thresholds"
+    plan.record("quantize",
+                f"{plan.quant.bits}b scale={qf.quant_scale:g} "
+                f"leaf_scale={qf.leaf_scale:g} calib={calib}")
+    return qf
+
+
+@forest_pass("layout")
+def layout(forest: Forest, plan: CompilePlan, ctx: dict) -> Forest:
+    """Engine-aware memory-layout decisions, recorded on the plan.
+
+    Layout belongs to the compiler, not the engine (PACSET): each
+    registered engine may carry a ``layout`` hook that chooses packing /
+    tiling defaults (written into ``plan.engine_kw`` — caller-provided
+    values always win) and returns the recorded detail.  Engines without
+    a hook use the IR's tree-major SoA as-is."""
+    spec = registry.get(plan.engine, plan.backend)
+    if spec.layout is not None:
+        plan.record("layout", spec.layout(forest, plan))
+    elif plan.backend == "pallas":
+        plan.record("layout", "tree-major SoA, VMEM tiles")
+    else:
+        plan.record("layout", "tree-major SoA")
+    return forest
+
+
+@forest_pass("lower")
+def lower(forest: Forest, plan: CompilePlan, ctx: dict):
+    """Resolve the engine through the registry and build the predictor."""
+    spec = registry.get(plan.engine, plan.backend)
+    if plan.n_devices > 1:
+        if plan.backend != "jax":
+            raise ValueError(
+                f"tree-sharded execution (n_devices={plan.n_devices}) "
+                f"supports the jax backend only, not {plan.backend!r}")
+        from . import shard
+        pred = shard.tree_sharded(forest, plan.engine,
+                                  n_devices=plan.n_devices,
+                                  **plan.engine_kw)
+        plan.record("lower", f"{spec.tune_name} × {plan.n_devices} devices "
+                             "(tree-sharded partial sums)")
+    else:
+        pred = spec.builder()(forest, **plan.engine_kw)
+        plan.record("lower", f"{spec.tune_name} ({plan.engine}/{plan.backend})")
+    pred.plan = plan
+    return pred
+
+
+def compile_plan(obj, plan: Optional[CompilePlan] = None, *,
+                 X_calib: Optional[np.ndarray] = None,
+                 n_features: Optional[int] = None, n_classes: int = 1,
+                 **plan_kw):
+    """Run the full pipeline on ``obj`` (Forest / trainer / tree list).
+
+    Either pass a ``CompilePlan`` or keyword fields for one::
+
+        pred = compile_plan(forest, engine="bitmm", quant=QuantSpec(16))
+
+    ``X_calib`` feeds the quantize pass's feature ranges; ``n_features`` /
+    ``n_classes`` are only needed when ``obj`` is a bare tree list.
+    """
+    if plan is None:
+        plan = CompilePlan(**plan_kw)
+    elif plan_kw:
+        raise TypeError("pass either a CompilePlan or plan kwargs, not both")
+    ctx = {"X_calib": X_calib, "n_features": n_features,
+           "n_classes": n_classes}
+    for name in PIPELINE:
+        obj = PASSES[name](obj, plan, ctx)
+    return obj

@@ -11,6 +11,11 @@ per-feature order-preserving min-max normalisation to [0, 1) is applied
 but makes the fixed-point grid meaningful. Heavy-tailed features (EEG) get
 their threshold mass compressed by this — exactly the failure mode the paper
 observes in Tables 3/4.
+
+In the compile pipeline this is the ``quantize`` pass
+(``core/pipeline.py``): pass ``quant=QuantSpec(...)`` to
+``core.compile_plan`` instead of mutating the forest by hand, and the
+autotuner sweeps it as the ``<engine>@q<bits>`` candidate axis.
 """
 from __future__ import annotations
 

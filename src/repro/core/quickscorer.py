@@ -42,6 +42,7 @@ import numpy as np
 
 from .forest import Forest, WORD
 from .quantize import leaf_scale, quantize_inputs
+from .registry import BasePredictor, register_engine
 
 
 @dataclass
@@ -136,19 +137,12 @@ def eval_batch(qs: CompiledQS, X: jnp.ndarray) -> jnp.ndarray:
     return score.astype(jnp.float32) / qs.leaf_scale
 
 
-class QSPredictor:
-    """User-facing engine wrapper: handles input quantization + jit cache."""
+class QSPredictor(BasePredictor):
+    """Bitvector-engine wrapper (shared base: quantization + jit cache)."""
 
-    def __init__(self, qs: CompiledQS):
+    def __init__(self, qs: CompiledQS, eval_fn=None):
+        super().__init__(qs, eval_fn or eval_batch)
         self.qs = qs
-        self._fn = jax.jit(lambda X: eval_batch(self.qs, X))
-
-    def predict(self, X: np.ndarray) -> np.ndarray:
-        Xq = self.qs.transform_inputs(np.asarray(X))
-        return np.asarray(self._fn(jnp.asarray(Xq)))
-
-    def predict_class(self, X: np.ndarray) -> np.ndarray:
-        return self.predict(X).argmax(axis=1)
 
 
 # --------------------------------------------------------------------------- #
@@ -198,15 +192,17 @@ def bitmm_full_word(bits: int, npack: int) -> int:
     return sum(1 << (bits * i) for i in range(npack))
 
 
-def bitmm_pack_arrays(forest: Forest):
-    """Host-side packed clearbits: returns (packed (T,N,G) f32,
-    bias (T,G) f32, bits, npack).  Shared by the XLA engine and the Pallas
-    kernel wrapper."""
+def bitmm_field_layout(forest: Forest) -> tuple[int, int]:
+    """Leaf-packing layout for the bit-matmul engine: (bits, npack).
+
+    ``bits`` is sized from the forest's maximum per-leaf clear count (how
+    many ancestors can clear one leaf), ``npack = 24 // bits`` leaves share
+    one f32 word.  Exposed separately so the compiler's layout pass
+    (``core/pipeline.py``) can record the decision."""
     T, L, N = forest.n_trees, forest.n_leaves, forest.nodes_per_tree
     valid = forest.feature >= 0
     lo = np.where(valid, forest.leaf_lo, 0)
     mid = np.where(valid, forest.leaf_mid, 0)
-
     # per-leaf clear counts via a difference array → field width
     diff = np.zeros((T, L + 1), dtype=np.int64)
     t_idx = np.repeat(np.arange(T), N)[valid.ravel()]
@@ -216,6 +212,23 @@ def bitmm_pack_arrays(forest: Forest):
     field_max = max(int(counts.max(initial=0)), 1)   # bias fields hold 1
     bits = max(int(np.ceil(np.log2(field_max + 1))), 1)
     npack = max(24 // bits, 1)
+    return bits, npack
+
+
+def bitmm_auto_chunk(n_trees: int, nodes_per_tree: int) -> int:
+    """Default tree-tile size: ~16k nodes per scan tile."""
+    return min(n_trees, max(1, 16384 // max(nodes_per_tree, 1)))
+
+
+def bitmm_pack_arrays(forest: Forest):
+    """Host-side packed clearbits: returns (packed (T,N,G) f32,
+    bias (T,G) f32, bits, npack).  Shared by the XLA engine and the Pallas
+    kernel wrapper."""
+    T, L, N = forest.n_trees, forest.n_leaves, forest.nodes_per_tree
+    valid = forest.feature >= 0
+    lo = np.where(valid, forest.leaf_lo, 0)
+    mid = np.where(valid, forest.leaf_mid, 0)
+    bits, npack = bitmm_field_layout(forest)
     G = (L + npack - 1) // npack
     Lp = G * npack
 
@@ -241,7 +254,7 @@ def compile_qs_bitmm(forest: Forest,
     packed, bias, bits, npack = bitmm_pack_arrays(forest)
     G = packed.shape[-1]
     if tree_chunk is None:
-        tree_chunk = min(T, max(1, 16384 // max(N, 1)))
+        tree_chunk = bitmm_auto_chunk(T, N)
     tree_chunk = max(1, min(tree_chunk, T))
     # rebalance so the last tile is nearly full (pad < n_chunks trees)
     n_chunks = -(-T // tree_chunk)
@@ -352,20 +365,12 @@ def eval_batch_bitmm(bm: CompiledBitMM, X: jnp.ndarray) -> jnp.ndarray:
     return score.astype(jnp.float32) / bm.leaf_scale
 
 
-class BitMMPredictor:
-    """Engine wrapper for the bit-matmul path (same interface as
-    QSPredictor: input quantization + jit cache)."""
+class BitMMPredictor(BasePredictor):
+    """Bit-matmul engine wrapper (shared base: quantization + jit cache)."""
 
-    def __init__(self, bm: CompiledBitMM):
+    def __init__(self, bm: CompiledBitMM, eval_fn=None):
+        super().__init__(bm, eval_fn or eval_batch_bitmm)
         self.bm = bm
-        self._fn = jax.jit(lambda X: eval_batch_bitmm(self.bm, X))
-
-    def predict(self, X: np.ndarray) -> np.ndarray:
-        Xq = self.bm.transform_inputs(np.asarray(X))
-        return np.asarray(self._fn(jnp.asarray(Xq)))
-
-    def predict_class(self, X: np.ndarray) -> np.ndarray:
-        return self.predict(X).argmax(axis=1)
 
 
 # --------------------------------------------------------------------------- #
@@ -418,3 +423,48 @@ def eval_scalar_numpy(forest: Forest, X: np.ndarray) -> np.ndarray:
                     break
             out[i] += lv[t, leaf]
     return out / leaf_scale(forest)
+
+
+# --------------------------------------------------------------------------- #
+# Registry entries (docs/DESIGN.md §4)
+# --------------------------------------------------------------------------- #
+def _bitmm_layout(forest: Forest, plan) -> str:
+    """Pipeline layout hook: pick the leaf packing + tree tiling."""
+    bits, npack = bitmm_field_layout(forest)
+    if plan.n_devices > 1:
+        # the tile size must divide the per-shard tree count — that is
+        # _bitmm_shard_kw's call, made after the forest is device-padded
+        return f"leaf-pack {bits}b×{npack}, tree_chunk=per-shard"
+    plan.engine_kw.setdefault(
+        "tree_chunk", bitmm_auto_chunk(forest.n_trees,
+                                       forest.nodes_per_tree))
+    return (f"leaf-pack {bits}b×{npack}, "
+            f"tree_chunk={plan.engine_kw['tree_chunk']}")
+
+
+def bitmm_pallas_layout(forest: Forest, plan) -> str:
+    """Layout hook for the Pallas bitmm backend (tiling is block_* kw)."""
+    bits, npack = bitmm_field_layout(forest)
+    return f"leaf-pack {bits}b×{npack}, VMEM tiles"
+
+
+def _bitmm_shard_kw(forest: Forest, n_shards: int) -> dict:
+    """Tree-sharded bitmm needs a ``tree_chunk`` that divides the per-shard
+    tree count, so every device reshapes its local tile stack the same way
+    (the forest is already padded to a multiple of ``n_shards``)."""
+    local = forest.n_trees // n_shards
+    target = max(1, min(local, bitmm_auto_chunk(forest.n_trees,
+                                                forest.nodes_per_tree)))
+    chunk = max(d for d in range(1, target + 1) if local % d == 0)
+    return {"tree_chunk": chunk}
+
+
+register_engine(
+    "bitvector", tune_name="qs", compile=compile_qs, evaluate=eval_batch,
+    predictor_cls=QSPredictor, shardable=True,
+    doc="QuickScorer: predicated interval-mask AND-reduction over nodes")
+register_engine(
+    "bitmm", tune_name="qs-bitmm", compile=compile_qs_bitmm,
+    evaluate=eval_batch_bitmm, predictor_cls=BitMMPredictor,
+    shardable=True, shard_kw=_bitmm_shard_kw, layout=_bitmm_layout,
+    doc="bit-matmul QuickScorer: packed clear-count GEMM on the MXU")

@@ -21,6 +21,7 @@ import numpy as np
 from .forest import Forest
 from .quantize import leaf_scale
 from .quickscorer import CompiledQS, compile_qs, exit_leaf, mask_reduce
+from .registry import BasePredictor, register_engine
 
 
 @dataclass
@@ -80,14 +81,18 @@ def eval_batch(rs: CompiledRS, X: jnp.ndarray) -> jnp.ndarray:
     return vals.astype(acc_dtype).sum(axis=1).astype(jnp.float32) / qs.leaf_scale
 
 
-class RSPredictor:
-    def __init__(self, rs: CompiledRS):
+class RSPredictor(BasePredictor):
+    """Node-merged engine wrapper (shared base: quantization + jit)."""
+
+    def __init__(self, rs: CompiledRS, eval_fn=None):
+        super().__init__(rs, eval_fn or eval_batch)
         self.rs = rs
-        self._fn = jax.jit(lambda X: eval_batch(self.rs, X))
 
-    def predict(self, X: np.ndarray) -> np.ndarray:
-        Xq = self.rs.transform_inputs(np.asarray(X))
-        return np.asarray(self._fn(jnp.asarray(Xq)))
 
-    def predict_class(self, X: np.ndarray) -> np.ndarray:
-        return self.predict(X).argmax(axis=1)
+# The unique-node table (u_feat/u_thr) is ensemble-global: tree-sharding
+# splits only the per-tree inverse map, every shard keeps the full table.
+register_engine(
+    "rapidscorer", tune_name="rapidscorer", compile=compile_rs,
+    evaluate=eval_batch, predictor_cls=RSPredictor, shardable=True,
+    replicated=("u_feat", "u_thr"),
+    doc="RapidScorer: node-merged QuickScorer (shared thresholds collapse)")

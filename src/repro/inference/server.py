@@ -117,6 +117,7 @@ class ForestServer:
     @classmethod
     def from_forest(cls, forest, *, max_batch: int = 256,
                     max_wait_ms: float = 2.0, engines=None,
+                    n_devices: int = 1,
                     cache_path=_CACHE_UNSET, **choose_kw) -> "ForestServer":
         """Build a server on the autotuned fastest engine for this forest.
 
@@ -124,6 +125,9 @@ class ForestServer:
         for the batch shape the micro-batcher will actually emit.  The
         decision comes from ``core.engine_select``'s cache when one exists
         (in-memory or the JSON file), so restarts skip the sweep.
+        ``n_devices > 1`` serves the winner tree-sharded across the device
+        mesh (``core.shard``); the autotune cache key includes the device
+        count, so single- and multi-device decisions never alias.
         ``cache_path=None`` disables the disk layer (as in ``choose``);
         omitting it uses the default cache file."""
         from ..core import engine_select
@@ -131,11 +135,16 @@ class ForestServer:
         if cache_path is not cls._CACHE_UNSET:
             kw["cache_path"] = cache_path
         choice = engine_select.choose(forest, max_batch, engines=engines,
-                                      **kw)
+                                      n_devices=n_devices, **kw)
         srv = cls(choice.predictor, max_batch=max_batch,
                   max_wait_ms=max_wait_ms)
         srv.engine_choice = choice
         return srv
+
+    def predict_proba(self, X: np.ndarray) -> np.ndarray:
+        """Normalized class scores (paper §4) from the serving engine —
+        synchronous path, bypasses the micro-batcher."""
+        return self.predictor.predict_proba(X)
 
     def submit(self, features: np.ndarray,
                arrival_s: Optional[float] = None) -> Request:

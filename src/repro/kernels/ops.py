@@ -10,6 +10,7 @@ from ..core.engine_select import bucket_batch
 from ..core.forest import Forest
 from ..core.quantize import leaf_scale, quantize_inputs
 from ..core.quickscorer import bitmm_full_word, bitmm_pack_arrays
+from ..core.registry import BasePredictor
 from . import gemm_forest_kernel, quickscorer_kernel
 
 
@@ -37,25 +38,31 @@ def bucket_rows(n: int, block_b: int) -> int:
     return block_b * bucket_batch(-(-n // block_b))
 
 
-class _PallasPredictor:
+class _PallasPredictor(BasePredictor):
+    """Kernel-backed predictor on the shared base: overrides the predict
+    path for batch bucketing/padding, inherits predict_class/proba."""
+
     def __init__(self, forest: Forest, fn, block_b: int):
+        # no BasePredictor.__init__: fn is already jit'd by the builders
+        # and the "compiled" state is the host forest + closure arrays
         self.forest = forest
         self._fn = fn
         self.block_b = block_b
         self.leaf_scale = leaf_scale(forest)
         self._buckets: set[int] = set()
 
+    def transform_inputs(self, X: np.ndarray) -> np.ndarray:
+        return quantize_inputs(self.forest,
+                               np.asarray(X)).astype(np.float32)
+
     def predict(self, X: np.ndarray) -> np.ndarray:
-        Xq = quantize_inputs(self.forest, np.asarray(X)).astype(np.float32)
+        Xq = self.transform_inputs(X)
         B = Xq.shape[0]
         bucket = bucket_rows(B, self.block_b)
         self._buckets.add(bucket)
         Xp = _pad_to(Xq, 0, bucket)
         out = np.asarray(self._fn(jnp.asarray(Xp)))
         return out[:B] / self.leaf_scale
-
-    def predict_class(self, X: np.ndarray) -> np.ndarray:
-        return self.predict(X).argmax(axis=1)
 
     @property
     def n_compiles(self) -> int:

@@ -1,17 +1,40 @@
-"""Engine equivalence: every engine ≡ the numpy traversal oracle,
-float and quantized, scalar and multiclass, single- and multi-word."""
+"""Engine equivalence: every *registered* engine ≡ the oracles, float and
+quantized, scalar and multiclass, single- and multi-word.
+
+The parametrization is sourced from ``core.registry`` — registering a new
+engine automatically enrolls it in the shared agreement suite below
+(engine × backend × float/quantized vs ``eval_scalar_numpy``)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro import core
+from repro.core import registry
 from repro.core.quickscorer import (compile_qs, ctz32, eval_batch,
                                     eval_scalar_numpy, exit_leaf)
 from repro.core.rapidscorer import compile_rs, eval_batch as rs_eval
 
 from conftest import rand_X
 
-ENGINES = ["bitvector", "bitmm", "rapidscorer", "native", "unrolled", "gemm"]
+ENGINES = list(registry.engines("jax"))
+COMBOS = [(s.name, s.backend) for s in registry.specs()]
+COMBO_IDS = [f"{n}/{b}" for n, b in COMBOS]
+
+
+def _compile(forest, name, backend):
+    kw = {"interpret": True} if backend == "pallas" else {}
+    return core.compile_forest(forest, engine=name, backend=backend, **kw)
+
+
+def scalar_oracle_f32(forest, X_raw):
+    """``eval_scalar_numpy`` recast to the engines' float32 arithmetic.
+
+    For quantized forests both sides compute exact integer leaf sums and
+    divide by the same power-of-two scale, so the comparison is bitwise."""
+    Xq = core.quantize_inputs(forest, np.asarray(X_raw))
+    s = core.leaf_scale(forest)
+    raw = eval_scalar_numpy(forest, Xq) * s        # exact int sums (f64)
+    return raw.astype(np.float32) / np.float32(s)
 
 
 # --------------------------------------------------------------------------- #
@@ -37,7 +60,37 @@ def test_exit_leaf_multiword():
 
 
 # --------------------------------------------------------------------------- #
-# engines vs oracle
+# shared agreement suite: every registered (engine × backend) combination
+# vs the faithful scalar QuickScorer, float AND quantized
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="session")
+def quant_forest(small_forest):
+    """small_forest quantized with the paper-default 16-bit spec (all
+    scales are powers of two → engine outputs must be bit-exact)."""
+    return core.quantize_forest(small_forest,
+                                rand_X(small_forest, B=256, seed=9))
+
+
+@pytest.mark.parametrize("name,backend", COMBOS, ids=COMBO_IDS)
+def test_engine_float_agrees_with_scalar_oracle(name, backend, small_forest):
+    X = rand_X(small_forest, B=12)
+    pred = _compile(small_forest, name, backend)
+    expect = eval_scalar_numpy(small_forest, X)
+    np.testing.assert_allclose(pred.predict(X), expect, rtol=1e-4,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("name,backend", COMBOS, ids=COMBO_IDS)
+def test_engine_quantized_bitexact_vs_scalar_oracle(name, backend,
+                                                    quant_forest):
+    X = rand_X(quant_forest, B=12, seed=7)
+    pred = _compile(quant_forest, name, backend)
+    expect = scalar_oracle_f32(quant_forest, X)
+    np.testing.assert_array_equal(pred.predict(X), expect)
+
+
+# --------------------------------------------------------------------------- #
+# engines vs the vectorized traversal oracle across forest shapes
 # --------------------------------------------------------------------------- #
 @pytest.mark.parametrize("engine", ENGINES)
 @pytest.mark.parametrize("fixture", ["small_forest", "class_forest",

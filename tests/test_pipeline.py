@@ -1,0 +1,306 @@
+"""Pass pipeline (core/pipeline.py), engine registry (core/registry.py),
+and the shared predictor surface (predict_proba)."""
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import engine_select, registry
+from repro.core.pipeline import CompilePlan, PASSES, PIPELINE, compile_plan
+from repro.core.registry import normalize_scores
+
+from conftest import rand_X
+
+
+# --------------------------------------------------------------------------- #
+# registry
+# --------------------------------------------------------------------------- #
+def test_registry_covers_all_engine_backends():
+    assert set(registry.engines("jax")) == {"bitvector", "bitmm",
+                                            "rapidscorer", "native",
+                                            "unrolled", "gemm"}
+    assert set(registry.engines("pallas")) == {"bitvector", "bitmm", "gemm"}
+    assert registry.backends("bitvector") == ("jax", "pallas")
+
+
+def test_registry_unknown_engine_lists_choices():
+    with pytest.raises(ValueError, match="bitvector"):
+        registry.get("nonesuch")
+    with pytest.raises(ValueError, match="unknown engine"):
+        core.compile_forest(core.random_forest_ir(2, 4, 3), engine="nope")
+
+
+def test_tune_table_is_bijective_and_matches_engine_select():
+    table = registry.tune_table()
+    assert len(table) == len(registry.specs())        # no tune-name clash
+    assert dict(engine_select.ENGINE_SPECS.items()) == table
+    assert set(engine_select.default_engines(include_pallas=True)) \
+        == set(table)
+
+
+def test_engine_tables_support_mapping_idioms():
+    assert engine_select.ENGINE_SPECS.get("qs") == ("bitvector", "jax")
+    assert engine_select.ENGINE_SPECS.get("nope") is None
+    assert engine_select.ENGINE_FACTORIES.get("nope") is None
+    assert set(dict(engine_select.ENGINE_SPECS)) \
+        == set(engine_select.ENGINE_FACTORIES.keys())
+
+
+def test_register_engine_decorator_and_live_tables(small_forest):
+    @registry.register_engine("_toy", tune_name="_toy")
+    def build_toy(forest, **kw):
+        return core.compile_forest(forest, engine="native")
+
+    try:
+        assert "_toy" in registry.engines("jax")
+        # autotuner tables AND core.ENGINES are live registry views
+        assert "_toy" in engine_select.ENGINE_SPECS
+        assert "_toy" in core.ENGINES
+        pred = engine_select.ENGINE_FACTORIES["_toy"](small_forest)
+        X = rand_X(small_forest, B=8)
+        np.testing.assert_allclose(pred.predict(X),
+                                   small_forest.predict_oracle(X),
+                                   rtol=1e-4, atol=1e-5)
+    finally:
+        del registry._REGISTRY[("_toy", "jax")]
+
+
+# --------------------------------------------------------------------------- #
+# pipeline passes
+# --------------------------------------------------------------------------- #
+def test_pipeline_declares_all_passes():
+    assert PIPELINE == ("canonicalize", "quantize", "layout", "lower")
+    assert all(name in PASSES for name in PIPELINE)
+
+
+def test_compile_forest_records_plan(small_forest):
+    pred = core.compile_forest(small_forest, engine="bitvector")
+    assert [r.name for r in pred.plan.records] == list(PIPELINE)
+    assert "qs" in pred.plan.describe()
+
+
+def test_quantize_pass(small_forest):
+    X = rand_X(small_forest, B=128)
+    pred = compile_plan(small_forest, engine="bitvector",
+                        quant=core.QuantSpec(bits=16), X_calib=X)
+    qs = pred.compiled
+    assert qs.thr.dtype == np.int16
+    qrec = [r for r in pred.plan.records if r.name == "quantize"][0]
+    assert "16b" in qrec.detail and "calib=data" in qrec.detail
+    # ≡ the manual quantize-then-compile path
+    manual = core.compile_forest(
+        core.quantize_forest(small_forest, X), engine="bitvector")
+    np.testing.assert_array_equal(pred.predict(X[:16]),
+                                  manual.predict(X[:16]))
+
+
+def test_quantize_pass_skips_already_quantized(small_forest):
+    qf = core.quantize_forest(small_forest, rand_X(small_forest, B=64))
+    pred = compile_plan(qf, engine="native", quant=core.QuantSpec(bits=16))
+    qrec = [r for r in pred.plan.records if r.name == "quantize"][0]
+    assert "already quantized" in qrec.detail
+
+
+def test_layout_pass_sets_bitmm_tile_but_never_overrides(small_forest):
+    auto = core.compile_forest(small_forest, engine="bitmm")
+    assert auto.plan.engine_kw["tree_chunk"] == auto.compiled.tree_chunk
+    forced = core.compile_forest(small_forest, engine="bitmm", tree_chunk=2)
+    assert forced.compiled.tree_chunk == 2
+    assert forced.plan.engine_kw["tree_chunk"] == 2
+
+
+def test_bitmm_layout_defers_tiling_to_shard_wrapper(small_forest):
+    """With n_devices>1 the layout pass must NOT pre-pick a global
+    tree_chunk: the tile size has to divide the per-shard tree count,
+    which only the shard wrapper (after device padding) can know."""
+    from repro.core import pipeline
+    plan = pipeline.CompilePlan(engine="bitmm", n_devices=2)
+    pipeline.PASSES["layout"](small_forest, plan, {})
+    assert "tree_chunk" not in plan.engine_kw
+    assert "per-shard" in plan.records[-1].detail
+
+
+def test_canonicalize_from_trainer(trained_rf, magic_ds):
+    pred = compile_plan(trained_rf, engine="bitvector")
+    crec = pred.plan.records[0]
+    assert "RandomForest" in crec.detail
+    forest = core.from_random_forest(trained_rf)
+    X = magic_ds.X_test[:32]
+    np.testing.assert_allclose(pred.predict(X),
+                               forest.predict_oracle(X),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_canonicalize_from_tree_list(small_forest):
+    from repro.trees.cart import Tree, TreeNode
+    l0, l1 = TreeNode(value=np.array([1.0])), TreeNode(value=np.array([2.0]))
+    tree = Tree(TreeNode(feature=0, threshold=0.0, left=l0, right=l1), 2, 1)
+    pred = compile_plan([tree], engine="gemm", n_features=1)
+    np.testing.assert_allclose(pred.predict(np.array([[-1.0], [1.0]])),
+                               [[1.0], [2.0]], rtol=1e-6)
+
+
+def test_canonicalize_rejects_garbage():
+    with pytest.raises(TypeError, match="canonicalize"):
+        compile_plan(object(), engine="native")
+
+
+def test_plan_kwargs_conflict_raises(small_forest):
+    with pytest.raises(TypeError, match="not both"):
+        compile_plan(small_forest, CompilePlan(), engine="gemm")
+
+
+# --------------------------------------------------------------------------- #
+# autotuner sweeps beyond the engine axis
+# --------------------------------------------------------------------------- #
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    engine_select.clear_cache()
+    yield
+    engine_select.clear_cache()
+
+
+def test_autotuner_quantization_sweep(small_forest):
+    c = engine_select.choose(small_forest, 32, engines=("qs", "native"),
+                             quant_specs=(core.QuantSpec(bits=16),),
+                             cache_path=None, repeats=1)
+    assert set(c.timings) == {"qs", "native", "qs@q16", "native@q16"}
+    assert c.engine == min(c.timings, key=c.timings.get)
+    # the served predictor matches the variant named by the winner
+    expect_int = c.engine.endswith("@q16")
+    thr = c.predictor.compiled.forest.threshold
+    assert np.issubdtype(thr.dtype, np.integer) == expect_int
+    # second call is a pure cache hit over the same candidate set
+    c2 = engine_select.choose(small_forest, 32, engines=("qs", "native"),
+                              quant_specs=(core.QuantSpec(bits=16),),
+                              cache_path=None, repeats=1)
+    assert c2.from_cache and c2.engine == c.engine
+
+
+def test_autotuner_layout_sweep(small_forest):
+    c = engine_select.choose(
+        small_forest, 32, engines=("qs-bitmm",),
+        layout_specs={"qs-bitmm": ({"tree_chunk": 2}, {"tree_chunk": 4})},
+        cache_path=None, repeats=1)
+    assert set(c.timings) == {"qs-bitmm", "qs-bitmm@tree_chunk=2",
+                              "qs-bitmm@tree_chunk=4"}
+    assert c.engine == min(c.timings, key=c.timings.get)
+    if "@tree_chunk=" in c.engine:
+        chunk = int(c.engine.split("=")[-1])
+        assert c.predictor.compiled.tree_chunk == chunk
+
+
+def test_quant_variants_never_alias_in_cache(small_forest):
+    """Distinct QuantSpecs must produce distinct candidate names: a
+    leaves-only 16-bit sweep cannot be answered by the default-16-bit
+    entry already in the cache."""
+    c1 = engine_select.choose(small_forest, 32, engines=("native",),
+                              quant_specs=(core.QuantSpec(bits=16),),
+                              cache_path=None, repeats=1)
+    c2 = engine_select.choose(
+        small_forest, 32, engines=("native",),
+        quant_specs=(core.QuantSpec(bits=16, quantize_splits=False),),
+        cache_path=None, repeats=1)
+    assert "native@q16" in c1.timings
+    assert "native@q16-nosplits" in c2.timings
+    assert not c2.from_cache          # different variant → no aliased hit
+
+
+def test_default_engines_with_devices_drop_nonshardable(small_forest):
+    """n_devices>1 with the *default* candidate set must silently drop
+    non-shardable (pallas) engines instead of raising — this is the
+    documented TPU serving path (a default sweep on >1 device can't run
+    in-process on one CPU device, so the filter is asserted directly)."""
+    from repro.core.engine_select import default_engines
+    full = default_engines(include_pallas=True)
+    shardable = tuple(e for e in full
+                      if registry.by_tune_name(e).shardable)
+    assert set(full) - set(shardable) == {"pallas-qs", "pallas-bitmm",
+                                          "pallas-gemm"}
+    # an explicit pallas request still errors loudly
+    with pytest.raises(ValueError, match="cannot run tree-sharded"):
+        engine_select.choose(small_forest, 16, engines=("pallas-qs",),
+                             n_devices=2, cache_path=None, repeats=1)
+
+
+def test_pipeline_rejects_pallas_sharding(small_forest):
+    with pytest.raises(ValueError, match="jax backend only"):
+        compile_plan(small_forest, engine="gemm", backend="pallas",
+                     n_devices=2)
+
+
+def test_quant_sweep_rejects_prequantized(small_forest):
+    qf = core.quantize_forest(small_forest, rand_X(small_forest, B=64))
+    with pytest.raises(ValueError, match="already quantized"):
+        engine_select.choose(qf, 32, engines=("qs",),
+                             quant_specs=(core.QuantSpec(bits=8),),
+                             cache_path=None, repeats=1)
+
+
+def test_layout_specs_unknown_key_raises(small_forest):
+    with pytest.raises(ValueError, match="layout_specs keys"):
+        engine_select.choose(
+            small_forest, 32, engines=("qs-bitmm",),
+            layout_specs={"bitmm": ({"tree_chunk": 2},)},   # canonical name
+            cache_path=None, repeats=1)
+
+
+# --------------------------------------------------------------------------- #
+# predict_proba (shared predictor base, paper §4)
+# --------------------------------------------------------------------------- #
+def test_predict_proba_rows_normalized(class_forest):
+    X = rand_X(class_forest, B=32)
+    for engine in ("bitvector", "gemm"):
+        proba = core.compile_forest(class_forest,
+                                    engine=engine).predict_proba(X)
+        assert proba.shape == (32, class_forest.n_classes)
+        assert (proba >= 0).all()
+        np.testing.assert_allclose(proba.sum(axis=1), 1.0, rtol=1e-6)
+
+
+def test_predict_proba_argmax_matches_predict_class(class_forest):
+    X = rand_X(class_forest, B=32)
+    pred = core.compile_forest(class_forest, engine="bitvector")
+    np.testing.assert_array_equal(pred.predict_proba(X).argmax(axis=1),
+                                  pred.predict_class(X))
+
+
+def test_predict_proba_mode_from_model_not_batch(class_forest):
+    """class_forest has signed (logit-like) leaves → softmax, decided
+    from the leaf table: one row's probabilities never depend on its
+    batchmates (the data-inferred mode could flip per batch)."""
+    pred = core.compile_forest(class_forest, engine="bitvector")
+    X = rand_X(class_forest, B=16)
+    expect = normalize_scores(pred.predict(X), votes=False)
+    np.testing.assert_allclose(pred.predict_proba(X), expect, rtol=1e-7)
+    for i in (0, 7):
+        np.testing.assert_allclose(pred.predict_proba(X[i:i + 1])[0],
+                                   expect[i], rtol=1e-7)
+
+
+def test_predict_proba_rejects_regression(small_forest):
+    pred = core.compile_forest(small_forest, engine="bitvector")
+    with pytest.raises(ValueError, match="classification"):
+        pred.predict_proba(rand_X(small_forest, B=4))
+
+
+def test_normalize_scores_softmax_for_logit_scores():
+    s = np.array([[2.0, -1.0], [-3.0, 0.5]])
+    p = normalize_scores(s)
+    np.testing.assert_allclose(p.sum(axis=1), 1.0)
+    assert (p > 0).all() and p[0, 0] > p[0, 1] and p[1, 1] > p[1, 0]
+
+
+def test_normalize_scores_zero_row_uniform():
+    p = normalize_scores(np.array([[0.0, 0.0, 0.0], [3.0, 1.0, 0.0]]))
+    np.testing.assert_allclose(p[0], [1 / 3] * 3)
+    np.testing.assert_allclose(p[1], [0.75, 0.25, 0.0])
+
+
+def test_server_exposes_predict_proba(class_forest):
+    from repro.inference.server import ForestServer
+    srv = ForestServer.from_forest(class_forest, max_batch=16,
+                                   engines=("qs",), cache_path=None,
+                                   repeats=1)
+    X = rand_X(class_forest, B=8)
+    np.testing.assert_allclose(srv.predict_proba(X).sum(axis=1), 1.0,
+                               rtol=1e-6)

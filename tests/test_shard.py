@@ -1,0 +1,158 @@
+"""Tree-sharded multi-device execution (core/shard.py).
+
+JAX fixes the device count at backend init and this suite must see the
+real single-CPU device (see conftest), so everything genuinely
+multi-device runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; the in-process
+tests cover the machinery that works on one device (padding, key
+derivation, error paths, and the D=1 mesh)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import engine_select, registry, shard
+
+from conftest import rand_X
+
+
+# --------------------------------------------------------------------------- #
+# in-process (single device)
+# --------------------------------------------------------------------------- #
+def test_pad_forest_trees_is_noop_on_exact_multiple(small_forest):
+    assert shard.pad_forest_trees(small_forest, 4) is small_forest
+
+
+def test_pad_forest_trees_padding_contributes_zero(small_forest):
+    padded = shard.pad_forest_trees(small_forest, 3)   # 8 → 9 trees
+    assert padded.n_trees == 9
+    assert int(padded.n_nodes[-1]) == 0                # single-leaf tree
+    X = rand_X(small_forest, B=32)
+    np.testing.assert_allclose(padded.predict_oracle(X),
+                               small_forest.predict_oracle(X))
+
+
+def test_pad_preserves_quantization_metadata(small_forest):
+    qf = core.quantize_forest(small_forest, rand_X(small_forest, B=64))
+    padded = shard.pad_forest_trees(qf, 5)
+    assert padded.quant_scale == qf.quant_scale
+    assert padded.threshold.dtype == qf.threshold.dtype
+    np.testing.assert_array_equal(padded.feat_lo, qf.feat_lo)
+
+
+def test_single_device_mesh_matches_unsharded(small_forest):
+    X = rand_X(small_forest, B=24)
+    for engine in ("bitvector", "gemm"):
+        single = core.compile_forest(small_forest, engine=engine).predict(X)
+        sp = shard.tree_sharded(small_forest, engine, n_devices=1)
+        np.testing.assert_allclose(sp.predict(X), single, rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_too_many_devices_raises(small_forest):
+    with pytest.raises(ValueError, match="n_devices"):
+        shard.tree_sharded(small_forest, "bitvector", n_devices=64)
+
+
+def test_every_jax_engine_is_registered_shardable():
+    assert all(s.shardable for s in registry.specs("jax"))
+
+
+def test_shape_key_includes_device_count(small_forest):
+    k1 = engine_select.shape_key(small_forest, 64)
+    k4 = engine_select.shape_key(small_forest, 64, n_devices=4)
+    assert k1 != k4 and k1.endswith("_dev1") and k4.endswith("_dev4")
+
+
+def test_pipeline_plan_single_device_stays_unsharded(small_forest):
+    pred = core.compile_plan(small_forest, engine="bitmm", n_devices=1)
+    assert not isinstance(pred, shard.ShardedPredictor)
+    assert not any("tree-sharded" in r.detail for r in pred.plan.records)
+
+
+# --------------------------------------------------------------------------- #
+# multi-device (subprocess with 8 simulated host devices)
+# --------------------------------------------------------------------------- #
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+assert len(jax.devices()) == 8, jax.devices()
+from repro import core
+from repro.core import engine_select, registry, shard
+from repro.inference.server import ForestServer
+
+# T=10 is not divisible by 4: the zero-tree padding path is exercised
+f = core.random_forest_ir(10, 16, 6, n_classes=2, seed=0)
+X = np.random.default_rng(3).normal(0, 1.2, size=(32, 6))
+
+# float: every registered engine sharded over 4 devices ≈ single-device
+for engine in registry.engines("jax"):
+    single = core.compile_forest(f, engine=engine).predict(X)
+    sp = shard.tree_sharded(f, engine, n_devices=4)
+    assert sp.n_devices == 4
+    np.testing.assert_allclose(sp.predict(X), single, rtol=1e-5,
+                               atol=1e-6, err_msg=engine)
+
+# quantized: bitwise identical (exact integer partial sums divided by a
+# power-of-two scale — psum reassociation is lossless)
+qf = core.quantize_forest(f, X)
+for engine in registry.engines("jax"):
+    single = core.compile_forest(qf, engine=engine).predict(X)
+    got = shard.tree_sharded(qf, engine, n_devices=4).predict(X)
+    np.testing.assert_array_equal(got, single, err_msg=engine)
+
+# 8-way shard with per-device tree count 2 (max padding pressure)
+got8 = shard.tree_sharded(qf, "bitvector", n_devices=8).predict(X)
+np.testing.assert_array_equal(
+    got8, core.compile_forest(qf, engine="bitvector").predict(X))
+
+# the pipeline's lower pass wires the shard wrapper for n_devices > 1
+pred = core.compile_plan(f, engine="bitmm", n_devices=4)
+assert isinstance(pred, shard.ShardedPredictor) and pred.n_devices == 4
+assert any(r.name == "lower" and "tree-sharded" in r.detail
+           for r in pred.plan.records)
+np.testing.assert_allclose(
+    pred.predict(X), core.compile_forest(f, engine="bitmm").predict(X),
+    rtol=1e-5, atol=1e-6)
+
+# autotuner: n_devices keys the cache and the winner serves sharded
+choice = engine_select.choose(f, 32, engines=("qs", "qs-bitmm"),
+                              n_devices=4, cache_path=None, repeats=1)
+assert choice.key.endswith("_dev4"), choice.key
+assert choice.predictor.n_devices == 4
+ref = {"qs": "bitvector", "qs-bitmm": "bitmm"}[choice.engine]
+np.testing.assert_allclose(
+    choice.predict(X), core.compile_forest(f, engine=ref).predict(X),
+    rtol=1e-5, atol=1e-6)
+
+# serving path: ForestServer.from_forest(n_devices=...)
+srv = ForestServer.from_forest(f, max_batch=8, engines=("qs",),
+                               n_devices=4, cache_path=None, repeats=1)
+assert srv.engine_choice.predictor.n_devices == 4
+for i in range(8):
+    srv.submit(X[i], arrival_s=float(i) * 1e-4)
+done = srv.poll(now_s=1.0)
+assert len(done) == 8
+got = np.stack([r.result for r in done])
+np.testing.assert_allclose(
+    got, core.compile_forest(f, engine="bitvector").predict(X[:8]),
+    rtol=1e-5, atol=1e-6)
+print("SHARD-OK")
+"""
+
+
+def test_tree_sharded_multi_device_subprocess():
+    env = dict(os.environ)
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "SHARD-OK" in out.stdout

@@ -1,0 +1,126 @@
+"""Cold-start benchmark: load-to-first-prediction for the three start
+paths the io subsystem enables (PACSET's deployment-latency metric):
+
+  * ``import+compile``  — parse an external model dump (XGBoost JSON),
+    canonicalize to the IR, compile the engine, predict once;
+  * ``packed+compile``  — load the packed ``.repro.npz`` IR (padding
+    stripped, traversal order), compile the engine, predict once;
+  * ``packed-artifact`` — load the serialized compiled predictor
+    (``io.save_predictor``) and predict once: no mask construction, no
+    leaf packing, no autotune — the ``ForestServer.load`` restart path.
+
+    PYTHONPATH=src python -m benchmarks.bench_coldstart
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro import core, io
+
+from .common import Table, save_json, scale_pick
+
+
+def _forest_to_xgb_dump(forest) -> list:
+    """IR → XGBoost-dump JSON (the inverse of ``import_xgboost_json``'s
+    threshold mapping, so round-tripped predictions agree)."""
+    trees = []
+    for t in range(forest.n_trees):
+        ctr = [forest.nodes_per_tree]        # leaf nodeids after internals
+
+        def node(n: int) -> dict:
+            if n < 0:                                      # leaf code
+                j = -n - 1
+                return {"nodeid": ctr[0] + j,
+                        "leaf": float(forest.leaf_value[t, j, 0])}
+            thr = float(np.nextafter(np.float32(forest.threshold[t, n]),
+                                     np.float32(np.inf)))
+            left = node(int(forest.left[t, n]))
+            right = node(int(forest.right[t, n]))
+            return {"nodeid": int(n), "split": f"f{forest.feature[t, n]}",
+                    "split_condition": thr, "yes": left["nodeid"],
+                    "no": right["nodeid"], "missing": left["nodeid"],
+                    "children": [left, right]}
+
+        if forest.n_nodes[t] == 0:          # single-leaf tree
+            trees.append({"nodeid": 0,
+                          "leaf": float(forest.leaf_value[t, 0, 0])})
+        else:
+            trees.append(node(0))
+    return trees
+
+
+def _once(fn) -> tuple[float, object]:
+    t0 = time.perf_counter()
+    out = fn()
+    return time.perf_counter() - t0, out
+
+
+def run(engine: str = "bitvector", batch: int = 256):
+    T, L, d = scale_pick((100, 32, 32), (200, 64, 64), (1024, 64, 136))
+    forest = core.random_forest_ir(T, L, d, seed=7)
+    X = np.random.default_rng(0).normal(size=(batch, d))
+    tmp = tempfile.mkdtemp(prefix="repro_coldstart_")
+    dump_path = os.path.join(tmp, "model.json")
+    ir_path = os.path.join(tmp, "forest.repro.npz")
+    art_path = os.path.join(tmp, "pred.repro.npz")
+    with open(dump_path, "w") as f:
+        json.dump(_forest_to_xgb_dump(forest), f)
+    io.save_forest(forest, ir_path)
+    io.save_predictor(core.compile_forest(forest, engine=engine), art_path)
+
+    def path_import():
+        pred = core.compile_forest(io.load_model(dump_path), engine=engine)
+        return pred.predict(X)
+
+    def path_packed():
+        pred = core.compile_forest(io.load_forest(ir_path), engine=engine)
+        return pred.predict(X)
+
+    def path_artifact():
+        return io.load_predictor(art_path).predict(X)
+
+    t_imp, y_imp = _once(path_import)
+    t_pack, y_pack = _once(path_packed)
+    t_art, y_art = _once(path_artifact)
+    # the three starts are the same model: predictions must agree
+    np.testing.assert_allclose(y_pack, y_art, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(y_imp, y_pack, rtol=1e-4, atol=1e-5)
+
+    sizes = {"model.json": os.path.getsize(dump_path),
+             "forest.repro.npz": os.path.getsize(ir_path),
+             "pred.repro.npz": os.path.getsize(art_path)}
+    tbl = Table("bench_coldstart",
+                ["trees", "leaves", "engine", "import+compile_ms",
+                 "packed+compile_ms", "packed-artifact_ms",
+                 "artifact_speedup"])
+    tbl.add(T, L, engine, f"{t_imp*1e3:.1f}", f"{t_pack*1e3:.1f}",
+            f"{t_art*1e3:.1f}", f"{t_imp/t_art:.2f}x")
+    records = {"trees": T, "leaves": L, "features": d, "batch": batch,
+               "engine": engine,
+               "seconds": {"import_compile": t_imp,
+                           "packed_compile": t_pack,
+                           "packed_artifact": t_art},
+               "bytes": sizes}
+    return tbl, records
+
+
+def main(argv=None) -> int:
+    tbl, records = run()
+    tbl.print()
+    tbl.save()
+    save_json("bench_coldstart_raw", records)
+    s = records["seconds"]
+    print(f"\ncold start: packed artifact {s['import_compile']/s['packed_artifact']:.2f}x "
+          f"faster than import+compile "
+          f"({s['packed_artifact']*1e3:.0f}ms vs {s['import_compile']*1e3:.0f}ms)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,15 +32,16 @@ def main() -> None:
     t0 = time.time()
     print(f"[bench] scale={SCALE}")
 
-    from . import (bench_engines, fig1_speedup, table2_ranking,
-                   table3_quant_accuracy, table4_merging,
+    from . import (bench_coldstart, bench_engines, fig1_speedup,
+                   table2_ranking, table3_quant_accuracy, table4_merging,
                    table5_classification)
 
     for name, mod in [("table2_ranking", table2_ranking),
                       ("table3_quant_accuracy", table3_quant_accuracy),
                       ("table4_merging", table4_merging),
                       ("table5_classification", table5_classification),
-                      ("fig1_speedup", fig1_speedup)]:
+                      ("fig1_speedup", fig1_speedup),
+                      ("bench_coldstart", bench_coldstart)]:
         t = time.time()
         print(f"\n[bench] running {name} ...", flush=True)
         mod.main()

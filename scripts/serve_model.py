@@ -1,0 +1,85 @@
+"""Serve an externally trained model file end to end.
+
+    PYTHONPATH=src python scripts/serve_model.py --model model.json
+    PYTHONPATH=src python scripts/serve_model.py --model forest.repro.npz \
+        --save server.pred.npz
+    PYTHONPATH=src python scripts/serve_model.py --model server.pred.npz
+
+``--model`` accepts any format ``repro.io`` understands: an XGBoost JSON
+dump, a LightGBM ``dump_model`` JSON, a sklearn-shim JSON, a packed
+``.repro.npz`` forest — or a packed *predictor/server* artifact, which
+cold-starts without autotuning or recompiling (docs/FORMATS.md).
+``--save`` writes the autotuned compiled artifact so the next start takes
+the cold path.
+"""
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--model", required=True,
+                    help="model file (XGB/LGBM/shim JSON or .repro.npz)")
+    ap.add_argument("--engine", default=None,
+                    help="pin one autotuner engine (default: sweep)")
+    ap.add_argument("--batch", type=int, default=64,
+                    help="serving max_batch (autotune batch bucket)")
+    ap.add_argument("--n-classes", type=int, default=1,
+                    help="multiclass round-robin width for XGBoost dumps")
+    ap.add_argument("--save", default=None,
+                    help="write the compiled server artifact here")
+    ap.add_argument("--n-requests", type=int, default=256,
+                    help="synthetic requests to stream through the server")
+    args = ap.parse_args(argv)
+
+    from repro import io
+    from repro.inference.server import ForestServer
+
+    t0 = time.perf_counter()
+    header_kind = None
+    if args.model.endswith(".npz"):
+        header_kind = io.peek(args.model).get("kind")
+    if header_kind == "predictor":
+        srv = ForestServer.load(args.model)
+        # host_forest, not compiled.forest: rapidscorer nests the IR
+        forest = srv.predictor.host_forest()
+        print(f"[serve] cold start from compiled artifact "
+              f"(engine_choice={srv.engine_choice})")
+    else:
+        kw = {"n_classes": args.n_classes} if args.n_classes > 1 else {}
+        forest = io.load_model(args.model, **kw)
+        print(f"[serve] imported forest: T={forest.n_trees} "
+              f"L={forest.n_leaves} C={forest.n_classes} "
+              f"d={forest.n_features}")
+        engines = (args.engine,) if args.engine else None
+        srv = ForestServer.from_forest(forest, max_batch=args.batch,
+                                       engines=engines, repeats=1)
+        print(f"[serve] autotuned engine: {srv.engine_choice.engine} "
+              f"(cached: {srv.engine_choice.from_cache})")
+    d = forest.n_features
+    X1 = np.zeros((1, d))
+    srv.predictor.predict(X1)                      # first prediction
+    print(f"[serve] load-to-first-prediction: "
+          f"{time.perf_counter() - t0:.3f}s")
+
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(1e-4, size=args.n_requests))
+    for at in arrivals:
+        srv.submit(rng.normal(size=d), arrival_s=float(at))
+        srv.poll(now_s=float(at))
+    srv.flush(now_s=float(arrivals[-1]))
+    s = srv.stats.summary()
+    print(f"[serve] {s['n_requests']} requests in {s['n_batches']} batches "
+          f"(mean batch {s['mean_batch']:.1f}) "
+          f"p50={s['p50_ms']:.2f}ms p99={s['p99_ms']:.2f}ms")
+
+    if args.save:
+        srv.save(args.save)
+        print(f"[serve] compiled server artifact → {args.save}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

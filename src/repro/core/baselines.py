@@ -166,13 +166,16 @@ def gemm_predictor(forest: Forest, compute_dtype=jnp.float32) -> BaselinePredict
     return BaselinePredictor(g, eval_gemm)
 
 
+_NATIVE_ARRAYS = ("feat", "thr", "left", "right", "leaf_val", "single_leaf")
 register_engine(
     "native", tune_name="native", compile=compile_native,
     evaluate=eval_native, predictor_cls=BaselinePredictor, shardable=True,
+    serial_arrays=_NATIVE_ARRAYS,
     doc="per-level pointer-chasing traversal (fori_loop over depth)")
 register_engine(
     "unrolled", tune_name="unrolled", compile=compile_native,
     evaluate=eval_unrolled, predictor_cls=BaselinePredictor, shardable=True,
+    serial_arrays=_NATIVE_ARRAYS,
     doc="native with the depth loop unrolled to straight-line HLO")
 def _gemm_layout(forest: Forest, plan) -> str:
     dt = plan.engine_kw.get("compute_dtype")
@@ -183,4 +186,5 @@ def _gemm_layout(forest: Forest, plan) -> str:
 register_engine(
     "gemm", tune_name="gemm", compile=compile_gemm, evaluate=eval_gemm,
     predictor_cls=BaselinePredictor, shardable=True, layout=_gemm_layout,
+    serial_arrays=("feat", "thr", "valid", "A", "Bvec", "leaf_val"),
     doc="Hummingbird tensor traversal (two matmuls per tree block)")

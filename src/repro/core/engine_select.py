@@ -150,12 +150,33 @@ _MEM_CACHE: dict[str, dict] = {}
 _PERSISTED: set[tuple[str, str]] = set()
 
 
+def _valid_entry(entry) -> bool:
+    """Structural check for one cache entry: ``{"engine": str,
+    "timings": {str: number}}`` with a non-empty timings dict."""
+    if not isinstance(entry, dict):
+        return False
+    timings = entry.get("timings")
+    if not isinstance(timings, dict) or not timings:
+        return False
+    return all(isinstance(k, str) and isinstance(v, (int, float))
+               and not isinstance(v, bool) for k, v in timings.items())
+
+
 def _load_disk(path: str) -> dict:
+    """Parse the JSON cache file, dropping anything malformed.
+
+    A truncated or hand-mangled cache (garbage JSON, a non-dict top
+    level, entries missing ``timings`` or holding non-numeric values)
+    must degrade to a clean re-sweep — and the next ``_store_disk``
+    rewrites the file — never to an unhandled exception at serving time."""
     try:
         with open(path) as f:
-            return json.load(f)
+            data = json.load(f)
     except (OSError, ValueError):
         return {}
+    if not isinstance(data, dict):
+        return {}
+    return {k: v for k, v in data.items() if _valid_entry(v)}
 
 
 def _merge_entry(old: Optional[dict], new: dict) -> dict:

@@ -66,7 +66,7 @@ class CompilePlan:
 # Pass registry
 # --------------------------------------------------------------------------- #
 PASSES: dict[str, Callable] = {}
-PIPELINE = ("canonicalize", "quantize", "layout", "lower")
+PIPELINE = ("deserialize", "canonicalize", "quantize", "layout", "lower")
 
 
 def forest_pass(name: str):
@@ -74,6 +74,24 @@ def forest_pass(name: str):
         PASSES[name] = fn
         return fn
     return deco
+
+
+@forest_pass("deserialize")
+def deserialize(obj, plan: CompilePlan, ctx: dict):
+    """Entry pass: a path (str/PathLike to a model file) becomes an
+    in-memory object via ``repro.io`` — XGBoost/LightGBM JSON dumps,
+    sklearn-shim JSON, or a packed ``.repro.npz`` forest all compile with
+    ``compile_plan("model.json", engine=...)``.  In-memory objects pass
+    through untouched."""
+    import os
+    if not isinstance(obj, (str, os.PathLike)):
+        plan.record("deserialize", "skipped (in-memory object)")
+        return obj
+    from .. import io
+    path = os.fspath(obj)
+    forest = io.load_model(path, **ctx.get("load_kw") or {})
+    plan.record("deserialize", f"loaded {path}")
+    return forest
 
 
 @forest_pass("canonicalize")
@@ -165,22 +183,25 @@ def lower(forest: Forest, plan: CompilePlan, ctx: dict):
 def compile_plan(obj, plan: Optional[CompilePlan] = None, *,
                  X_calib: Optional[np.ndarray] = None,
                  n_features: Optional[int] = None, n_classes: int = 1,
+                 load_kw: Optional[dict] = None,
                  **plan_kw):
-    """Run the full pipeline on ``obj`` (Forest / trainer / tree list).
+    """Run the full pipeline on ``obj`` (path / Forest / trainer / trees).
 
     Either pass a ``CompilePlan`` or keyword fields for one::
 
         pred = compile_plan(forest, engine="bitmm", quant=QuantSpec(16))
+        pred = compile_plan("model.json", engine="bitvector")
 
     ``X_calib`` feeds the quantize pass's feature ranges; ``n_features`` /
-    ``n_classes`` are only needed when ``obj`` is a bare tree list.
+    ``n_classes`` are only needed when ``obj`` is a bare tree list;
+    ``load_kw`` forwards to ``io.load_model`` when ``obj`` is a path.
     """
     if plan is None:
         plan = CompilePlan(**plan_kw)
     elif plan_kw:
         raise TypeError("pass either a CompilePlan or plan kwargs, not both")
     ctx = {"X_calib": X_calib, "n_features": n_features,
-           "n_classes": n_classes}
+           "n_classes": n_classes, "load_kw": load_kw}
     for name in PIPELINE:
         obj = PASSES[name](obj, plan, ctx)
     return obj

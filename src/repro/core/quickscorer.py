@@ -462,9 +462,11 @@ def _bitmm_shard_kw(forest: Forest, n_shards: int) -> dict:
 register_engine(
     "bitvector", tune_name="qs", compile=compile_qs, evaluate=eval_batch,
     predictor_cls=QSPredictor, shardable=True,
+    serial_arrays=("feat", "thr", "valid", "masks", "init_idx", "leaf_val"),
     doc="QuickScorer: predicated interval-mask AND-reduction over nodes")
 register_engine(
     "bitmm", tune_name="qs-bitmm", compile=compile_qs_bitmm,
     evaluate=eval_batch_bitmm, predictor_cls=BitMMPredictor,
     shardable=True, shard_kw=_bitmm_shard_kw, layout=_bitmm_layout,
+    serial_arrays=("feat", "thr", "valid", "packed", "bias", "leaf_val"),
     doc="bit-matmul QuickScorer: packed clear-count GEMM on the MXU")

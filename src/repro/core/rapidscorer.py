@@ -95,4 +95,6 @@ register_engine(
     "rapidscorer", tune_name="rapidscorer", compile=compile_rs,
     evaluate=eval_batch, predictor_cls=RSPredictor, shardable=True,
     replicated=("u_feat", "u_thr"),
+    serial_arrays=("u_feat", "u_thr", "inv", "qs.feat", "qs.thr",
+                   "qs.valid", "qs.masks", "qs.init_idx", "qs.leaf_val"),
     doc="RapidScorer: node-merged QuickScorer (shared thresholds collapse)")

@@ -86,6 +86,16 @@ def normalize_scores(scores: np.ndarray,
     return z / z.sum(axis=1, keepdims=True)
 
 
+def ensure_feature_column(X: np.ndarray) -> np.ndarray:
+    """0-feature ensembles (every tree a single leaf) hand engines a
+    (B, 0) input, but all engines gather feature column 0 unconditionally
+    (padding nodes are masked by ``valid``, never skipped) — give them
+    one dummy column instead of an empty gather axis."""
+    if X.ndim == 2 and X.shape[1] == 0:
+        return np.zeros((X.shape[0], 1), dtype=X.dtype)
+    return X
+
+
 class BasePredictor:
     """Shared engine wrapper: input quantization + jit cache + the full
     prediction surface.  ``eval_fn(compiled, X) → (B, C)`` is the engine's
@@ -103,13 +113,13 @@ class BasePredictor:
         return t(X) if t is not None else X
 
     def predict(self, X: np.ndarray) -> np.ndarray:
-        Xq = self.transform_inputs(X)
+        Xq = ensure_feature_column(self.transform_inputs(X))
         return np.asarray(self._fn(jnp.asarray(Xq)))
 
     def predict_class(self, X: np.ndarray) -> np.ndarray:
         return self.predict(X).argmax(axis=1)
 
-    def _score_forest(self):
+    def host_forest(self):
         """The host IR, if this predictor can reach one (compiled objects
         carry it for input quantization; CompiledRS nests it under qs)."""
         for owner in (self, getattr(self, "compiled", None),
@@ -123,7 +133,7 @@ class BasePredictor:
         # the normalization mode is a property of the *model*: vote-mass
         # leaves (all >= 0) sum-normalize, logit leaves softmax — decided
         # from the leaf table so results never depend on batch composition
-        forest = self._score_forest()
+        forest = self.host_forest()
         votes = None if forest is None \
             else bool((np.asarray(forest.leaf_value) >= 0).all())
         return normalize_scores(self.predict(X), votes=votes)
@@ -153,6 +163,11 @@ class EngineSpec:
     replicated: tuple = ()                # compiled fields never tree-sharded
     layout: Optional[Callable] = None     # (forest, plan) -> detail string;
     #                                       pipeline layout-pass hook
+    serial_arrays: tuple = ()             # compiled array fields io.packed
+    #                                       may serialize (dotted for nested
+    #                                       dataclasses); empty → artifact
+    #                                       not serializable, rebuild from
+    #                                       the forest instead
     deferred: Optional[str] = None        # "module:attr" lazy build target
     doc: str = ""
 

@@ -46,7 +46,7 @@ except ImportError:                     # 0.4.x
 from . import registry
 from .forest import Forest
 from .quantize import quantize_inputs
-from .registry import BasePredictor
+from .registry import BasePredictor, ensure_feature_column
 
 
 def pad_forest_trees(forest: Forest, mult: int) -> Forest:
@@ -150,7 +150,7 @@ class ShardedPredictor(BasePredictor):
         return quantize_inputs(self.forest, np.asarray(X))
 
     def predict(self, X: np.ndarray) -> np.ndarray:
-        Xq = self.transform_inputs(X)
+        Xq = ensure_feature_column(self.transform_inputs(X))
         return np.asarray(self._fn(self._sharded, self._repl,
                                    jnp.asarray(Xq)))
 

@@ -52,6 +52,8 @@ class ServerStats:
     latencies_ms: list = field(default_factory=list)
 
     def record_batch(self, reqs: list[Request]) -> None:
+        if not reqs:                   # zero-request batch: stats unchanged
+            return
         self.n_batches += 1
         self.n_requests += len(reqs)
         self.batch_sizes.append(len(reqs))
@@ -80,6 +82,9 @@ class MicroBatcher:
     unit-testable without a clock."""
 
     def __init__(self, max_batch: int = 64, max_wait_ms: float = 5.0):
+        if max_batch < 1:
+            # drain() would emit empty batches forever (flush() spins)
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
         self.queue: list[Request] = []
@@ -141,6 +146,39 @@ class ForestServer:
         srv.engine_choice = choice
         return srv
 
+    def save(self, path) -> None:
+        """Persist the compiled serving artifact (docs/FORMATS.md): the
+        engine's device arrays + the serving config, so a cold restart
+        skips both the autotune sweep and recompilation.  The predictor
+        must come from a serializable engine (``EngineSpec.serial_arrays``
+        — tree-sharded and Pallas predictors are not; keep the forest and
+        rebuild those)."""
+        from .. import io
+        # engine_choice is an EngineChoice after from_forest() but a bare
+        # name string after load() — persist the name through both, so a
+        # load → save cycle keeps it
+        extra = {"server": {"max_batch": self.batcher.max_batch,
+                            "max_wait_ms": self.batcher.max_wait_ms,
+                            "engine_choice": getattr(self.engine_choice,
+                                                     "engine",
+                                                     self.engine_choice)}}
+        io.save_predictor(self.predictor, path, extra=extra)
+
+    @classmethod
+    def load(cls, path) -> "ForestServer":
+        """Cold-start a server from a ``save()`` artifact: predictions are
+        bit-identical to the saved predictor's, no sweep, no recompile.
+        ``engine_choice`` on the restored server is the winning engine's
+        *name* (the timings/predictor of the original ``EngineChoice``
+        were not persisted)."""
+        from .. import io
+        pred, header = io.load_predictor(path, return_header=True)
+        scfg = header.get("server") or {}
+        srv = cls(pred, max_batch=int(scfg.get("max_batch", 256)),
+                  max_wait_ms=float(scfg.get("max_wait_ms", 2.0)))
+        srv.engine_choice = scfg.get("engine_choice")
+        return srv
+
     def predict_proba(self, X: np.ndarray) -> np.ndarray:
         """Normalized class scores (paper §4) from the serving engine —
         synchronous path, bypasses the micro-batcher."""
@@ -170,6 +208,8 @@ class ForestServer:
         return done
 
     def _run(self, reqs: list[Request], now_s: float) -> list[Request]:
+        if not reqs:                   # empty flush/drain: no-op, no stats
+            return []
         X = np.stack([r.payload for r in reqs])
         t0 = time.time()
         scores = self.predictor.predict(X)

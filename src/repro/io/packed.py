@@ -1,0 +1,361 @@
+"""Packed ``.repro.npz`` serialization — forests and compiled predictors.
+
+PACSET's observation is that deployment latency is dominated by how the
+serialized model hits memory, so the on-disk layout should match the
+access pattern.  This format stores the IR the way every engine walks
+it: node records concatenated **per tree in preorder** (root first —
+traversal order), leaf records **in-order** (the canonical left-to-right
+numbering), padding stripped (ragged trees carried by offset arrays, not
+rectangular padding), so a cold load streams exactly the bytes the
+compiler needs and re-pads in one allocation.
+
+Two kinds share the container (``docs/FORMATS.md``):
+
+  * ``kind="forest"`` — the canonical IR; ``save_forest``/``load_forest``.
+    Quantization metadata (scale/bits/feature ranges) rides in the header
+    so a quantized forest round-trips bit-exactly.
+  * ``kind="predictor"`` — a compiled engine artifact: the engine's
+    device arrays (the fields its ``EngineSpec.serial_arrays`` declares),
+    its scalar config, the recorded ``CompilePlan``, and the embedded
+    forest.  ``load_predictor`` rebuilds the predictor **without
+    recompiling** (no mask/packing reconstruction), which is the
+    cold-start win ``benchmarks/bench_coldstart.py`` measures.
+
+The header is a JSON string in the ``header`` entry; ``version`` gates
+compatibility (readers reject newer majors loudly rather than
+misinterpreting arrays).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import json
+import os
+from typing import Optional, Union
+
+import numpy as np
+
+from ..core.forest import Forest
+
+FORMAT = "repro.pack"
+VERSION = 1
+
+PathLike = Union[str, os.PathLike]
+
+
+# --------------------------------------------------------------------------- #
+# Header plumbing
+# --------------------------------------------------------------------------- #
+def _norm(path: PathLike) -> str:
+    # np.savez silently appends ".npz"; normalize so save/load agree
+    p = os.fspath(path)
+    return p if p.endswith(".npz") else p + ".npz"
+
+
+def _write_npz(path: PathLike, header: dict, arrays: dict) -> None:
+    header = dict(header, format=FORMAT, version=VERSION)
+    np.savez(_norm(path), header=np.asarray(json.dumps(header)),
+             **arrays)
+
+
+def _read_npz(path: PathLike):
+    try:
+        npz = np.load(_norm(path), allow_pickle=False)
+    except Exception as e:
+        raise ValueError(f"{path!r} is not a readable .npz file: {e}") from e
+    if "header" not in npz.files:
+        raise ValueError(f"{path!r} has no header entry — not a "
+                         f"{FORMAT} file")
+    try:
+        header = json.loads(str(npz["header"]))
+    except ValueError as e:
+        raise ValueError(f"{path!r} has a corrupt header: {e}") from e
+    if header.get("format") != FORMAT:
+        raise ValueError(f"{path!r}: unknown format "
+                         f"{header.get('format')!r} (expected {FORMAT})")
+    if int(header.get("version", -1)) > VERSION:
+        raise ValueError(
+            f"{path!r} is version {header['version']}, newer than this "
+            f"reader (max {VERSION}) — upgrade before loading")
+    return header, npz
+
+
+# --------------------------------------------------------------------------- #
+# Forest IR <-> packed arrays
+# --------------------------------------------------------------------------- #
+_NODE_FIELDS = ("feature", "threshold", "left", "right",
+                "leaf_lo", "leaf_mid", "leaf_hi")
+
+
+def _pack_forest(forest: Forest, prefix: str = "") -> tuple[dict, dict]:
+    """Forest → (header-meta, arrays): padding stripped, nodes in
+    preorder, leaves in-order, ragged boundaries in offset arrays."""
+    T = forest.n_trees
+    nn = forest.n_nodes.astype(np.int64)
+    nl = forest.n_leaves_per_tree.astype(np.int64)
+    node_off = np.zeros(T + 1, np.int64)
+    leaf_off = np.zeros(T + 1, np.int64)
+    np.cumsum(nn, out=node_off[1:])
+    np.cumsum(nl, out=leaf_off[1:])
+
+    arrays = {}
+    for name in _NODE_FIELDS:
+        full = getattr(forest, name)
+        arrays[prefix + "node_" + name] = np.concatenate(
+            [full[t, :nn[t]] for t in range(T)]) if T else full[:0, 0]
+    arrays[prefix + "leaf_value"] = np.concatenate(
+        [forest.leaf_value[t, :nl[t]] for t in range(T)])
+    arrays[prefix + "node_offset"] = node_off
+    arrays[prefix + "leaf_offset"] = leaf_off
+    meta = {
+        "n_trees": T, "n_leaves": forest.n_leaves,
+        "n_classes": forest.n_classes, "n_features": forest.n_features,
+        "max_depth": forest.max_depth,
+        "quant_scale": forest.quant_scale, "quant_bits": forest.quant_bits,
+        "leaf_scale": forest.leaf_scale,
+    }
+    if forest.feat_lo is not None:
+        arrays[prefix + "feat_lo"] = np.asarray(forest.feat_lo)
+        arrays[prefix + "feat_hi"] = np.asarray(forest.feat_hi)
+    return meta, arrays
+
+
+def _unpack_forest(meta: dict, npz, prefix: str = "") -> Forest:
+    T, L = int(meta["n_trees"]), int(meta["n_leaves"])
+    C = int(meta["n_classes"])
+    node_off = npz[prefix + "node_offset"]
+    leaf_off = npz[prefix + "leaf_offset"]
+    nn = np.diff(node_off).astype(np.int32)
+    nl = np.diff(leaf_off).astype(np.int32)
+
+    # vectorized ragged → rectangular scatter: row-major boolean masks
+    # visit tree 0's slots first, matching the per-tree concatenation
+    # order of _pack_forest — no Python loop on the cold-start path
+    node_mask = np.arange(L - 1)[None, :] < nn[:, None]      # (T, L-1)
+    leaf_mask = np.arange(L)[None, :] < nl[:, None]          # (T, L)
+    padded = {}
+    for name in _NODE_FIELDS:
+        flat = npz[prefix + "node_" + name]
+        fill = -1 if name == "feature" else 0
+        full = np.full((T, L - 1), fill, dtype=flat.dtype)
+        full[node_mask] = flat
+        padded[name] = full
+    lv_flat = npz[prefix + "leaf_value"]
+    leaf_value = np.zeros((T, L, C), dtype=lv_flat.dtype)
+    leaf_value[leaf_mask] = lv_flat
+
+    feat_lo = npz[prefix + "feat_lo"] if prefix + "feat_lo" in npz.files \
+        else None
+    feat_hi = npz[prefix + "feat_hi"] if prefix + "feat_hi" in npz.files \
+        else None
+    return Forest(
+        n_trees=T, n_leaves=L, n_classes=C,
+        n_features=int(meta["n_features"]),
+        leaf_value=leaf_value, n_nodes=nn, n_leaves_per_tree=nl,
+        max_depth=int(meta["max_depth"]),
+        quant_scale=meta.get("quant_scale"),
+        quant_bits=meta.get("quant_bits"),
+        leaf_scale=float(meta.get("leaf_scale", 1.0)),
+        feat_lo=feat_lo, feat_hi=feat_hi, **padded)
+
+
+def peek(path: PathLike) -> dict:
+    """Read just the header of a packed file (kind, shape, engine, ...)
+    without materialising any arrays."""
+    header, _ = _read_npz(path)
+    return header
+
+
+def save_forest(forest: Forest, path: PathLike) -> None:
+    """Write the canonical IR as a packed ``.repro.npz`` (kind=forest)."""
+    meta, arrays = _pack_forest(forest)
+    _write_npz(path, {"kind": "forest", "forest": meta}, arrays)
+
+
+def load_forest(path: PathLike) -> Forest:
+    """Load a packed forest (bit-exact round trip, quantization included)."""
+    header, npz = _read_npz(path)
+    if header.get("kind") != "forest":
+        raise ValueError(f"{path!r} holds a {header.get('kind')!r} "
+                         "artifact, not a forest (use load_predictor)")
+    return _unpack_forest(header["forest"], npz)
+
+
+# --------------------------------------------------------------------------- #
+# Compiled predictor artifacts
+# --------------------------------------------------------------------------- #
+def _class_path(obj) -> str:
+    t = type(obj)
+    return f"{t.__module__}:{t.__qualname__}"
+
+
+def _resolve_class(path: str):
+    mod, attr = path.split(":")
+    return getattr(importlib.import_module(mod), attr)
+
+
+def _encode_scalar(v):
+    if isinstance(v, (bool, int, float, str)) or v is None:
+        return v
+    try:                                   # dtypes / dtype-likes (gemm)
+        return {"__dtype__": np.dtype(v).name}
+    except TypeError:
+        raise TypeError(f"cannot serialize compiled scalar field "
+                        f"{v!r} of type {type(v).__name__}")
+
+
+def _decode_scalar(v):
+    if isinstance(v, dict) and "__dtype__" in v:
+        return np.dtype(v["__dtype__"])
+    return v
+
+
+def _getattr_path(obj, dotted: str):
+    for part in dotted.split("."):
+        obj = getattr(obj, part)
+    return obj
+
+
+def _walk_compiled(compiled, serial_arrays: tuple):
+    """Compiled dataclass (possibly nested) → (classes, scalars, arrays).
+
+    ``serial_arrays`` (from the ``EngineSpec``) names the array fields,
+    dotted for nesting; every other dataclass field is either a scalar
+    (serialized into the header), the host ``forest`` (embedded once), or
+    a nested compiled dataclass reached by some dotted name.
+    """
+    arrays = {name: np.asarray(_getattr_path(compiled, name))
+              for name in serial_arrays}
+    prefixes = {""}
+    for name in serial_arrays:        # every ancestor, not just the parent
+        parts = name.split(".")[:-1]
+        for i in range(1, len(parts) + 1):
+            prefixes.add(".".join(parts[:i]))
+    classes, scalars = {}, {}
+    for prefix in sorted(prefixes):
+        obj = _getattr_path(compiled, prefix) if prefix else compiled
+        if not dataclasses.is_dataclass(obj):
+            raise TypeError(f"compiled field {prefix or '<root>'!r} is not "
+                            "a dataclass — cannot serialize")
+        classes[prefix] = _class_path(obj)
+        sc = {}
+        for f in dataclasses.fields(obj):
+            dotted = f"{prefix}.{f.name}" if prefix else f.name
+            if dotted in arrays or f.name == "forest" or \
+                    dotted in prefixes:
+                continue
+            sc[f.name] = _encode_scalar(getattr(obj, f.name))
+        scalars[prefix] = sc
+    return classes, scalars, arrays
+
+
+def _rebuild_compiled(classes: dict, scalars: dict, npz,
+                      forest: Optional[Forest]):
+    """Inverse of ``_walk_compiled``: instantiate nested dataclasses
+    bottom-up from header metadata + npz arrays."""
+    import jax.numpy as jnp
+    array_names = [n[2:] for n in npz.files if n.startswith("c.")]
+    built = {}
+    # nested prefixes first (deepest innermost), the root ("") last
+    order = sorted((p for p in classes if p),
+                   key=lambda p: -p.count(".")) + [""]
+    for prefix in order:
+        cls = _resolve_class(classes[prefix])
+        kw = dict(scalars.get(prefix, {}))
+        kw = {k: _decode_scalar(v) for k, v in kw.items()}
+        for f in dataclasses.fields(cls):
+            dotted = f"{prefix}.{f.name}" if prefix else f.name
+            if dotted in array_names:
+                kw[f.name] = jnp.asarray(npz["c." + dotted])
+            elif f.name == "forest":
+                kw[f.name] = forest
+            elif dotted in built:
+                kw[f.name] = built[dotted]
+        built[prefix] = cls(**kw)
+    return built[""]
+
+
+def _spec_for_predictor(pred):
+    """Find the registered EngineSpec a predictor came from: its eval fn
+    is the spec's ``evaluate`` (disambiguates native vs unrolled, which
+    share compiled arrays)."""
+    from ..core import registry
+    plan = getattr(pred, "plan", None)
+    if plan is not None and getattr(plan, "n_devices", 1) == 1:
+        spec = registry.get(plan.engine, plan.backend)
+        if spec.evaluate is not None and spec.evaluate is getattr(
+                pred, "_eval", None):
+            return spec
+    for spec in registry.specs():
+        if spec.evaluate is not None and \
+                spec.evaluate is getattr(pred, "_eval", None):
+            return spec
+    raise ValueError(
+        f"cannot serialize {type(pred).__name__}: no registered engine "
+        "matches its evaluate fn (tree-sharded and Pallas predictors "
+        "are rebuilt from the forest, not serialized — save the forest)")
+
+
+def save_predictor(pred, path: PathLike, *, extra: Optional[dict] = None
+                   ) -> None:
+    """Serialize a compiled predictor (kind=predictor).
+
+    The engine must declare its device arrays via
+    ``EngineSpec.serial_arrays``; the embedded forest, scalar config, and
+    recorded ``CompilePlan`` ride in the header.  ``extra`` merges
+    caller metadata (e.g. the serving config) into the header.
+    """
+    spec = _spec_for_predictor(pred)
+    if not spec.serial_arrays:
+        raise ValueError(f"engine {spec.name}/{spec.backend} declares no "
+                         "serial_arrays — its artifact is not serializable")
+    compiled = pred.compiled
+    classes, scalars, carrays = _walk_compiled(compiled, spec.serial_arrays)
+    forest = getattr(compiled, "forest", None)
+    if forest is None and hasattr(compiled, "qs"):
+        forest = getattr(compiled.qs, "forest", None)
+    arrays = {f"c.{k}": v for k, v in carrays.items()}
+    fmeta = None
+    if forest is not None:
+        fmeta, farrays = _pack_forest(forest, prefix="f.")
+        arrays.update(farrays)
+    plan = getattr(pred, "plan", None)
+    header = {
+        "kind": "predictor",
+        "engine": spec.name, "backend": spec.backend,
+        "tune_name": spec.tune_name,
+        "classes": classes, "scalars": scalars,
+        "forest": fmeta,
+        "plan": [[r.name, r.detail] for r in plan.records]
+        if plan is not None else [],
+    }
+    if extra:
+        header.update(extra)
+    _write_npz(path, header, arrays)
+
+
+def load_predictor(pred_or_path: PathLike, *, return_header: bool = False):
+    """Rebuild a compiled predictor from a packed artifact — no
+    recompilation: the engine's device arrays upload as-saved, so
+    load-to-first-prediction skips mask construction, leaf packing, and
+    the autotune sweep entirely.  Predictions are bit-identical to the
+    saved predictor's (the arrays are the same bits)."""
+    from ..core import registry
+    from ..core.pipeline import CompilePlan
+    path = pred_or_path
+    header, npz = _read_npz(path)
+    if header.get("kind") != "predictor":
+        raise ValueError(f"{path!r} holds a {header.get('kind')!r} "
+                         "artifact, not a predictor (use load_forest)")
+    spec = registry.get(header["engine"], header["backend"])
+    forest = _unpack_forest(header["forest"], npz, prefix="f.") \
+        if header.get("forest") is not None else None
+    compiled = _rebuild_compiled(header["classes"], header["scalars"],
+                                 npz, forest)
+    pred = spec.predictor_cls(compiled, spec.evaluate)
+    plan = CompilePlan(engine=spec.name, backend=spec.backend)
+    for name, detail in header.get("plan", []):
+        plan.record(name, detail)
+    plan.record("deserialize", f"loaded from {os.fspath(path)}")
+    pred.plan = plan
+    return (pred, header) if return_header else pred

@@ -10,7 +10,7 @@ from ..core.engine_select import bucket_batch
 from ..core.forest import Forest
 from ..core.quantize import leaf_scale, quantize_inputs
 from ..core.quickscorer import bitmm_full_word, bitmm_pack_arrays
-from ..core.registry import BasePredictor
+from ..core.registry import BasePredictor, ensure_feature_column
 from . import gemm_forest_kernel, quickscorer_kernel
 
 
@@ -56,7 +56,7 @@ class _PallasPredictor(BasePredictor):
                                np.asarray(X)).astype(np.float32)
 
     def predict(self, X: np.ndarray) -> np.ndarray:
-        Xq = self.transform_inputs(X)
+        Xq = ensure_feature_column(self.transform_inputs(X))
         B = Xq.shape[0]
         bucket = bucket_rows(B, self.block_b)
         self._buckets.add(bucket)

@@ -217,3 +217,63 @@ def test_pallas_batch_bucketing_bounds_recompiles(small_forest):
     assert pred.n_compiles == 2
     if hasattr(pred._fn, "_cache_size"):    # actual jit cache, where exposed
         assert pred._fn._cache_size() == pred.n_compiles
+
+
+# --------------------------------------------------------------------------- #
+# cache-file robustness: garbage on disk must mean re-sweep, never a crash
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("garbage", [
+    '{"truncated": {"timings": {"qs": 0.0',           # cut mid-write
+    "not json at all",
+    "[1, 2, 3]",                                      # valid JSON, wrong type
+    '"just a string"',
+    '{"key": "entry is not a dict"}',
+    '{"key": {"engine": "qs"}}',                      # missing timings
+    '{"key": {"timings": {"qs": "fast"}}}',           # non-numeric timing
+    '{"key": {"timings": {}}}',                       # empty timings
+    "",
+], ids=["truncated", "not-json", "list", "string", "str-entry",
+        "no-timings", "str-timing", "empty-timings", "empty-file"])
+def test_garbage_cache_file_triggers_clean_resweep(small_forest, tmp_path,
+                                                   garbage):
+    cache = str(tmp_path / "engines.json")
+    with open(cache, "w") as f:
+        f.write(garbage)
+    c = engine_select.choose(small_forest, 64, engines=("qs", "native"),
+                             cache_path=cache, repeats=1)
+    assert not c.from_cache and set(c.timings) == {"qs", "native"}
+    # ...and the file was rewritten into a valid cache that now hits
+    with open(cache) as f:
+        data = json.load(f)
+    assert set(data[c.key]["timings"]) == {"qs", "native"}
+    engine_select.clear_cache()
+    c2 = engine_select.choose(small_forest, 64, engines=("qs", "native"),
+                              cache_path=cache, repeats=1)
+    assert c2.from_cache and c2.engine == c.engine
+
+
+def test_garbage_entries_dropped_but_valid_entries_kept(small_forest,
+                                                        class_forest,
+                                                        tmp_path):
+    """A partially corrupt cache keeps its healthy entries: only the
+    malformed ones are dropped (and purged on the next rewrite)."""
+    cache = str(tmp_path / "engines.json")
+    good = engine_select.choose(small_forest, 64, engines=("qs",),
+                                cache_path=cache, repeats=1)
+    with open(cache) as f:
+        data = json.load(f)
+    data["corrupt_key"] = {"timings": "nope"}
+    with open(cache, "w") as f:
+        json.dump(data, f)
+    engine_select.clear_cache()
+    # the healthy entry still answers
+    hit = engine_select.choose(small_forest, 64, engines=("qs",),
+                               cache_path=cache, repeats=1)
+    assert hit.from_cache and hit.engine == good.engine
+    # a sweep for a different forest rewrites the file without the junk
+    engine_select.choose(class_forest, 64, engines=("qs",),
+                         cache_path=cache, repeats=1)
+    with open(cache) as f:
+        rewritten = json.load(f)
+    assert "corrupt_key" not in rewritten
+    assert good.key in rewritten

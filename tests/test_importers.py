@@ -1,0 +1,295 @@
+"""Golden-fixture importer tests (tests/fixtures/): checked-in model
+dumps + hand-computed expected predictions, so importer regressions are
+caught without sklearn/xgboost/lightgbm installed.  Also the packed
+``.repro.npz`` container's error paths (version gate, kind mismatch,
+garbage files)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import core, io
+from repro.core import registry
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+with open(os.path.join(FIXTURES, "expected.json")) as f:
+    EXPECTED = json.load(f)
+
+
+def load_fixture(name: str):
+    exp = EXPECTED[name]
+    forest = io.load_model(os.path.join(FIXTURES, name + ".json"),
+                           **exp["kw"])
+    return forest, np.asarray(exp["X"]), np.asarray(exp["predict"])
+
+
+# --------------------------------------------------------------------------- #
+# importer → oracle golden checks
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_fixture_oracle_matches_expected(name):
+    forest, X, expect = load_fixture(name)
+    shape = EXPECTED[name]["shape"]
+    assert forest.n_trees == shape["n_trees"]
+    assert forest.n_classes == shape["n_classes"]
+    assert forest.n_features == shape["n_features"]
+    np.testing.assert_allclose(forest.predict_oracle(X), expect,
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_fixture_engines_match_expected(name):
+    """Every registered XLA engine reproduces the golden predictions —
+    the import→compile→predict chain, not just the IR."""
+    forest, X, expect = load_fixture(name)
+    for engine in registry.engines("jax"):
+        got = core.compile_forest(forest, engine=engine).predict(X)
+        np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"{name}/{engine}")
+
+
+def test_xgb_boundary_goes_right():
+    """XGBoost's predicate is strict (< goes yes): x == split_condition
+    must take the 'no' branch — the nextafter threshold mapping."""
+    forest, _, _ = load_fixture("xgb_regression")
+    # tree0 splits f0 < 0.5 (yes → 1.0); at exactly 0.5, no → 2.0
+    got = forest.predict_oracle(np.array([[0.5, 5.0]]))   # t1: no → 30
+    assert got[0, 0] == pytest.approx(32.0)
+
+
+def test_lgbm_boundary_goes_left():
+    """LightGBM's predicate is <= : x == threshold takes the left child."""
+    forest, _, _ = load_fixture("lgbm_regression")
+    got = forest.predict_oracle(np.array([[0.5, 0.0]]))
+    assert got[0, 0] == pytest.approx(3.0 + -1.0)
+
+
+def test_sklearn_object_and_json_shim_agree():
+    """import_sklearn over the shim object ≡ load_model over its JSON —
+    the duck-typed path a real fitted sklearn model takes."""
+    path = os.path.join(FIXTURES, "sklearn_rf_classifier.json")
+    with open(path) as f:
+        shim = io.sklearn_shim_from_json(json.load(f))
+    f1 = io.import_sklearn(shim)
+    f2 = io.load_model(path)
+    X = np.asarray(EXPECTED["sklearn_rf_classifier"]["X"])
+    np.testing.assert_array_equal(f1.predict_oracle(X),
+                                  f2.predict_oracle(X))
+
+
+def test_importer_rejects_nan_threshold():
+    dump = [{"nodeid": 0, "split": "f0", "split_condition": float("nan"),
+             "yes": 1, "no": 2, "children": [
+                 {"nodeid": 1, "leaf": 1.0}, {"nodeid": 2, "leaf": 2.0}]}]
+    with pytest.raises(ValueError, match="NaN"):
+        io.import_xgboost_json(dump)
+
+
+def test_importer_rejects_categorical_lgbm():
+    dump = {"tree_info": [{"tree_structure": {
+        "split_feature": 0, "threshold": "1||2", "decision_type": "==",
+        "left_child": {"leaf_value": 1.0},
+        "right_child": {"leaf_value": 2.0}}}]}
+    with pytest.raises(ValueError, match="decision_type"):
+        io.import_lightgbm_json(dump)
+
+
+def test_xgb_named_features_first_appearance_order():
+    dump = [{"nodeid": 0, "split": "age", "split_condition": 10.0,
+             "yes": 1, "no": 2, "children": [
+                 {"nodeid": 1, "split": "income", "split_condition": 3.0,
+                  "yes": 3, "no": 4, "children": [
+                      {"nodeid": 3, "leaf": 1.0}, {"nodeid": 4, "leaf": 2.0}]},
+                 {"nodeid": 2, "leaf": 5.0}]}]
+    forest = io.import_xgboost_json(dump)
+    assert forest.n_features == 2           # age → 0, income → 1
+    got = forest.predict_oracle(np.array([[5.0, 1.0], [5.0, 4.0],
+                                          [20.0, 0.0]]))
+    np.testing.assert_allclose(got[:, 0], [1.0, 2.0, 5.0])
+
+
+def test_sklearn_classifier_boosting_rejected():
+    """GradientBoostingClassifier must be rejected loudly: multiclass
+    grids must not be summed into one scalar, and the binary case hides
+    its log-odds prior where the importer can't recover it."""
+    with open(os.path.join(FIXTURES, "sklearn_gbr.json")) as f:
+        d = json.load(f)
+    for n_classes in (2, 3):
+        d["n_classes"] = n_classes
+        with pytest.raises(ValueError, match="classifiers"):
+            io.import_sklearn(io.sklearn_shim_from_json(d))
+
+
+def test_sklearn_boosting_init_without_constant():
+    """An init_ lacking constant_ (e.g. a classifier prior object) means
+    base 0, not an AttributeError."""
+    with open(os.path.join(FIXTURES, "sklearn_gbr.json")) as f:
+        d = json.load(f)
+    shim = io.sklearn_shim_from_json(d)
+    shim.init_ = object()                  # no constant_ attribute
+    forest = io.import_sklearn(shim)
+    got = forest.predict_oracle(np.array([[-1.0], [1.0]]))[:, 0]
+    np.testing.assert_allclose(got, [-0.3, 0.3])   # lr-scaled, no base
+
+
+def test_xgb_feature_names_fixes_column_order():
+    """feature_names pins name → training-column mapping; without it,
+    first-appearance order would permute the columns here."""
+    dump = [{"nodeid": 0, "split": "income", "split_condition": 3.0,
+             "yes": 1, "no": 2, "children": [
+                 {"nodeid": 1, "leaf": 1.0}, {"nodeid": 2, "leaf": 2.0}]}]
+    forest = io.import_xgboost_json(dump, feature_names=["age", "income"])
+    assert forest.n_features == 2          # income → column 1
+    got = forest.predict_oracle(np.array([[99.0, 1.0], [0.0, 9.0]]))
+    np.testing.assert_allclose(got[:, 0], [1.0, 2.0])
+    with pytest.raises(ValueError, match="missing from feature_names"):
+        io.import_xgboost_json(dump, feature_names=["age"])
+
+
+def test_xgb_feature_names_pin_fN_names_too():
+    """With pinned feature_names, even fN-style split names resolve
+    through the map (by the caller's column order, not by digit) and
+    unknown fN names are rejected instead of silently clamped."""
+    dump = [{"nodeid": 0, "split": "f1", "split_condition": 0.0,
+             "yes": 1, "no": 2, "children": [
+                 {"nodeid": 1, "leaf": 1.0}, {"nodeid": 2, "leaf": 2.0}]}]
+    # permuted pinning: the column called "f1" is column 0
+    forest = io.import_xgboost_json(dump, feature_names=["f1", "f0"])
+    assert forest.n_features == 2
+    got = forest.predict_oracle(np.array([[-1.0, 99.0], [1.0, -99.0]]))
+    np.testing.assert_allclose(got[:, 0], [1.0, 2.0])
+    with pytest.raises(ValueError, match="missing from feature_names"):
+        io.import_xgboost_json(dump, feature_names=["colA", "colB"])
+
+
+def test_load_model_filters_inapplicable_hints(tmp_path):
+    """Hints reach only importers whose signatures accept them: n_classes
+    with a LightGBM dump (self-describing num_class) must not TypeError."""
+    forest = io.load_model(os.path.join(FIXTURES, "lgbm_regression.json"),
+                           n_classes=3)
+    assert forest.n_classes == 1           # the dump's num_class governs
+
+
+def test_rapidscorer_server_cold_start_reaches_forest(small_forest,
+                                                      tmp_path):
+    """CompiledRS nests the IR under qs: host_forest() must reach it on
+    a cold-started rapidscorer server (regression: compiled.forest)."""
+    from repro.inference.server import ForestServer
+    srv = ForestServer.from_forest(small_forest, max_batch=8,
+                                   engines=("rapidscorer",),
+                                   cache_path=None, repeats=1)
+    p = str(tmp_path / "rs.npz")
+    srv.save(p)
+    loaded = ForestServer.load(p)
+    f = loaded.predictor.host_forest()
+    assert f is not None and f.n_features == small_forest.n_features
+    X = np.random.default_rng(0).normal(size=(4, f.n_features))
+    np.testing.assert_array_equal(loaded.predictor.predict(X),
+                                  srv.predictor.predict(X))
+
+
+def test_xgb_multiclass_base_score_applied():
+    forest = io.load_model(os.path.join(FIXTURES, "xgb_multiclass.json"),
+                           n_classes=3, base_score=0.5)
+    got = forest.predict_oracle(np.array([[-1.0]]))
+    np.testing.assert_allclose(got, [[1.5, 3.5, 5.5]])
+
+
+def test_load_model_packed_ignores_importer_kwargs(tmp_path, small_forest):
+    """The packed IR is self-describing: importer hints must not crash
+    the npz path (regression: kw used to forward into load_forest)."""
+    p = str(tmp_path / "f.repro.npz")
+    io.save_forest(small_forest, p)
+    loaded = io.load_model(p, n_classes=3)
+    assert loaded.n_classes == small_forest.n_classes
+
+
+def test_server_load_save_load_keeps_engine_choice(small_forest, tmp_path):
+    """engine_choice (a name string after load) survives a save cycle."""
+    from repro.inference.server import ForestServer
+    srv = ForestServer.from_forest(small_forest, max_batch=8,
+                                   engines=("native",), cache_path=None,
+                                   repeats=1)
+    p1, p2 = str(tmp_path / "a.npz"), str(tmp_path / "b.npz")
+    srv.save(p1)
+    srv2 = ForestServer.load(p1)
+    srv2.save(p2)
+    assert ForestServer.load(p2).engine_choice == "native"
+
+
+def test_n_features_hint_below_referenced_index_rejected():
+    """A too-small n_features would make engines gather a clamped column
+    silently — all three importers must reject it loudly."""
+    xgb = [{"nodeid": 0, "split": "f5", "split_condition": 0.0,
+            "yes": 1, "no": 2, "children": [
+                {"nodeid": 1, "leaf": 1.0}, {"nodeid": 2, "leaf": 2.0}]}]
+    with pytest.raises(ValueError, match="too small"):
+        io.import_xgboost_json(xgb, n_features=3)
+    lgb = {"tree_info": [{"tree_structure": {
+        "split_feature": 4, "threshold": 0.0, "decision_type": "<=",
+        "left_child": {"leaf_value": 1.0},
+        "right_child": {"leaf_value": 2.0}}}]}
+    with pytest.raises(ValueError, match="too small"):
+        io.import_lightgbm_json(lgb, n_features=2)
+    with open(os.path.join(FIXTURES, "sklearn_rf_classifier.json")) as f:
+        shim = io.sklearn_shim_from_json(json.load(f))
+    with pytest.raises(ValueError, match="too small"):
+        io.import_sklearn(shim, n_features=0)
+
+
+def test_load_model_rejects_unknown_json(tmp_path):
+    p = tmp_path / "mystery.json"
+    p.write_text('{"weights": [1, 2, 3]}')
+    with pytest.raises(ValueError, match="unrecognized model format"):
+        io.load_model(str(p))
+
+
+# --------------------------------------------------------------------------- #
+# packed container error paths
+# --------------------------------------------------------------------------- #
+def test_packed_rejects_garbage_file(tmp_path):
+    p = tmp_path / "junk.npz"
+    p.write_bytes(b"this is not an npz archive")
+    with pytest.raises(ValueError, match="not a readable"):
+        io.load_forest(str(p))
+
+
+def test_packed_rejects_missing_header(tmp_path):
+    p = tmp_path / "noheader.npz"
+    np.savez(str(p), x=np.zeros(3))
+    with pytest.raises(ValueError, match="no header"):
+        io.load_forest(str(p))
+
+
+def test_packed_rejects_newer_version(tmp_path, small_forest):
+    from repro.io import packed
+    p = tmp_path / "future.npz"
+    io.save_forest(small_forest, str(p))
+    npz = dict(np.load(str(p), allow_pickle=False))
+    hdr = json.loads(str(npz["header"]))
+    hdr["version"] = packed.VERSION + 1
+    npz["header"] = np.asarray(json.dumps(hdr))
+    np.savez(str(p), **npz)
+    with pytest.raises(ValueError, match="newer than this reader"):
+        io.load_forest(str(p))
+
+
+def test_packed_kind_mismatch(tmp_path, small_forest):
+    fp = tmp_path / "forest.npz"
+    io.save_forest(small_forest, str(fp))
+    with pytest.raises(ValueError, match="not a predictor"):
+        io.load_predictor(str(fp))
+    pp = tmp_path / "pred.npz"
+    io.save_predictor(core.compile_forest(small_forest, engine="native"),
+                      str(pp))
+    with pytest.raises(ValueError, match="not a forest"):
+        io.load_forest(str(pp))
+
+
+def test_save_predictor_requires_serializable_engine(small_forest):
+    class NotAnEnginePredictor:
+        _eval = None
+    with pytest.raises(ValueError, match="cannot serialize"):
+        io.save_predictor(NotAnEnginePredictor(), "/tmp/never-written.npz")

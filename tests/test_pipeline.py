@@ -68,7 +68,8 @@ def test_register_engine_decorator_and_live_tables(small_forest):
 # pipeline passes
 # --------------------------------------------------------------------------- #
 def test_pipeline_declares_all_passes():
-    assert PIPELINE == ("canonicalize", "quantize", "layout", "lower")
+    assert PIPELINE == ("deserialize", "canonicalize", "quantize",
+                        "layout", "lower")
     assert all(name in PASSES for name in PIPELINE)
 
 
@@ -121,7 +122,7 @@ def test_bitmm_layout_defers_tiling_to_shard_wrapper(small_forest):
 
 def test_canonicalize_from_trainer(trained_rf, magic_ds):
     pred = compile_plan(trained_rf, engine="bitvector")
-    crec = pred.plan.records[0]
+    crec = [r for r in pred.plan.records if r.name == "canonicalize"][0]
     assert "RandomForest" in crec.detail
     forest = core.from_random_forest(trained_rf)
     X = magic_ds.X_test[:32]

@@ -124,6 +124,34 @@ def test_microbatcher_drain_caps_at_max_batch():
     assert len(mb.queue) == 3
 
 
+def test_microbatcher_rejects_nonpositive_max_batch():
+    """max_batch=0 would make drain() emit empty batches forever — the
+    flush() loop would spin without making progress."""
+    for bad in (0, -1):
+        with pytest.raises(ValueError, match="max_batch"):
+            MicroBatcher(max_batch=bad)
+
+
+def test_empty_flush_and_poll_are_noops(small_forest):
+    """Empty-queue flush/poll: no batches run, stats untouched."""
+    pred = core.compile_forest(small_forest, engine="bitvector")
+    srv = ForestServer(pred, max_batch=8, max_wait_ms=1.0)
+    assert srv.flush(now_s=0.0) == []
+    assert srv.poll(now_s=1e9) == []
+    assert srv._run([], now_s=0.0) == []          # zero-request batch
+    s = srv.stats.summary()
+    assert s["n_requests"] == 0 and s["n_batches"] == 0
+    assert srv.stats.batch_sizes == [] and srv.stats.latencies_ms == []
+
+
+def test_record_batch_empty_is_noop():
+    from repro.inference.server import ServerStats
+    st = ServerStats()
+    st.record_batch([])
+    assert st.n_batches == 0 and st.n_requests == 0
+    assert st.batch_sizes == [] and st.latencies_ms == []
+
+
 # --------------------------------------------------------------------------- #
 # forest server
 # --------------------------------------------------------------------------- #
@@ -142,6 +170,33 @@ def test_forest_server_end_to_end(small_forest):
     got = np.stack([r.result for r in sorted(done, key=lambda r: r.rid)])
     np.testing.assert_allclose(got, direct, rtol=1e-5, atol=1e-6)
     assert srv.stats.summary()["n_requests"] == 20
+
+
+def test_forest_server_save_load_cold_start(small_forest, tmp_path):
+    """save() → load() restores the serving config and a predictor whose
+    outputs are bit-identical — the no-recompile cold-start path."""
+    qf = core.quantize_forest(small_forest,
+                              np.random.default_rng(0).normal(
+                                  size=(64, small_forest.n_features)))
+    srv = ForestServer.from_forest(qf, max_batch=16, max_wait_ms=3.0,
+                                   engines=("qs", "native"),
+                                   cache_path=None, repeats=1)
+    X = np.random.default_rng(1).normal(size=(8, qf.n_features))
+    path = str(tmp_path / "server.repro.npz")
+    srv.save(path)
+    srv2 = ForestServer.load(path)
+    np.testing.assert_array_equal(srv.predictor.predict(X),
+                                  srv2.predictor.predict(X))
+    assert srv2.batcher.max_batch == 16
+    assert srv2.batcher.max_wait_ms == 3.0
+    assert srv2.engine_choice == srv.engine_choice.engine
+    assert srv2.stats.summary()["n_requests"] == 0      # fresh stats
+    # the restored server actually serves
+    srv2.submit(X[0], arrival_s=0.0)
+    done = srv2.flush(now_s=1.0)
+    assert len(done) == 1
+    np.testing.assert_array_equal(done[0].result,
+                                  srv.predictor.predict(X[:1])[0])
 
 
 # --------------------------------------------------------------------------- #

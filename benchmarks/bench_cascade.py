@@ -1,0 +1,176 @@
+"""Cascade A/B harness: confidence-gated staged evaluation vs the full
+forest, per engine, on a real classification dataset.
+
+    PYTHONPATH=src python -m benchmarks.bench_cascade            # table
+    PYTHONPATH=src python -m benchmarks.bench_cascade --json     # + snapshot
+
+For each (dataset, engine) pair a random forest is trained, quantized,
+and served two ways: the plain engine over all trees, and a calibrated
+cascade (``repro.cascade``, threshold picked on held-out rows under the
+0.5 pp accuracy floor).  Reported per row:
+
+  * ``speedup_wall``  — full-forest wall-clock / cascade wall-clock;
+  * ``speedup_trees`` — n_trees / mean trees evaluated per row (the
+    device-independent work reduction — the acceptance metric);
+  * ``acc_drop_pp``   — accuracy delta at the calibrated threshold.
+
+The CSV (experiments/bench/), the raw JSON, and the repo-root
+``BENCH_cascade.json`` snapshot all come from the **same** run's records
+(PR-1's artifact-consistency rule: derived artifacts can never contradict
+the raw data).  Non-default ``REPRO_BENCH_SCALE`` runs write
+scale-suffixed artifacts (``bench_cascade_quick.*``) and leave the
+canonical default-scale set — including the repo-root snapshot —
+untouched.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro import core
+from repro.cascade import calibrate, CascadePredictor, CascadeSpec, \
+    MarginGate
+from repro.data import datasets
+from repro.trees.random_forest import RandomForest, RandomForestConfig
+
+from .common import SCALE, Table, save_json, scale_pick, time_predict, \
+    us_per_instance
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SNAPSHOT = os.path.join(REPO_ROOT, "BENCH_cascade.json")
+
+
+def cases():
+    # (dataset, n_trees, max_leaves, stages)
+    return scale_pick(
+        [("magic", 128, 32, (8, 32))],
+        [("magic", 256, 32, (16, 64)), ("mnist", 192, 32, (16, 64))],
+        [("magic", 512, 64, (16, 64, 256)),
+         ("mnist", 512, 64, (16, 64, 256)),
+         ("eeg", 512, 64, (16, 64, 256))],
+    )
+
+
+def engines():
+    return scale_pick(["bitvector"], ["bitvector", "bitmm"],
+                      ["bitvector", "bitmm", "gemm"])
+
+
+def _bench_case(dataset, n_trees, max_leaves, stages, engine,
+                repeats, floor_pp, seed=0):
+    ds = datasets.load(dataset)
+    rf = RandomForest(RandomForestConfig(
+        n_trees=n_trees, max_leaves=max_leaves, seed=seed)).fit(
+        ds.X_train, ds.y_train)
+    qf = core.quantize_forest(core.from_random_forest(rf), ds.X_train)
+
+    # held-out calibration rows must be disjoint from the timed test rows
+    n_cal = len(ds.X_test) // 2
+    X_cal, y_cal = ds.X_test[:n_cal], ds.y_test[:n_cal]
+    X_test, y_test = ds.X_test[n_cal:], ds.y_test[n_cal:]
+
+    full = core.compile_forest(qf, engine=engine)
+    casc = core.compile_forest(qf, engine=engine,
+                               cascade=CascadeSpec(stages=stages))
+    cal = calibrate(casc, X_cal, y_cal, floor_pp=floor_pp)
+    casc.set_policy(cal.policy)
+
+    us_full = us_per_instance(
+        time_predict(lambda: full.predict(X_test), repeats=repeats),
+        len(X_test))
+    casc.reset_exit_stats()
+    us_casc = us_per_instance(
+        time_predict(lambda: casc.predict(X_test), repeats=repeats),
+        len(X_test))
+    acc_full = float((full.predict_class(X_test) == y_test).mean())
+    acc_casc = float((casc.predict_class(X_test) == y_test).mean())
+    mean_trees = casc.mean_trees_evaluated
+    return {
+        "dataset": dataset, "engine": engine,
+        "trees": n_trees, "leaves": max_leaves,
+        "stages": list(casc.stages), "policy": casc.policy.tag(),
+        "n_test": int(len(X_test)),
+        "us_full": us_full, "us_cascade": us_casc,
+        "speedup_wall": us_full / us_casc,
+        "mean_trees": mean_trees,
+        "speedup_trees": n_trees / mean_trees,
+        "exit_fractions": casc.exit_fractions.tolist(),
+        "acc_full": acc_full, "acc_cascade": acc_casc,
+        "acc_drop_pp": (acc_full - acc_casc) * 100.0,
+    }
+
+
+def run(repeats: int = 5, floor_pp: float = 0.5):
+    """Non-default scales get scale-suffixed artifacts (and leave the
+    repo-root snapshot untouched, see ``main``): a quick-scale
+    validation run must never clobber the canonical default-scale CSV —
+    the CSV/raw/snapshot triplet always comes from one run (the PR-1
+    artifact-consistency rule, enforced like ``bench_engines``'s subset
+    rename)."""
+    suffix = "" if SCALE == "default" else f"_{SCALE}"
+    cols = ["dataset", "engine", "trees", "stages", "policy",
+            "full_us", "casc_us", "speedup_wall", "mean_trees",
+            "speedup_trees", "acc_full", "acc_casc", "drop_pp"]
+    t = Table(f"bench_cascade{suffix}", cols)
+    records = []
+    for (dataset, n_trees, max_leaves, stages) in cases():
+        for engine in engines():
+            r = _bench_case(dataset, n_trees, max_leaves, stages, engine,
+                            repeats, floor_pp)
+            records.append(r)
+            t.add(r["dataset"], r["engine"], r["trees"],
+                  "/".join(map(str, r["stages"])), r["policy"],
+                  f"{r['us_full']:.1f}", f"{r['us_cascade']:.1f}",
+                  f"{r['speedup_wall']:.2f}x",
+                  f"{r['mean_trees']:.1f}",
+                  f"{r['speedup_trees']:.2f}x",
+                  f"{r['acc_full']:.4f}", f"{r['acc_cascade']:.4f}",
+                  f"{r['acc_drop_pp']:.2f}")
+    return t, records
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_cascade.json at the repo root")
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--floor-pp", type=float, default=0.5,
+                    help="calibration accuracy floor (percentage points)")
+    args = ap.parse_args(argv)
+
+    tbl, records = run(repeats=args.repeats, floor_pp=args.floor_pp)
+    tbl.print()
+    tbl.save()
+    ok = [r for r in records if r["acc_drop_pp"] <= args.floor_pp]
+    best = max(ok, key=lambda r: r["speedup_trees"], default=None)
+    if best is not None:
+        print(f"\nbest cascade (<= {args.floor_pp:g} pp drop): "
+              f"{best['dataset']}/"
+              f"{best['engine']} — {best['speedup_trees']:.2f}x fewer "
+              f"trees, {best['speedup_wall']:.2f}x wall-clock, "
+              f"{best['acc_drop_pp']:.2f} pp drop")
+    if args.json:
+        snapshot = {
+            "scale": SCALE,
+            "floor_pp": args.floor_pp,
+            "records": records,
+            "best_speedup_trees": best["speedup_trees"] if best else None,
+            "best_pair": (f"{best['dataset']}/{best['engine']}"
+                          if best else None),
+        }
+        save_json(f"{tbl.name}_raw", snapshot)
+        if SCALE != "default":      # same source of truth as run()'s suffix
+            print(f"scale={SCALE}: {SNAPSHOT} left untouched")
+        else:
+            with open(SNAPSHOT, "w") as f:
+                json.dump(snapshot, f, indent=1, default=float)
+            print(f"snapshot written to {SNAPSHOT}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

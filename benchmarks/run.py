@@ -6,8 +6,9 @@ roofline benches + the engine A/B harness.
     REPRO_BENCH_SCALE=full   python -m benchmarks.run  # paper-sized (hours)
     PYTHONPATH=src python -m benchmarks.run --json     # + BENCH_engines.json
 
-``--json`` makes the engine bench write a ``BENCH_engines.json`` perf
-snapshot at the repo root, so successive PRs accumulate a trajectory.
+``--json`` makes the engine bench write ``BENCH_engines.json`` and the
+cascade bench ``BENCH_cascade.json`` perf snapshots at the repo root, so
+successive PRs accumulate a trajectory.
 
 The forest-roofline bench needs 512 placeholder devices, so it runs as a
 subprocess (this process keeps the single real CPU device).
@@ -26,15 +27,15 @@ from .common import SCALE
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", action="store_true",
-                    help="write the BENCH_engines.json perf snapshot")
+                    help="write the BENCH_*.json perf snapshots")
     args = ap.parse_args()
 
     t0 = time.time()
     print(f"[bench] scale={SCALE}")
 
-    from . import (bench_coldstart, bench_engines, fig1_speedup,
-                   table2_ranking, table3_quant_accuracy, table4_merging,
-                   table5_classification)
+    from . import (bench_cascade, bench_coldstart, bench_engines,
+                   fig1_speedup, table2_ranking, table3_quant_accuracy,
+                   table4_merging, table5_classification)
 
     for name, mod in [("table2_ranking", table2_ranking),
                       ("table3_quant_accuracy", table3_quant_accuracy),
@@ -51,6 +52,11 @@ def main() -> None:
     print("\n[bench] running bench_engines ...", flush=True)
     bench_engines.main(["--json"] if args.json else [])
     print(f"[bench] bench_engines done in {time.time()-t:.1f}s", flush=True)
+
+    t = time.time()
+    print("\n[bench] running bench_cascade ...", flush=True)
+    bench_cascade.main(["--json"] if args.json else [])
+    print(f"[bench] bench_cascade done in {time.time()-t:.1f}s", flush=True)
 
     # roofline (512-device dry-run) in a subprocess
     print("\n[bench] running roofline_forest (subprocess) ...", flush=True)

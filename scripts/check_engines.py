@@ -1,9 +1,20 @@
 """Dev sanity check: all registered engines vs the traversal oracle.
 
+    PYTHONPATH=src python scripts/check_engines.py             # engine matrix
+    PYTHONPATH=src python scripts/check_engines.py --cascade   # + cascade e2e
+
 The engine list comes from ``core.registry`` — a newly registered engine
 shows up here (and in the benchmarks and the agreement tests) with no
-edits to this file.
+edits to this file.  ``--cascade`` additionally exercises the staged-
+evaluation subsystem end-to-end on one engine: gate-off bit-exactness,
+a calibrated gate under the accuracy floor, and the exit-fraction
+accounting (the CI smoke path).
+
+Exit status is non-zero on any FAIL line, so CI can gate on it.
 """
+import argparse
+import sys
+
 import numpy as np
 
 from repro import core
@@ -11,32 +22,98 @@ from repro.core import registry
 from repro.data import load
 from repro.trees import RandomForest, RandomForestConfig
 
-ds = load("magic", n=2000)
-rf = RandomForest(RandomForestConfig(n_trees=24, max_leaves=32,
-                                     max_samples=512)).fit(ds.X_train, ds.y_train)
-forest = core.from_random_forest(rf)
-X = ds.X_test[:64]
-oracle = forest.predict_oracle(X)
+FAILED = []
 
-for engine in registry.engines("jax"):
-    pred = core.compile_forest(forest, engine=engine)
-    got = pred.predict(X)
-    err = np.abs(got - oracle).max()
-    print(f"{engine:12s} max_err={err:.2e} {'OK' if err < 1e-5 else 'FAIL'}")
 
-# scalar faithful QS (Algorithm 1 with early break)
-sc = core.eval_scalar_numpy(forest, X[:8])
-print(f"{'scalar-QS':12s} max_err={np.abs(sc - oracle[:8]).max():.2e}")
+def _check(label: str, err: float, tol: float) -> None:
+    ok = err < tol
+    print(f"{label:24s} max_err={err:.2e} {'OK' if ok else 'FAIL'}")
+    if not ok:
+        FAILED.append(label)
 
-# quantized
-qf = core.quantize_forest(forest, ds.X_train)
-oq = qf.predict_oracle(core.quantize_inputs(qf, X)) / core.leaf_scale(qf)
-for engine in registry.engines("jax"):
-    pred = core.compile_forest(qf, engine=engine)
-    got = pred.predict(X)
-    err = np.abs(got - oq).max()
-    print(f"q-{engine:10s} max_err={err:.2e} {'OK' if err < 1e-4 else 'FAIL'}")
 
-acc_f = (core.compile_forest(forest).predict_class(ds.X_test) == ds.y_test).mean()
-acc_q = (core.compile_forest(qf).predict_class(ds.X_test) == ds.y_test).mean()
-print(f"accuracy float={acc_f:.4f} quant={acc_q:.4f}")
+def check_engines(ds, forest, qf, X):
+    oracle = forest.predict_oracle(X)
+    for engine in registry.engines("jax"):
+        pred = core.compile_forest(forest, engine=engine)
+        _check(engine, np.abs(pred.predict(X) - oracle).max(), 1e-5)
+
+    # scalar faithful QS (Algorithm 1 with early break)
+    sc = core.eval_scalar_numpy(forest, X[:8])
+    _check("scalar-QS", np.abs(sc - oracle[:8]).max(), 1e-5)
+
+    # quantized
+    oq = qf.predict_oracle(core.quantize_inputs(qf, X)) / core.leaf_scale(qf)
+    for engine in registry.engines("jax"):
+        pred = core.compile_forest(qf, engine=engine)
+        _check(f"q-{engine}", np.abs(pred.predict(X) - oq).max(), 1e-4)
+
+    acc_f = (core.compile_forest(forest).predict_class(ds.X_test)
+             == ds.y_test).mean()
+    acc_q = (core.compile_forest(qf).predict_class(ds.X_test)
+             == ds.y_test).mean()
+    print(f"accuracy float={acc_f:.4f} quant={acc_q:.4f}")
+
+
+def check_cascade(ds, qf, X, engine="bitvector"):
+    """Cascade smoke: one engine end-to-end through the staged path."""
+    from repro.cascade import calibrate, CascadeSpec, MarginGate
+    base = core.compile_forest(qf, engine=engine)
+    stages = (max(qf.n_trees // 4, 1), qf.n_trees)
+
+    # gate disabled → bit-exact with the base engine on the quantized IR
+    off = core.compile_forest(qf, engine=engine, cascade=CascadeSpec(
+        stages=stages, policy=MarginGate(np.inf)))
+    err = float(np.abs(off.predict(X) - base.predict(X)).max())
+    _check(f"cascade-off-{engine}", err, 1e-12)
+
+    # calibrated gate: accuracy within the floor, some rows exit early
+    casc = core.compile_forest(qf, engine=engine,
+                               cascade=CascadeSpec(stages=stages))
+    n_cal = len(ds.X_test) // 2
+    cal = calibrate(casc, ds.X_test[:n_cal], ds.y_test[:n_cal],
+                    floor_pp=0.5)
+    casc.set_policy(cal.policy)
+    casc.reset_exit_stats()
+    acc_full = (base.predict_class(ds.X_test[n_cal:])
+                == ds.y_test[n_cal:]).mean()
+    acc_casc = (casc.predict_class(ds.X_test[n_cal:])
+                == ds.y_test[n_cal:]).mean()
+    fr = casc.exit_fractions
+    print(f"cascade {engine} plan: {casc.plan.describe()}")
+    print(f"cascade policy={casc.policy.tag()} "
+          f"exit_fractions={np.round(fr, 3).tolist()} "
+          f"mean_trees={casc.mean_trees_evaluated:.1f}/{qf.n_trees}")
+    print(f"cascade accuracy full={acc_full:.4f} gated={acc_casc:.4f}")
+    drop_pp = (acc_full - acc_casc) * 100.0
+    _check(f"cascade-acc-{engine}", max(drop_pp, 0.0), 1.0)
+    if abs(float(fr.sum()) - 1.0) > 1e-9:
+        print(f"cascade-exit-accounting FAIL: fractions sum to {fr.sum()}")
+        FAILED.append("cascade-exit-accounting")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--cascade", action="store_true",
+                    help="also smoke the cascade subsystem end-to-end")
+    args = ap.parse_args(argv)
+
+    ds = load("magic", n=2000)
+    rf = RandomForest(RandomForestConfig(
+        n_trees=24, max_leaves=32, max_samples=512)).fit(ds.X_train,
+                                                         ds.y_train)
+    forest = core.from_random_forest(rf)
+    qf = core.quantize_forest(forest, ds.X_train)
+    X = ds.X_test[:64]
+
+    check_engines(ds, forest, qf, X)
+    if args.cascade:
+        check_cascade(ds, qf, X)
+    if FAILED:
+        print(f"\nFAILED: {FAILED}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

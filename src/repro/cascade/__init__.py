@@ -1,0 +1,32 @@
+"""repro.cascade — confidence-gated staged ensemble evaluation.
+
+The forest is split into K tree-prefix stages compiled through the
+ordinary engine pipeline; between stages a pluggable ``GatePolicy``
+routes confident rows out early and gathers the rest into a shrinking,
+power-of-two-bucketed batch.  See docs/CASCADE.md.
+
+Typical use::
+
+    from repro import core
+    from repro.cascade import CascadeSpec, MarginGate, calibrate
+
+    pred = core.compile_forest(qforest, engine="bitmm",
+                               cascade=CascadeSpec(stages=(16, 48, 192)))
+    result = calibrate(pred, X_val, y_val, floor_pp=0.5)
+    pred.set_policy(result.policy)
+    scores = pred.predict(X)            # early-exits confident rows
+    pred.exit_fractions                 # per-stage exit accounting
+"""
+from .policy import (CalibrationResult, GatePolicy, MarginGate, ProbaGate,
+                     ScoreBoundGate, calibrate, default_policy_grid,
+                     policy_from_header, policy_to_header, simulate_gate)
+from .predictor import (CascadePredictor, CascadeSpec, default_policy,
+                        normalize_stages, tree_slice)
+
+__all__ = [
+    "GatePolicy", "MarginGate", "ProbaGate", "ScoreBoundGate",
+    "CalibrationResult", "calibrate", "default_policy_grid",
+    "simulate_gate", "policy_to_header", "policy_from_header",
+    "CascadePredictor", "CascadeSpec", "default_policy",
+    "normalize_stages", "tree_slice",
+]

@@ -61,16 +61,18 @@ def __getattr__(name):
 
 
 def compile_forest(forest: Forest, engine: str = "bitvector",
-                   backend: str = "jax", **kw):
+                   backend: str = "jax", cascade=None, **kw):
     """Build a predictor for ``forest`` via the pass pipeline.
 
     engine / backend resolve through ``core.registry`` (no dispatch ladder
     — registered engines: ``core.ENGINES``); ``**kw`` is forwarded to the
-    engine builder.  For quantization-as-a-pass or multi-device plans use
-    ``core.compile_plan`` directly.
+    engine builder.  ``cascade=CascadeSpec(...)`` lowers to confidence-
+    gated staged evaluation (``repro.cascade``, docs/CASCADE.md).  For
+    quantization-as-a-pass or multi-device plans use ``core.compile_plan``
+    directly.
     """
     return compile_plan(forest, CompilePlan(engine=engine, backend=backend,
-                                            engine_kw=kw))
+                                            cascade=cascade, engine_kw=kw))
 
 
 __all__ = [

@@ -247,19 +247,30 @@ def _quant_tag(q: QuantSpec) -> str:
 def _candidate_factories(forest: Forest, engines: tuple,
                          quant_specs: Optional[tuple],
                          layout_specs: Optional[dict],
-                         n_devices: int) -> dict[str, Callable]:
+                         n_devices: int,
+                         cascade_specs: Optional[tuple] = None
+                         ) -> dict[str, Callable]:
     """Candidate name → zero-arg predictor factory.
 
-    The candidate axis is the (engine × quantization × layout) product of
-    the pipeline's passes: plain tune names for the forest as-is,
-    ``<engine>@q<bits>`` per ``QuantSpec``, and ``<engine>@<kw=v,...>``
+    The candidate axis is the (engine × quantization × layout × cascade)
+    product of the pipeline's passes: plain tune names for the forest
+    as-is, ``<engine>@q<bits>`` per ``QuantSpec``, ``<engine>@<kw=v,...>``
     per entry of ``layout_specs[engine]`` (engine-kw overrides such as
-    bitmm's ``tree_chunk`` or gemm block sizes).  With ``n_devices > 1``
-    each candidate is wrapped tree-sharded (non-shardable engines are
-    rejected up front)."""
+    bitmm's ``tree_chunk`` or gemm block sizes), and
+    ``<engine>@cascade=16/48:<policy>`` per ``CascadeSpec`` (staged
+    evaluation, ``repro.cascade``).  Cascade tags participate in cache
+    entries the same way the ``_dev{n}`` key component does for
+    sharding: entries written before the cascade axis existed simply
+    lack the tagged timings, so a cascade sweep key-misses them and
+    re-benchmarks instead of mis-hitting.  With ``n_devices > 1`` each
+    candidate is wrapped tree-sharded (non-shardable engines are
+    rejected up front; cascade + sharding is rejected too)."""
     if quant_specs and forest.quant_scale is not None:
         raise ValueError("quant_specs sweep needs a float forest "
                          "(this one is already quantized)")
+    if cascade_specs and n_devices > 1:
+        raise ValueError("cascade_specs cannot combine with n_devices > 1 "
+                         "(staged evaluation is single-device)")
     unknown = set(layout_specs or ()) - set(engines)
     if unknown:
         # a silently ignored key would make the caller believe the cached
@@ -268,10 +279,13 @@ def _candidate_factories(forest: Forest, engines: tuple,
                          f"the requested engine set {tuple(engines)} "
                          "(use autotuner tune names, e.g. 'qs-bitmm')")
     quants: tuple = (None,) + (tuple(quant_specs) if quant_specs else ())
-    variants: list[tuple[str, Optional[QuantSpec], Optional[dict]]] = [
-        (e, q, kw)
+    cascades: tuple = (None,) + (tuple(cascade_specs) if cascade_specs
+                                 else ())
+    variants: list[tuple] = [
+        (e, q, kw, casc)
         for e in engines for q in quants
-        for kw in (None,) + tuple((layout_specs or {}).get(e, ()))]
+        for kw in (None,) + tuple((layout_specs or {}).get(e, ()))
+        for casc in cascades]
 
     qforests: dict[int, Forest] = {}   # one quantized forest per spec
 
@@ -283,7 +297,7 @@ def _candidate_factories(forest: Forest, engines: tuple,
         return qforests[id(q)]
 
     def make(name: str, q: Optional[QuantSpec],
-             kw: Optional[dict]) -> Callable:
+             kw: Optional[dict], casc) -> Callable:
         spec = registry.by_tune_name(name)
         ekw = dict(kw or {})
         if n_devices > 1:
@@ -300,32 +314,48 @@ def _candidate_factories(forest: Forest, engines: tuple,
         else:
             if spec.backend == "pallas":
                 ekw.setdefault("interpret", _interpret())
-
-            def factory():
-                return registry.build(qf(q), spec.name, spec.backend, **ekw)
+            if casc is not None:
+                def factory():
+                    from ..cascade import CascadePredictor
+                    return CascadePredictor(qf(q), casc, engine=spec.name,
+                                            backend=spec.backend,
+                                            engine_kw=ekw)
+            else:
+                def factory():
+                    return registry.build(qf(q), spec.name, spec.backend,
+                                          **ekw)
 
         return factory
 
-    def cname(e: str, q: Optional[QuantSpec], kw: Optional[dict]) -> str:
+    def cname(e: str, q: Optional[QuantSpec], kw: Optional[dict],
+              casc) -> str:
         name = e if q is None else f"{e}@{_quant_tag(q)}"
-        return name if kw is None else f"{name}@{_layout_tag(kw)}"
+        if kw is not None:
+            name = f"{name}@{_layout_tag(kw)}"
+        return name if casc is None else f"{name}@{casc.tag()}"
 
-    return {cname(e, q, kw): make(e, q, kw) for e, q, kw in variants}
+    return {cname(e, q, kw, casc): make(e, q, kw, casc)
+            for e, q, kw, casc in variants}
 
 
 def choose(forest: Forest, batch: int, *, engines=None,
            include_pallas: Optional[bool] = None,
            quant_specs: Optional[tuple] = None,
            layout_specs: Optional[dict] = None,
+           cascade_specs: Optional[tuple] = None,
            n_devices: int = 1,
            cache_path=_CACHE_DEFAULT,
            force: bool = False, repeats: int = 3,
            seed: int = 0) -> EngineChoice:
     """Pick the fastest candidate for ``forest`` at this batch-size bucket.
 
-    Candidates are (engine × quantization × layout) variants — see
-    ``_candidate_factories``; ``n_devices > 1`` tunes the tree-sharded
-    wrapper instead.  Cache hits (in-memory, then the JSON file at
+    Candidates are (engine × quantization × layout × cascade) variants —
+    see ``_candidate_factories``; ``n_devices > 1`` tunes the tree-sharded
+    wrapper instead.  Cascade candidates (``cascade_specs=``) time the
+    gated path on the synthetic benchmark batch — exit fractions on real
+    traffic depend on the data, so treat a cascade winner as a hint and
+    benchmark on representative rows when it matters.  Cache hits
+    (in-memory, then the JSON file at
     ``cache_path``) skip the sweep and only build the winning predictor.
     A cached entry counts as a hit only if its accumulated sweeps covered
     every candidate the caller asked for — the winner is then re-derived
@@ -354,7 +384,9 @@ def choose(forest: Forest, batch: int, *, engines=None,
         engines = tuple(engines)
     factories = _candidate_factories(forest, engines,
                                      tuple(quant_specs) if quant_specs
-                                     else None, layout_specs, n_devices)
+                                     else None, layout_specs, n_devices,
+                                     tuple(cascade_specs) if cascade_specs
+                                     else None)
     candidates = tuple(factories)
     if cache_path is _CACHE_DEFAULT:
         cache_path = default_cache_path()
@@ -406,6 +438,10 @@ def choose(forest: Forest, batch: int, *, engines=None,
     # partial-coverage miss: cached timings fill in the engines we skipped
     timings = {e: fresh.get(e, cached.get(e)) for e in candidates}
     winner = min(timings, key=timings.get)
+    if best_pred is not None:
+        # cascade predictors count per-stage exits cumulatively; the
+        # benchmark rows must not pollute the served exit accounting
+        getattr(best_pred, "reset_exit_stats", lambda: None)()
     # the stored engine must be the winner over the entry's own timings
     # (merges re-derive it over the union; lookups re-derive per request)
     entry = {"engine": min(fresh, key=fresh.get), "timings": fresh}

@@ -52,6 +52,7 @@ class CompilePlan:
     backend: str = "jax"
     quant: Optional[QuantSpec] = None     # None → keep the forest's dtypes
     n_devices: int = 1
+    cascade: Optional[object] = None      # cascade.CascadeSpec → staged eval
     engine_kw: dict = field(default_factory=dict)
     records: list = field(default_factory=list)
 
@@ -160,8 +161,26 @@ def layout(forest: Forest, plan: CompilePlan, ctx: dict) -> Forest:
 
 @forest_pass("lower")
 def lower(forest: Forest, plan: CompilePlan, ctx: dict):
-    """Resolve the engine through the registry and build the predictor."""
+    """Resolve the engine through the registry and build the predictor.
+
+    With ``plan.cascade`` set, the forest is partitioned into tree-prefix
+    stages and each stage lowers through the same engine builder; the
+    cascade is recorded as its own plan stage (docs/CASCADE.md)."""
     spec = registry.get(plan.engine, plan.backend)
+    if plan.cascade is not None:
+        if plan.n_devices > 1:
+            raise ValueError(
+                "cascade + tree-sharded execution is not supported "
+                f"(n_devices={plan.n_devices}); pick one")
+        from ..cascade import CascadePredictor
+        pred = CascadePredictor(forest, plan.cascade, engine=plan.engine,
+                                backend=plan.backend,
+                                engine_kw=plan.engine_kw)
+        plan.record("cascade", pred.describe())
+        plan.record("lower", f"{spec.tune_name} × {len(pred.stages)} "
+                             "cascade stages")
+        pred.plan = plan
+        return pred
     if plan.n_devices > 1:
         if plan.backend != "jax":
             raise ValueError(

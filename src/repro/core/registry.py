@@ -86,6 +86,16 @@ def normalize_scores(scores: np.ndarray,
     return z / z.sum(axis=1, keepdims=True)
 
 
+def votes_mode(forest) -> bool:
+    """Whether a forest's class scores are vote mass (RF averaging, all
+    leaves >= 0 → sum-normalize) or logits (boosting → softmax).  The
+    single source of this inference: ``predict_proba`` here and the
+    cascade gate confidences (``repro.cascade.policy``) both use it, so
+    served probabilities and gate decisions can never normalize
+    differently."""
+    return bool((np.asarray(forest.leaf_value) >= 0).all())
+
+
 def ensure_feature_column(X: np.ndarray) -> np.ndarray:
     """0-feature ensembles (every tree a single leaf) hand engines a
     (B, 0) input, but all engines gather feature column 0 unconditionally
@@ -112,9 +122,15 @@ class BasePredictor:
         X = np.asarray(X)
         return t(X) if t is not None else X
 
-    def predict(self, X: np.ndarray) -> np.ndarray:
-        Xq = ensure_feature_column(self.transform_inputs(X))
+    def predict_transformed(self, Xq: np.ndarray) -> np.ndarray:
+        """Evaluate inputs that already went through ``transform_inputs``
+        — the cascade's per-stage entry point, so a K-stage cascade
+        quantizes each row once instead of once per surviving stage."""
+        Xq = ensure_feature_column(np.asarray(Xq))
         return np.asarray(self._fn(jnp.asarray(Xq)))
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        return self.predict_transformed(self.transform_inputs(X))
 
     def predict_class(self, X: np.ndarray) -> np.ndarray:
         return self.predict(X).argmax(axis=1)
@@ -134,8 +150,7 @@ class BasePredictor:
         # leaves (all >= 0) sum-normalize, logit leaves softmax — decided
         # from the leaf table so results never depend on batch composition
         forest = self.host_forest()
-        votes = None if forest is None \
-            else bool((np.asarray(forest.leaf_value) >= 0).all())
+        votes = None if forest is None else votes_mode(forest)
         return normalize_scores(self.predict(X), votes=votes)
 
 

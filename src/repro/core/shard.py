@@ -149,10 +149,13 @@ class ShardedPredictor(BasePredictor):
     def transform_inputs(self, X: np.ndarray) -> np.ndarray:
         return quantize_inputs(self.forest, np.asarray(X))
 
-    def predict(self, X: np.ndarray) -> np.ndarray:
-        Xq = ensure_feature_column(self.transform_inputs(X))
+    def predict_transformed(self, Xq: np.ndarray) -> np.ndarray:
+        Xq = ensure_feature_column(np.asarray(Xq))
         return np.asarray(self._fn(self._sharded, self._repl,
                                    jnp.asarray(Xq)))
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        return self.predict_transformed(self.transform_inputs(X))
 
 
 def tree_sharded(forest: Forest, engine: str = "bitvector", *,

@@ -50,6 +50,9 @@ class ServerStats:
     n_batches: int = 0
     batch_sizes: list = field(default_factory=list)
     latencies_ms: list = field(default_factory=list)
+    # cascade serving: cumulative per-stage exit counts (empty unless the
+    # predictor reports them — see ForestServer._run / docs/CASCADE.md)
+    stage_exit_counts: list = field(default_factory=list)
 
     def record_batch(self, reqs: list[Request]) -> None:
         if not reqs:                   # zero-request batch: stats unchanged
@@ -60,17 +63,38 @@ class ServerStats:
         self.latencies_ms.extend(
             r.latency_ms for r in reqs if r.latency_ms is not None)
 
+    def record_exits(self, counts) -> None:
+        """Accumulate a cascade predictor's per-stage exit counts for the
+        batch just served (``counts`` is its ``last_exit_counts``)."""
+        if counts is None:
+            return
+        counts = [int(c) for c in counts]
+        if len(self.stage_exit_counts) < len(counts):
+            self.stage_exit_counts.extend(
+                [0] * (len(counts) - len(self.stage_exit_counts)))
+        for i, c in enumerate(counts):
+            self.stage_exit_counts[i] += c
+
     def summary(self) -> dict:
-        lat = np.asarray(self.latencies_ms) if self.latencies_ms else \
-            np.zeros(1)
-        return {
+        # no completed request → no latency distribution: report null,
+        # not the 0.0 percentiles of a zeros(1) placeholder (a dashboard
+        # reading p99=0.0 would conclude the server is infinitely fast)
+        lat = np.asarray(self.latencies_ms) if self.latencies_ms else None
+        out = {
             "n_requests": self.n_requests,
             "n_batches": self.n_batches,
             "mean_batch": float(np.mean(self.batch_sizes))
             if self.batch_sizes else 0.0,
-            "p50_ms": float(np.percentile(lat, 50)),
-            "p99_ms": float(np.percentile(lat, 99)),
+            "p50_ms": float(np.percentile(lat, 50)) if lat is not None
+            else None,
+            "p99_ms": float(np.percentile(lat, 99)) if lat is not None
+            else None,
         }
+        if self.stage_exit_counts:
+            tot = sum(self.stage_exit_counts)
+            out["exit_fractions"] = [c / max(tot, 1)
+                                     for c in self.stage_exit_counts]
+        return out
 
 
 # --------------------------------------------------------------------------- #
@@ -133,8 +157,12 @@ class ForestServer:
         ``n_devices > 1`` serves the winner tree-sharded across the device
         mesh (``core.shard``); the autotune cache key includes the device
         count, so single- and multi-device decisions never alias.
-        ``cache_path=None`` disables the disk layer (as in ``choose``);
-        omitting it uses the default cache file."""
+        ``cascade_specs=`` (forwarded to ``choose``) adds confidence-gated
+        staged candidates — a cascade winner serves through the same
+        micro-batcher, with per-stage exit fractions reported in
+        ``ServerStats.summary()``.  ``cache_path=None`` disables the disk
+        layer (as in ``choose``); omitting it uses the default cache
+        file."""
         from ..core import engine_select
         kw = dict(choose_kw)
         if cache_path is not cls._CACHE_UNSET:
@@ -152,7 +180,8 @@ class ForestServer:
         skips both the autotune sweep and recompilation.  The predictor
         must come from a serializable engine (``EngineSpec.serial_arrays``
         — tree-sharded and Pallas predictors are not; keep the forest and
-        rebuild those)."""
+        rebuild those).  Cascade predictors persist as kind=cascade
+        artifacts: every stage's arrays plus the gate thresholds."""
         from .. import io
         # engine_choice is an EngineChoice after from_forest() but a bare
         # name string after load() — persist the name through both, so a
@@ -220,6 +249,11 @@ class ForestServer:
             r.result = s
             r.done_s = done_s
         self.stats.record_batch(reqs)
+        # cascade predictors report which stage each row exited at; the
+        # stats aggregate them so ServerStats.summary() can show the
+        # per-stage exit fractions of the served traffic
+        self.stats.record_exits(getattr(self.predictor,
+                                        "last_exit_counts", None))
         return reqs
 
 

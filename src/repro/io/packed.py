@@ -250,11 +250,14 @@ def _walk_compiled(compiled, serial_arrays: tuple):
 
 
 def _rebuild_compiled(classes: dict, scalars: dict, npz,
-                      forest: Optional[Forest]):
+                      forest: Optional[Forest], array_prefix: str = "c."):
     """Inverse of ``_walk_compiled``: instantiate nested dataclasses
-    bottom-up from header metadata + npz arrays."""
+    bottom-up from header metadata + npz arrays.  ``array_prefix``
+    namespaces the npz entries (``c.`` for plain predictors, ``s{k}.c.``
+    per stage of a cascade artifact)."""
     import jax.numpy as jnp
-    array_names = [n[2:] for n in npz.files if n.startswith("c.")]
+    array_names = [n[len(array_prefix):] for n in npz.files
+                   if n.startswith(array_prefix)]
     built = {}
     # nested prefixes first (deepest innermost), the root ("") last
     order = sorted((p for p in classes if p),
@@ -266,7 +269,7 @@ def _rebuild_compiled(classes: dict, scalars: dict, npz,
         for f in dataclasses.fields(cls):
             dotted = f"{prefix}.{f.name}" if prefix else f.name
             if dotted in array_names:
-                kw[f.name] = jnp.asarray(npz["c." + dotted])
+                kw[f.name] = jnp.asarray(npz[array_prefix + dotted])
             elif f.name == "forest":
                 kw[f.name] = forest
             elif dotted in built:
@@ -296,15 +299,96 @@ def _spec_for_predictor(pred):
         "are rebuilt from the forest, not serialized — save the forest)")
 
 
+def _save_cascade(pred, path: PathLike, extra: Optional[dict]) -> None:
+    """Serialize a ``CascadePredictor`` (kind=cascade): each stage's
+    compiled device arrays (the engine's ``serial_arrays``, namespaced
+    ``s{k}.c.``), the full forest once, and the gate policy's scalar
+    config — so a load rebuilds the whole cascade, thresholds included,
+    without recompiling any stage."""
+    from ..cascade.policy import policy_to_header
+    from ..core import registry
+    spec = registry.get(pred.engine, pred.backend)
+    if not spec.serial_arrays:
+        raise ValueError(
+            f"engine {pred.engine}/{pred.backend} declares no "
+            "serial_arrays — its cascade artifact is not serializable "
+            "(save the forest and rebuild)")
+    arrays, stage_classes, stage_scalars = {}, [], []
+    for k, sp in enumerate(pred.stage_predictors):
+        classes, scalars, carrays = _walk_compiled(sp.compiled,
+                                                   spec.serial_arrays)
+        arrays.update({f"s{k}.c.{n}": v for n, v in carrays.items()})
+        stage_classes.append(classes)
+        stage_scalars.append(scalars)
+    fmeta, farrays = _pack_forest(pred.forest, prefix="f.")
+    arrays.update(farrays)
+    plan = getattr(pred, "plan", None)
+    header = {
+        "kind": "cascade",
+        "engine": pred.engine, "backend": pred.backend,
+        "tune_name": spec.tune_name,
+        "stages": [int(s) for s in pred.stages],
+        "policy": policy_to_header(pred.policy),
+        "engine_kw": {k: _encode_scalar(v)
+                      for k, v in pred.engine_kw.items()},
+        "stage_classes": stage_classes, "stage_scalars": stage_scalars,
+        "forest": fmeta,
+        "plan": [[r.name, r.detail] for r in plan.records]
+        if plan is not None else [],
+    }
+    if extra:
+        header.update(extra)
+    _write_npz(path, header, arrays)
+
+
+def _load_cascade(header: dict, npz, path: PathLike):
+    """Rebuild a cascade artifact: unpack the forest once, rebuild each
+    stage's compiled arrays against its tree-slice of the IR, restore the
+    gate policy from its header config — predictions are bit-identical to
+    the saved cascade's (same stage arrays, same thresholds)."""
+    from ..cascade import CascadePredictor, CascadeSpec, tree_slice
+    from ..cascade.policy import policy_from_header
+    from ..core import registry
+    from ..core.pipeline import CompilePlan
+    spec = registry.get(header["engine"], header["backend"])
+    forest = _unpack_forest(header["forest"], npz, prefix="f.")
+    stages = [int(s) for s in header["stages"]]
+    bounds = [0] + stages
+    stage_preds = []
+    for k, (classes, scalars) in enumerate(zip(header["stage_classes"],
+                                               header["stage_scalars"])):
+        sub = tree_slice(forest, bounds[k], bounds[k + 1])
+        compiled = _rebuild_compiled(classes, scalars, npz, sub,
+                                     array_prefix=f"s{k}.c.")
+        stage_preds.append(spec.predictor_cls(compiled, spec.evaluate))
+    policy = policy_from_header(header["policy"])
+    engine_kw = {k: _decode_scalar(v)
+                 for k, v in (header.get("engine_kw") or {}).items()}
+    pred = CascadePredictor(
+        forest, CascadeSpec(stages=tuple(stages), policy=policy),
+        engine=header["engine"], backend=header["backend"],
+        engine_kw=engine_kw, stage_predictors=stage_preds)
+    plan = CompilePlan(engine=header["engine"], backend=header["backend"])
+    for name, detail in header.get("plan", []):
+        plan.record(name, detail)
+    plan.record("deserialize", f"loaded from {os.fspath(path)}")
+    pred.plan = plan
+    return pred
+
+
 def save_predictor(pred, path: PathLike, *, extra: Optional[dict] = None
                    ) -> None:
-    """Serialize a compiled predictor (kind=predictor).
+    """Serialize a compiled predictor (kind=predictor), or a
+    ``CascadePredictor`` (kind=cascade — per-stage arrays + gate config).
 
     The engine must declare its device arrays via
     ``EngineSpec.serial_arrays``; the embedded forest, scalar config, and
     recorded ``CompilePlan`` ride in the header.  ``extra`` merges
     caller metadata (e.g. the serving config) into the header.
     """
+    from ..cascade.predictor import CascadePredictor
+    if isinstance(pred, CascadePredictor):
+        return _save_cascade(pred, path, extra)
     spec = _spec_for_predictor(pred)
     if not spec.serial_arrays:
         raise ValueError(f"engine {spec.name}/{spec.backend} declares no "
@@ -344,6 +428,9 @@ def load_predictor(pred_or_path: PathLike, *, return_header: bool = False):
     from ..core.pipeline import CompilePlan
     path = pred_or_path
     header, npz = _read_npz(path)
+    if header.get("kind") == "cascade":
+        pred = _load_cascade(header, npz, path)
+        return (pred, header) if return_header else pred
     if header.get("kind") != "predictor":
         raise ValueError(f"{path!r} holds a {header.get('kind')!r} "
                          "artifact, not a predictor (use load_forest)")

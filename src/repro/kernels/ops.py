@@ -55,14 +55,19 @@ class _PallasPredictor(BasePredictor):
         return quantize_inputs(self.forest,
                                np.asarray(X)).astype(np.float32)
 
-    def predict(self, X: np.ndarray) -> np.ndarray:
-        Xq = ensure_feature_column(self.transform_inputs(X))
+    def predict_transformed(self, Xq: np.ndarray) -> np.ndarray:
+        # kernels take f32 rows; coerce here so cascade stages can feed
+        # the shared pre-quantized (int) matrix without a per-stage cast
+        Xq = ensure_feature_column(np.asarray(Xq, dtype=np.float32))
         B = Xq.shape[0]
         bucket = bucket_rows(B, self.block_b)
         self._buckets.add(bucket)
         Xp = _pad_to(Xq, 0, bucket)
         out = np.asarray(self._fn(jnp.asarray(Xp)))
         return out[:B] / self.leaf_scale
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        return self.predict_transformed(self.transform_inputs(X))
 
     @property
     def n_compiles(self) -> int:

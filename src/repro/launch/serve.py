@@ -26,6 +26,21 @@ from ..models.model import Model
 from ..trees.random_forest import RandomForest, RandomForestConfig
 
 
+def _cascade_spec(args):
+    """--cascade "16,64" [--cascade-policy margin|proba|bound
+    --cascade-threshold t] → CascadeSpec (None when --cascade unset)."""
+    if not args.cascade:
+        return None
+    from ..cascade import CascadeSpec, MarginGate, ProbaGate, ScoreBoundGate
+    stages = tuple(int(s) for s in args.cascade.split(","))
+    t = args.cascade_threshold
+    policy = {"margin": lambda: MarginGate(t if t is not None else 0.9),
+              "proba": lambda: ProbaGate(t if t is not None else 0.95),
+              "bound": lambda: ScoreBoundGate(t if t is not None else 0.0),
+              }[args.cascade_policy]()
+    return CascadeSpec(stages=stages, policy=policy)
+
+
 def serve_forest(args) -> dict:
     ds = datasets.load(args.dataset)
     rf = RandomForest(RandomForestConfig(
@@ -35,7 +50,8 @@ def serve_forest(args) -> dict:
     if args.quantize:
         forest = core.quantize_forest(forest, ds.X_train)
     pred = core.compile_forest(forest, engine=args.engine,
-                               backend=args.backend)
+                               backend=args.backend,
+                               cascade=_cascade_spec(args))
 
     server = ForestServer(pred, max_batch=args.max_batch,
                           max_wait_ms=args.max_wait_ms)
@@ -64,6 +80,9 @@ def serve_forest(args) -> dict:
                 "quantized": bool(args.quantize),
                 "accuracy": correct / max(done, 1),
                 "wall_s": round(time.time() - t_start, 2)})
+    if args.cascade:
+        out["cascade"] = pred.describe()
+        out["mean_trees_evaluated"] = pred.mean_trees_evaluated
     return out
 
 
@@ -95,6 +114,14 @@ def main() -> None:
                     choices=list(core.ENGINES))
     ap.add_argument("--backend", default="jax", choices=["jax", "pallas"])
     ap.add_argument("--quantize", action="store_true")
+    ap.add_argument("--cascade", type=str, default=None,
+                    help="comma-separated stage boundaries (tree prefixes),"
+                         " e.g. '16,64' — serve a confidence-gated cascade")
+    ap.add_argument("--cascade-policy", default="margin",
+                    choices=["margin", "proba", "bound"])
+    ap.add_argument("--cascade-threshold", type=float, default=None,
+                    help="gate threshold (margin/proba) or slack (bound); "
+                         "default per policy")
     ap.add_argument("--n-trees", type=int, default=128)
     ap.add_argument("--n-leaves", type=int, default=32)
     ap.add_argument("--n-requests", type=int, default=1000)

@@ -281,6 +281,91 @@ def test_import_compile_save_load_differential(tmp_path):
 
 
 # --------------------------------------------------------------------------- #
+# cascade conformance: a cascade whose gate never fires computes the same
+# function as the underlying engine (docs/CASCADE.md)
+# --------------------------------------------------------------------------- #
+from repro.cascade import CascadePredictor, CascadeSpec, MarginGate, \
+    ScoreBoundGate
+
+CASCADE_CASES = ["mixed_stump_and_deep", "multiclass_stumps",
+                 "unused_features"]
+
+
+def _mid_stages(forest):
+    """A genuine 2-stage split when the forest allows one."""
+    return (max(forest.n_trees // 2, 1), forest.n_trees)
+
+
+@pytest.mark.parametrize("name,backend", COMBOS, ids=COMBO_IDS)
+@pytest.mark.parametrize("case", CASCADE_CASES)
+def test_cascade_single_stage_is_the_engine(case, name, backend):
+    """One stage == the plain engine call: bit-exact for every registered
+    engine/backend, float included (same program, same bits)."""
+    forest = ADVERSARIAL[case]()
+    X = _X(forest, B=12, seed=13)
+    base = _compile(forest, name, backend)
+    kw = {"interpret": True} if backend == "pallas" else {}
+    casc = CascadePredictor(forest, CascadeSpec((forest.n_trees,)),
+                            engine=name, backend=backend, engine_kw=kw)
+    np.testing.assert_array_equal(casc.predict(X), base.predict(X),
+                                  err_msg=f"{case}/{name}/{backend}")
+
+
+@pytest.mark.parametrize("engine", JAX_ENGINES)
+@pytest.mark.parametrize("case", QUANTIZABLE)
+def test_cascade_gate_off_quantized_bitexact(case, engine):
+    """Multi-stage, gate disabled (threshold=inf): integer stage sums
+    under a pow2 leaf scale reassociate exactly — bit-exact with the
+    base engine on quantized forests for every registered XLA engine."""
+    forest = ADVERSARIAL[case]()
+    X = _X(forest, B=12, seed=14)
+    qf = core.quantize_forest(forest, X)
+    base = _compile(qf, engine, "jax")
+    casc = CascadePredictor(qf, CascadeSpec(_mid_stages(qf),
+                                            MarginGate(np.inf)),
+                            engine=engine)
+    np.testing.assert_array_equal(casc.predict(X), base.predict(X),
+                                  err_msg=f"{case}/{engine}")
+
+
+@pytest.mark.parametrize("engine", JAX_ENGINES)
+@pytest.mark.parametrize("case", sorted(ADVERSARIAL))
+def test_cascade_gate_off_float_agrees(case, engine):
+    """Float forests: stage-split reassociation moves the sum order, so
+    the gate-off cascade matches within float tolerance (and matches the
+    oracle like any engine)."""
+    forest = ADVERSARIAL[case]()
+    X = _X(forest, B=12, seed=15)
+    base = _compile(forest, engine, "jax")
+    casc = CascadePredictor(forest, CascadeSpec(_mid_stages(forest),
+                                                MarginGate(np.inf)),
+                            engine=engine)
+    np.testing.assert_allclose(casc.predict(X), base.predict(X),
+                               rtol=1e-5, atol=1e-6,
+                               err_msg=f"{case}/{engine}")
+
+
+@pytest.mark.parametrize("engine", JAX_ENGINES)
+@pytest.mark.parametrize("case", QUANTIZABLE)
+def test_cascade_roundtrip_bitexact(case, engine, tmp_path):
+    """compile → save → load → predict is bit-identical for cascade
+    artifacts on quantized forests, thresholds included."""
+    forest = ADVERSARIAL[case]()
+    X = _X(forest, B=10, seed=16)
+    qf = core.quantize_forest(forest, X)
+    casc = CascadePredictor(qf, CascadeSpec(_mid_stages(qf),
+                                            MarginGate(np.inf)),
+                            engine=engine)
+    p = str(tmp_path / "casc.repro.npz")
+    io.save_predictor(casc, p)
+    loaded = io.load_predictor(p)
+    assert loaded.stages == casc.stages
+    assert loaded.policy == casc.policy
+    np.testing.assert_array_equal(casc.predict(X), loaded.predict(X),
+                                  err_msg=f"{case}/{engine}")
+
+
+# --------------------------------------------------------------------------- #
 # hypothesis: randomized adversarial forests (CI; skipped offline)
 # --------------------------------------------------------------------------- #
 if HAVE_HYPOTHESIS:
@@ -354,6 +439,36 @@ if HAVE_HYPOTHESIS:
         for e, y in got.items():
             np.testing.assert_allclose(np.asarray(y), expect, rtol=1e-4,
                                        atol=1e-5, err_msg=e)
+
+    @st.composite
+    def stage_splits(draw, max_trees=12):
+        """Random cascade stage boundaries: 1..4 strictly increasing
+        prefixes over a random tree count (the last may or may not cover
+        the forest — normalize_stages must append/clamp either way)."""
+        T = draw(st.integers(2, max_trees))
+        ks = draw(st.lists(st.integers(1, T + 3), min_size=1, max_size=4,
+                           unique=True))
+        return T, tuple(sorted(ks))
+
+    @settings(max_examples=20, deadline=None)
+    @given(stage_splits(), st.integers(1, 16), st.integers(0, 9999))
+    def test_hypothesis_cascade_gate_off_quantized_bitexact(split, B,
+                                                            xseed):
+        """Any stage split, gate disabled → bit-exact with the base
+        engine on quantized forests; with the sound bound gate →
+        predict_class exactly equal."""
+        T, ks = split
+        forest = core.random_forest_ir(T, 8, 4, n_classes=2,
+                                       seed=xseed % 97, full=False)
+        X = np.random.default_rng(xseed).normal(0, 2.0, size=(B, 4))
+        qf = core.quantize_forest(forest, X)
+        base = core.compile_forest(qf, engine="bitvector")
+        off = CascadePredictor(qf, CascadeSpec(ks, MarginGate(np.inf)))
+        assert off.stages[-1] == T
+        np.testing.assert_array_equal(off.predict(X), base.predict(X))
+        sound = CascadePredictor(qf, CascadeSpec(ks, ScoreBoundGate()))
+        np.testing.assert_array_equal(sound.predict_class(X),
+                                      base.predict_class(X))
 
     @settings(max_examples=12, deadline=None)
     @given(adversarial_forests(), st.integers(0, 9999))

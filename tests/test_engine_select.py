@@ -220,6 +220,112 @@ def test_pallas_batch_bucketing_bounds_recompiles(small_forest):
 
 
 # --------------------------------------------------------------------------- #
+# cascade candidates: naming, winner wiring, and cache hygiene — cascade
+# tags participate in cache entries like the _dev{n} key component does:
+# entries from before the cascade axis existed must key-miss and re-sweep
+# --------------------------------------------------------------------------- #
+def _cascade_spec(threshold=0.9):
+    from repro.cascade import CascadeSpec, MarginGate
+    return CascadeSpec(stages=(4, 8), policy=MarginGate(threshold))
+
+
+def test_cascade_candidates_swept_and_usable(small_forest):
+    from repro.cascade import CascadePredictor
+    spec = _cascade_spec()
+    c = engine_select.choose(small_forest, 16, engines=("qs",),
+                             cascade_specs=(spec,), cache_path=None,
+                             repeats=1)
+    assert set(c.timings) == {"qs", f"qs@{spec.tag()}"}
+    assert "cascade=4/8:margin0.9" in spec.tag()
+    # the winning predictor is buildable and correct either way
+    from conftest import rand_X
+    X = rand_X(small_forest, B=16)
+    np.testing.assert_allclose(c.predict(X),
+                               small_forest.predict_oracle(X),
+                               rtol=1e-4, atol=1e-5)
+    if "cascade" in c.engine:
+        assert isinstance(c.predictor, CascadePredictor)
+
+
+def test_old_cache_entries_keymiss_cascade_sweeps(small_forest, tmp_path):
+    """An entry written before the cascade axis existed (plain engine
+    timings only) must not answer a cascade sweep — partial miss, only
+    the cascade candidates are benchmarked, coverage merges."""
+    cache = str(tmp_path / "engines.json")
+    plain = engine_select.choose(small_forest, 16, engines=("qs", "native"),
+                                 cache_path=cache, repeats=1)
+    # simulate a fresh process with only the old-format disk entry
+    engine_select.clear_cache()
+    spec = _cascade_spec()
+    c = engine_select.choose(small_forest, 16, engines=("qs", "native"),
+                             cascade_specs=(spec,), cache_path=cache,
+                             repeats=1)
+    assert not c.from_cache
+    # the plain timings were reused verbatim, not re-benchmarked
+    assert c.timings["qs"] == plain.timings["qs"]
+    assert set(c.timings) == {"qs", "native", f"qs@{spec.tag()}",
+                              f"native@{spec.tag()}"}
+    # the widened entry now answers both shapes of request
+    hit = engine_select.choose(small_forest, 16, engines=("qs", "native"),
+                               cascade_specs=(spec,), cache_path=cache,
+                               repeats=1)
+    assert hit.from_cache
+    plain_hit = engine_select.choose(small_forest, 16,
+                                     engines=("qs", "native"),
+                                     cache_path=cache, repeats=1)
+    assert plain_hit.from_cache
+
+
+def test_distinct_cascade_specs_never_alias(small_forest, tmp_path):
+    """Different stages or thresholds → different candidate names: a
+    sweep for one spec must not answer for another."""
+    cache = str(tmp_path / "engines.json")
+    engine_select.choose(small_forest, 16, engines=("qs",),
+                         cascade_specs=(_cascade_spec(0.9),),
+                         cache_path=cache, repeats=1)
+    other = engine_select.choose(small_forest, 16, engines=("qs",),
+                                 cascade_specs=(_cascade_spec(0.5),),
+                                 cache_path=cache, repeats=1)
+    assert not other.from_cache
+    from repro.cascade import CascadeSpec, MarginGate
+    stages = engine_select.choose(
+        small_forest, 16, engines=("qs",),
+        cascade_specs=(CascadeSpec((2, 8), MarginGate(0.9)),),
+        cache_path=cache, repeats=1)
+    assert not stages.from_cache
+
+
+def test_cascade_specs_reject_multi_device(small_forest):
+    with pytest.raises(ValueError, match="cascade"):
+        engine_select.choose(small_forest, 16, engines=("qs",),
+                             cascade_specs=(_cascade_spec(),),
+                             n_devices=2, cache_path=None, repeats=1)
+
+
+def test_forest_server_serves_cascade_winner(small_forest, tmp_path):
+    """from_forest(cascade_specs=) serves whatever wins; when the winner
+    is a cascade, exit fractions land in the serving stats."""
+    from repro.cascade import CascadePredictor, CascadeSpec, MarginGate
+    # a gate this aggressive on an 8-tree forest makes the cascade the
+    # plausible winner, but the assertion holds either way
+    spec = CascadeSpec(stages=(2, 8), policy=MarginGate(0.0))
+    srv = ForestServer.from_forest(small_forest, max_batch=8,
+                                   engines=("qs",), cascade_specs=(spec,),
+                                   cache_path=str(tmp_path / "c.json"),
+                                   repeats=1)
+    assert srv.engine_choice.engine in {"qs", f"qs@{spec.tag()}"}
+    rng = np.random.default_rng(0)
+    for i in range(8):
+        srv.submit(rng.normal(size=small_forest.n_features),
+                   arrival_s=float(i) * 1e-4)
+    srv.flush(now_s=1.0)
+    s = srv.stats.summary()
+    assert s["n_requests"] == 8
+    if isinstance(srv.predictor, CascadePredictor):
+        assert "exit_fractions" in s
+
+
+# --------------------------------------------------------------------------- #
 # cache-file robustness: garbage on disk must mean re-sweep, never a crash
 # --------------------------------------------------------------------------- #
 @pytest.mark.parametrize("garbage", [

@@ -1,0 +1,180 @@
+"""Optimizer middle-end A/B harness: what does -O2 buy per engine?
+
+    PYTHONPATH=src python -m benchmarks.bench_optim            # table
+    PYTHONPATH=src python -m benchmarks.bench_optim --json     # + snapshot
+
+For each workload (trained forests on real datasets + one synthetic
+random-structure forest, quantized like the serving path), the bench
+reports:
+
+  * per-pass node / unique-threshold / L / d reduction at ``-O2``
+    (``repro.optim`` PassStats — the structural effect, docs/OPTIM.md);
+  * per-engine wall-clock at ``-O0`` vs ``-O2`` on the same batch and
+    the resulting speedup ratio (the runtime effect).
+
+``--json`` writes ``BENCH_optim.json`` at the repo root (a perf
+trajectory for future PRs) plus the raw records under
+``experiments/bench/``.  Honest-measurement note: trained CART forests
+contain no dominated splits by construction, so their -O2 win comes
+from threshold canonicalization, padding shrink, and unused-feature
+drops; the synthetic random-structure forest shows the dominated-split
+collapse at full strength.  Engines are the registry's XLA set
+(``engine_select.default_engines``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro import core, optim
+from repro.core import engine_select
+from repro.core.pipeline import CompilePlan, compile_plan
+
+from .common import SCALE, Table, save_json, scale_pick, time_predict, \
+    us_per_instance
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SNAPSHOT = os.path.join(REPO_ROOT, "BENCH_optim.json")
+
+
+def workloads():
+    """(name, forest, X_calib, batch) per scale.  Forests arrive already
+    quantized — the optimizer's collapse claims are about the fixed-point
+    grid (paper Table 4), and quantized is the serving configuration."""
+    from repro.data import datasets
+    from repro.trees.random_forest import RandomForest, RandomForestConfig
+
+    configs = scale_pick(
+        [("magic", 32, 32, 1000, 256, 16)],
+        [("magic", 64, 32, 2000, 256, 16),
+         ("magic@q8", 64, 32, 2000, 256, 8),
+         ("mnist", 64, 32, 2000, 256, 16)],
+        [("magic", 256, 64, 8000, 1024, 16),
+         ("magic@q8", 256, 64, 8000, 1024, 8),
+         ("mnist", 256, 64, 8000, 1024, 16),
+         ("eeg", 256, 64, 8000, 1024, 16)],
+    )
+    out = []
+    for name, T, L, n, B, bits in configs:
+        ds = datasets.load(name.split("@")[0], n=n)
+        rf = RandomForest(RandomForestConfig(
+            n_trees=T, max_leaves=L, seed=0)).fit(ds.X_train, ds.y_train)
+        forest = core.from_random_forest(rf)
+        # 8-bit variants are where the paper's threshold collapse (and so
+        # dedup_thresholds / merge_equivalent_leaves) bites on *trained*
+        # forests; at 16 bits trained splits rarely land on one grid point
+        qf = core.quantize_forest(forest, ds.X_train,
+                                  core.QuantSpec(bits=bits))
+        out.append((name, qf, ds.X_train, B))
+    # synthetic random-structure forest: dominated splits exist here (a
+    # random tree re-splits features arbitrarily along a path), so the
+    # structural passes show their full-strength effect
+    T, L, d, B = scale_pick((64, 32, 32, 256), (128, 32, 32, 256),
+                            (512, 64, 64, 1024))
+    synth = core.quantize_forest(core.random_forest_ir(T, L, d, seed=7),
+                                 None)
+    out.append(("synthetic", synth, None, B))
+    return out
+
+
+def run(repeats: int = 5, opt_level=2):
+    """Non-default scales get scale-suffixed artifacts (and leave the
+    repo-root snapshot untouched, see ``main``): a quick-scale run must
+    never replace the canonical default-scale perf trajectory (the PR-1
+    artifact-consistency rule, same guard as ``bench_cascade``)."""
+    suffix = "" if SCALE == "default" else f"_{SCALE}"
+    engines = engine_select.default_engines()
+    t = Table(f"bench_optim{suffix}",
+              ["workload", "engine", "O0_us", f"O{opt_level}_us",
+               "speedup", "nodes", "thr", "L", "d"])
+    records = []
+    for name, qf, X_calib, B in workloads():
+        res = optim.optimize(qf, opt_level,
+                             ctx={"X_calib": X_calib}, verify=True)
+        b = res.stats[0].before
+        a = res.stats[-1].after
+        print(f"\n[{name}] {res.describe()}")
+        for s in res.stats:
+            print(f"  {s.name:24s} {s.detail()}")
+        rng = np.random.default_rng(0)
+        X = rng.normal(0, 1.0, size=(B, qf.n_features_in))
+        eng_rec = {}
+        for e in engines:
+            spec = core.registry.by_tune_name(e)
+            us = {}
+            for lvl in (None, opt_level):
+                pred = compile_plan(qf, CompilePlan(
+                    engine=spec.name, backend=spec.backend, opt=lvl))
+                us[lvl] = us_per_instance(
+                    time_predict(lambda: pred.predict(X),
+                                 repeats=repeats), B)
+            ratio = us[None] / us[opt_level]
+            t.add(name, e, f"{us[None]:.1f}", f"{us[opt_level]:.1f}",
+                  f"{ratio:.2f}x",
+                  f"{b.n_nodes}→{a.n_nodes}",
+                  f"{b.n_unique_splits}→{a.n_unique_splits}",
+                  f"{b.n_leaves}→{a.n_leaves}",
+                  f"{b.n_features}→{a.n_features}")
+            eng_rec[e] = {"o0_us": us[None], "opt_us": us[opt_level],
+                          "speedup": ratio}
+        records.append({
+            "workload": name,
+            "shape": {"trees": b.n_trees, "leaves": b.n_leaves,
+                      "features": b.n_features, "batch": B},
+            "opt_level": opt_level,
+            "verified": res.verified,
+            "passes": [{"name": s.name,
+                        "nodes": [s.before.n_nodes, s.after.n_nodes],
+                        "unique_thresholds": [s.before.n_unique_splits,
+                                              s.after.n_unique_splits],
+                        "n_leaves": [s.before.n_leaves, s.after.n_leaves],
+                        "n_features": [s.before.n_features,
+                                       s.after.n_features]}
+                       for s in res.stats],
+            "node_reduction": 1.0 - a.n_nodes / max(b.n_nodes, 1),
+            "threshold_reduction":
+                1.0 - a.n_unique_splits / max(b.n_unique_splits, 1),
+            "feature_reduction":
+                1.0 - a.n_features / max(b.n_features, 1),
+            "padding_reduction": 1.0 - a.n_leaves / max(b.n_leaves, 1),
+            "engines": eng_rec,
+        })
+    return t, records
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_optim.json at the repo root")
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    tbl, records = run(repeats=args.repeats)
+    tbl.print()
+    tbl.save()
+    best = max((r["engines"][e]["speedup"] for r in records
+                for e in r["engines"]), default=None)
+    if best is not None:
+        print(f"\nbest -O2 vs -O0 wall-clock ratio: {best:.2f}x")
+    if args.json:
+        snapshot = {
+            "scale": SCALE,
+            "records": records,
+            "best_speedup": best,
+        }
+        save_json(f"{tbl.name}_raw", snapshot)
+        if SCALE != "default":      # same source of truth as run()'s suffix
+            print(f"scale={SCALE}: {SNAPSHOT} left untouched")
+        else:
+            with open(SNAPSHOT, "w") as f:
+                json.dump(snapshot, f, indent=1, default=float)
+            print(f"snapshot written to {SNAPSHOT}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

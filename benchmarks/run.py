@@ -5,10 +5,13 @@ roofline benches + the engine A/B harness.
     REPRO_BENCH_SCALE=quick  python -m benchmarks.run  # CI-sized
     REPRO_BENCH_SCALE=full   python -m benchmarks.run  # paper-sized (hours)
     PYTHONPATH=src python -m benchmarks.run --json     # + BENCH_engines.json
+    PYTHONPATH=src python -m benchmarks.run --only table4_merging
 
-``--json`` makes the engine bench write ``BENCH_engines.json`` and the
-cascade bench ``BENCH_cascade.json`` perf snapshots at the repo root, so
-successive PRs accumulate a trajectory.
+``--json`` makes the engine bench write ``BENCH_engines.json``, the
+cascade bench ``BENCH_cascade.json``, and the optimizer bench
+``BENCH_optim.json`` perf snapshots at the repo root, so successive PRs
+accumulate a trajectory.  ``--only <name>`` runs a single bench — the
+full sweep is far too slow when iterating on one table.
 
 The forest-roofline bench needs 512 placeholder devices, so it runs as a
 subprocess (this process keeps the single real CPU device).
@@ -24,42 +27,7 @@ import time
 from .common import SCALE
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--json", action="store_true",
-                    help="write the BENCH_*.json perf snapshots")
-    args = ap.parse_args()
-
-    t0 = time.time()
-    print(f"[bench] scale={SCALE}")
-
-    from . import (bench_cascade, bench_coldstart, bench_engines,
-                   fig1_speedup, table2_ranking, table3_quant_accuracy,
-                   table4_merging, table5_classification)
-
-    for name, mod in [("table2_ranking", table2_ranking),
-                      ("table3_quant_accuracy", table3_quant_accuracy),
-                      ("table4_merging", table4_merging),
-                      ("table5_classification", table5_classification),
-                      ("fig1_speedup", fig1_speedup),
-                      ("bench_coldstart", bench_coldstart)]:
-        t = time.time()
-        print(f"\n[bench] running {name} ...", flush=True)
-        mod.main()
-        print(f"[bench] {name} done in {time.time()-t:.1f}s", flush=True)
-
-    t = time.time()
-    print("\n[bench] running bench_engines ...", flush=True)
-    bench_engines.main(["--json"] if args.json else [])
-    print(f"[bench] bench_engines done in {time.time()-t:.1f}s", flush=True)
-
-    t = time.time()
-    print("\n[bench] running bench_cascade ...", flush=True)
-    bench_cascade.main(["--json"] if args.json else [])
-    print(f"[bench] bench_cascade done in {time.time()-t:.1f}s", flush=True)
-
-    # roofline (512-device dry-run) in a subprocess
-    print("\n[bench] running roofline_forest (subprocess) ...", flush=True)
+def _run_roofline() -> None:
     env = dict(os.environ)
     env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
     r = subprocess.run(
@@ -68,6 +36,59 @@ def main() -> None:
     if r.returncode != 0:
         print("[bench] roofline_forest FAILED", file=sys.stderr)
         sys.exit(1)
+
+
+def _benches(json_flag: bool) -> dict:
+    """name → zero-arg runner, in sweep order.  Lazy imports so
+    ``--only x`` never pays for (or breaks on) the other benches."""
+    def table(name):
+        def run():
+            import importlib
+            importlib.import_module(f"benchmarks.{name}").main()
+        return run
+
+    def with_json(name):
+        def run():
+            import importlib
+            importlib.import_module(f"benchmarks.{name}").main(
+                ["--json"] if json_flag else [])
+        return run
+
+    return {
+        "table2_ranking": table("table2_ranking"),
+        "table3_quant_accuracy": table("table3_quant_accuracy"),
+        "table4_merging": table("table4_merging"),
+        "table5_classification": table("table5_classification"),
+        "fig1_speedup": table("fig1_speedup"),
+        "bench_coldstart": table("bench_coldstart"),
+        "bench_engines": with_json("bench_engines"),
+        "bench_cascade": with_json("bench_cascade"),
+        "bench_optim": with_json("bench_optim"),
+        "roofline_forest": _run_roofline,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="write the BENCH_*.json perf snapshots")
+    ap.add_argument("--only", default=None,
+                    help="run a single bench by name")
+    args = ap.parse_args()
+
+    benches = _benches(args.json)
+    if args.only is not None and args.only not in benches:
+        ap.error(f"unknown bench {args.only!r}; choose from "
+                 f"{sorted(benches)}")
+
+    t0 = time.time()
+    print(f"[bench] scale={SCALE}")
+    selected = {args.only: benches[args.only]} if args.only else benches
+    for name, run in selected.items():
+        t = time.time()
+        print(f"\n[bench] running {name} ...", flush=True)
+        run()
+        print(f"[bench] {name} done in {time.time()-t:.1f}s", flush=True)
 
     print(f"\n[bench] all done in {time.time()-t0:.1f}s; CSVs in "
           "experiments/bench/")

@@ -4,10 +4,17 @@ merging, float vs quantized, across tree counts.
 Claim under test: quantization collapses unique thresholds only on
 heavy-tailed features (EEG), elsewhere merging rates are unchanged;
 merging rates fall with tree count (more trees → more shared thresholds).
+
+Beyond the paper: the ``quant+dedup`` rows run the optimizer middle-end's
+``dedup_thresholds`` pass (``repro.optim``, docs/OPTIM.md) on the
+quantized forest first and report the unique-threshold count it leaves —
+so the quantization-collapse claim is checked against the *compiler's*
+canonicalization, not just RapidScorer's internal merge table.  Cells
+read ``<kept %> (<unique count>)``.
 """
 from __future__ import annotations
 
-from repro import core
+from repro import core, optim
 from repro.data import datasets
 from repro.trees.random_forest import RandomForest, RandomForestConfig
 
@@ -25,7 +32,7 @@ def run() -> Table:
               ["dataset", "type"] + [f"T={T}" for T in tree_counts])
     for name in DATASETS:
         ds = datasets.load(name, n=n_samples)
-        row_f, row_q = [], []
+        row_f, row_q, row_d = [], [], []
         for T in tree_counts:
             rf = RandomForest(RandomForestConfig(
                 n_trees=T, max_leaves=n_leaves, seed=0)).fit(
@@ -34,8 +41,15 @@ def run() -> Table:
             row_f.append(f"{core.merge_stats(forest)*100:.1f}%")
             qf = core.quantize_forest(forest, ds.X_train)
             row_q.append(f"{core.merge_stats(qf)*100:.1f}%")
+            # optimizer cross-check: dedup_thresholds canonicalizes and
+            # drops dominated splits; the unique count it leaves is the
+            # collapse the compiler actually exploits
+            dq = optim.optimize(qf, ("dedup_thresholds",)).forest
+            row_d.append(f"{core.merge_stats(dq)*100:.1f}% "
+                         f"({optim.n_unique_splits(dq)})")
         t.add(name, "float", *row_f)
         t.add(name, "quant", *row_q)
+        t.add(name, "quant+dedup", *row_d)
     return t
 
 

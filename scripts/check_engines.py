@@ -2,13 +2,17 @@
 
     PYTHONPATH=src python scripts/check_engines.py             # engine matrix
     PYTHONPATH=src python scripts/check_engines.py --cascade   # + cascade e2e
+    PYTHONPATH=src python scripts/check_engines.py --optimize  # + -O2 == -O0
 
 The engine list comes from ``core.registry`` — a newly registered engine
 shows up here (and in the benchmarks and the agreement tests) with no
 edits to this file.  ``--cascade`` additionally exercises the staged-
 evaluation subsystem end-to-end on one engine: gate-off bit-exactness,
 a calibrated gate under the accuracy floor, and the exit-fraction
-accounting (the CI smoke path).
+accounting (the CI smoke path).  ``--optimize`` checks the optimizer
+middle-end (docs/OPTIM.md): every registered engine compiled at ``-O2``
+must agree with its ``-O0`` compile — bit-exactly on the quantized
+forest, within float tolerance on the float one.
 
 Exit status is non-zero on any FAIL line, so CI can gate on it.
 """
@@ -92,10 +96,38 @@ def check_cascade(ds, qf, X, engine="bitvector"):
         FAILED.append("cascade-exit-accounting")
 
 
+def check_optimize(forest, qf, X):
+    """Optimizer smoke: every registered engine × -O2 agrees with -O0
+    (the acceptance invariant of the optimizer middle-end)."""
+    from repro import optim
+    res = optim.optimize(qf, 2)
+    print(f"optimizer -O2 on quantized forest: {res.describe()}")
+    for engine in registry.engines("jax"):
+        o0 = core.compile_forest(forest, engine=engine)
+        o2 = core.compile_forest(forest, engine=engine, opt=2)
+        _check(f"O2-float-{engine}",
+               float(np.abs(o2.predict(X) - o0.predict(X)).max()), 1e-4)
+        q0 = core.compile_forest(qf, engine=engine)
+        q2 = core.compile_forest(qf, engine=engine, opt=2)
+        _check(f"O2-quant-{engine}",          # bit-exact: integer sums
+               float(np.abs(q2.predict(X) - q0.predict(X)).max()), 1e-12)
+    # Pallas backends in interpret mode, a few rows (interpret is slow)
+    for spec in registry.specs("pallas"):
+        p0 = core.compile_forest(qf, engine=spec.name, backend="pallas",
+                                 interpret=True)
+        p2 = core.compile_forest(qf, engine=spec.name, backend="pallas",
+                                 interpret=True, opt=2)
+        _check(f"O2-{spec.tune_name}",
+               float(np.abs(p2.predict(X[:8]) - p0.predict(X[:8])).max()),
+               1e-12)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--cascade", action="store_true",
                     help="also smoke the cascade subsystem end-to-end")
+    ap.add_argument("--optimize", action="store_true",
+                    help="also check every engine × -O2 against -O0")
     args = ap.parse_args(argv)
 
     ds = load("magic", n=2000)
@@ -109,6 +141,8 @@ def main(argv=None) -> int:
     check_engines(ds, forest, qf, X)
     if args.cascade:
         check_cascade(ds, qf, X)
+    if args.optimize:
+        check_optimize(forest, qf, X)
     if FAILED:
         print(f"\nFAILED: {FAILED}", file=sys.stderr)
         return 1

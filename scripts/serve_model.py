@@ -10,7 +10,11 @@ dump, a LightGBM ``dump_model`` JSON, a sklearn-shim JSON, a packed
 ``.repro.npz`` forest — or a packed *predictor/server* artifact, which
 cold-starts without autotuning or recompiling (docs/FORMATS.md).
 ``--save`` writes the autotuned compiled artifact so the next start takes
-the cold path.
+the cold path.  ``--explain`` prints the served predictor's
+``plan.describe()`` — every pipeline pass including the optimizer
+middle-end's per-pass stats (docs/OPTIM.md) — so a served artifact can
+say how it was compiled; ``--opt 2`` adds ``@O2`` optimizer candidates
+to the autotune sweep.
 """
 import argparse
 import sys
@@ -33,6 +37,12 @@ def main(argv=None) -> None:
                     help="write the compiled server artifact here")
     ap.add_argument("--n-requests", type=int, default=256,
                     help="synthetic requests to stream through the server")
+    ap.add_argument("--opt", default=None,
+                    help="optimizer level for the autotune sweep "
+                         "(e.g. 2 → adds @O2 candidates; docs/OPTIM.md)")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the served predictor's compile plan "
+                         "(pipeline passes incl. optimizer stats)")
     args = ap.parse_args(argv)
 
     from repro import io
@@ -55,11 +65,20 @@ def main(argv=None) -> None:
               f"L={forest.n_leaves} C={forest.n_classes} "
               f"d={forest.n_features}")
         engines = (args.engine,) if args.engine else None
+        opt_levels = (args.opt,) if args.opt is not None else None
         srv = ForestServer.from_forest(forest, max_batch=args.batch,
-                                       engines=engines, repeats=1)
+                                       engines=engines,
+                                       opt_levels=opt_levels, repeats=1)
         print(f"[serve] autotuned engine: {srv.engine_choice.engine} "
               f"(cached: {srv.engine_choice.from_cache})")
-    d = forest.n_features
+    # n_features_in, not n_features: an optimizer feat_map keeps the
+    # serving interface full-width even after dropped columns
+    d = getattr(forest, "n_features_in", forest.n_features)
+    if args.explain:
+        plan = getattr(srv.predictor, "plan", None)
+        print("[serve] compile plan: "
+              + (plan.describe() if plan is not None
+                 else "unavailable (predictor built outside the pipeline)"))
     X1 = np.zeros((1, d))
     srv.predictor.predict(X1)                      # first prediction
     print(f"[serve] load-to-first-prediction: "

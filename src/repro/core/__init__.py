@@ -61,18 +61,22 @@ def __getattr__(name):
 
 
 def compile_forest(forest: Forest, engine: str = "bitvector",
-                   backend: str = "jax", cascade=None, **kw):
+                   backend: str = "jax", cascade=None, opt=None, **kw):
     """Build a predictor for ``forest`` via the pass pipeline.
 
     engine / backend resolve through ``core.registry`` (no dispatch ladder
     — registered engines: ``core.ENGINES``); ``**kw`` is forwarded to the
     engine builder.  ``cascade=CascadeSpec(...)`` lowers to confidence-
-    gated staged evaluation (``repro.cascade``, docs/CASCADE.md).  For
-    quantization-as-a-pass or multi-device plans use ``core.compile_plan``
-    directly.
+    gated staged evaluation (``repro.cascade``, docs/CASCADE.md).
+    ``opt=`` runs the optimizer middle-end (``repro.optim``,
+    docs/OPTIM.md) on the IR first: a level (``0``/``1``/``2`` or
+    ``"O2"``) or an explicit pass-name tuple; the result is always
+    oracle-equivalence checked.  For quantization-as-a-pass or
+    multi-device plans use ``core.compile_plan`` directly.
     """
     return compile_plan(forest, CompilePlan(engine=engine, backend=backend,
-                                            cascade=cascade, engine_kw=kw))
+                                            cascade=cascade, opt=opt,
+                                            engine_kw=kw))
 
 
 __all__ = [

@@ -12,8 +12,10 @@ Candidates come from ``core.registry`` (one registration per engine — no
 second table here); the autotuner's short names are the registry specs'
 ``tune_name``.  Beyond the engine axis, the sweep can cover the other
 pipeline passes: ``quant_specs=`` adds fixed-point variants (paper §5) as
-``<engine>@q<bits>`` candidates, ``layout_specs=`` adds engine-kw layout
-variants (``<engine>@tree_chunk=32``), and ``n_devices=`` tunes the
+``<engine>@q<bits>`` candidates, ``opt_levels=`` adds optimizer
+middle-end variants (``<engine>@O2`` — ``repro.optim``, docs/OPTIM.md),
+``layout_specs=`` adds engine-kw layout variants
+(``<engine>@tree_chunk=32``), and ``n_devices=`` tunes the
 tree-sharded multi-device wrapper (``core.shard``) instead of
 single-device engines.
 
@@ -248,23 +250,31 @@ def _candidate_factories(forest: Forest, engines: tuple,
                          quant_specs: Optional[tuple],
                          layout_specs: Optional[dict],
                          n_devices: int,
-                         cascade_specs: Optional[tuple] = None
+                         cascade_specs: Optional[tuple] = None,
+                         opt_levels: Optional[tuple] = None
                          ) -> dict[str, Callable]:
     """Candidate name → zero-arg predictor factory.
 
-    The candidate axis is the (engine × quantization × layout × cascade)
-    product of the pipeline's passes: plain tune names for the forest
-    as-is, ``<engine>@q<bits>`` per ``QuantSpec``, ``<engine>@<kw=v,...>``
-    per entry of ``layout_specs[engine]`` (engine-kw overrides such as
-    bitmm's ``tree_chunk`` or gemm block sizes), and
+    The candidate axis is the (engine × quantization × optimization ×
+    layout × cascade) product of the pipeline's passes: plain tune names
+    for the forest as-is, ``<engine>@q<bits>`` per ``QuantSpec``,
+    ``<engine>@O<level>`` per entry of ``opt_levels`` (the optimizer
+    middle-end, ``repro.optim``), ``<engine>@<kw=v,...>`` per entry of
+    ``layout_specs[engine]`` (engine-kw overrides such as bitmm's
+    ``tree_chunk`` or gemm block sizes), and
     ``<engine>@cascade=16/48:<policy>`` per ``CascadeSpec`` (staged
-    evaluation, ``repro.cascade``).  Cascade tags participate in cache
-    entries the same way the ``_dev{n}`` key component does for
-    sharding: entries written before the cascade axis existed simply
-    lack the tagged timings, so a cascade sweep key-misses them and
-    re-benchmarks instead of mis-hitting.  With ``n_devices > 1`` each
-    candidate is wrapped tree-sharded (non-shardable engines are
-    rejected up front; cascade + sharding is rejected too)."""
+    evaluation, ``repro.cascade``).  Opt and cascade tags participate in
+    cache entries the same way the ``_dev{n}`` key component does for
+    sharding: entries written before those axes existed simply lack the
+    tagged timings, so the sweep key-misses them and re-benchmarks
+    instead of mis-hitting.  With ``n_devices > 1`` each candidate is
+    wrapped tree-sharded (non-shardable engines are rejected up front;
+    cascade + sharding is rejected too).
+
+    Every factory compiles through ``compile_plan``, so the winning
+    predictor always carries a ``CompilePlan`` — ``choice.predictor
+    .plan.describe()`` explains the variant, optimizer stats included."""
+    from ..optim import resolve_opt
     if quant_specs and forest.quant_scale is not None:
         raise ValueError("quant_specs sweep needs a float forest "
                          "(this one is already quantized)")
@@ -278,12 +288,15 @@ def _candidate_factories(forest: Forest, engines: tuple,
         raise ValueError(f"layout_specs keys {sorted(unknown)} are not in "
                          f"the requested engine set {tuple(engines)} "
                          "(use autotuner tune names, e.g. 'qs-bitmm')")
+    for o in opt_levels or ():
+        resolve_opt(o)                 # reject garbage levels up front
     quants: tuple = (None,) + (tuple(quant_specs) if quant_specs else ())
+    opts: tuple = (None,) + (tuple(opt_levels) if opt_levels else ())
     cascades: tuple = (None,) + (tuple(cascade_specs) if cascade_specs
                                  else ())
     variants: list[tuple] = [
-        (e, q, kw, casc)
-        for e in engines for q in quants
+        (e, q, o, kw, casc)
+        for e in engines for q in quants for o in opts
         for kw in (None,) + tuple((layout_specs or {}).get(e, ()))
         for casc in cascades]
 
@@ -296,46 +309,38 @@ def _candidate_factories(forest: Forest, engines: tuple,
             qforests[id(q)] = quantize_forest(forest, None, q)
         return qforests[id(q)]
 
-    def make(name: str, q: Optional[QuantSpec],
+    def make(name: str, q: Optional[QuantSpec], o,
              kw: Optional[dict], casc) -> Callable:
         spec = registry.by_tune_name(name)
         ekw = dict(kw or {})
-        if n_devices > 1:
-            if not spec.shardable:
-                raise ValueError(
-                    f"engine {name!r} cannot run tree-sharded "
-                    f"(n_devices={n_devices}); restrict engines= to "
-                    f"{[s.tune_name for s in registry.specs() if s.shardable]}")
+        if n_devices > 1 and not spec.shardable:
+            raise ValueError(
+                f"engine {name!r} cannot run tree-sharded "
+                f"(n_devices={n_devices}); restrict engines= to "
+                f"{[s.tune_name for s in registry.specs() if s.shardable]}")
+        if spec.backend == "pallas":
+            ekw.setdefault("interpret", _interpret())
 
-            def factory():
-                from . import shard
-                return shard.tree_sharded(qf(q), spec.name,
-                                          n_devices=n_devices, **ekw)
-        else:
-            if spec.backend == "pallas":
-                ekw.setdefault("interpret", _interpret())
-            if casc is not None:
-                def factory():
-                    from ..cascade import CascadePredictor
-                    return CascadePredictor(qf(q), casc, engine=spec.name,
-                                            backend=spec.backend,
-                                            engine_kw=ekw)
-            else:
-                def factory():
-                    return registry.build(qf(q), spec.name, spec.backend,
-                                          **ekw)
+        def factory():
+            from .pipeline import CompilePlan, compile_plan
+            plan = CompilePlan(engine=spec.name, backend=spec.backend,
+                               opt=o, n_devices=n_devices, cascade=casc,
+                               engine_kw=dict(ekw))
+            return compile_plan(qf(q), plan)
 
         return factory
 
-    def cname(e: str, q: Optional[QuantSpec], kw: Optional[dict],
+    def cname(e: str, q: Optional[QuantSpec], o, kw: Optional[dict],
               casc) -> str:
         name = e if q is None else f"{e}@{_quant_tag(q)}"
+        if o is not None:
+            name = f"{name}@{resolve_opt(o)[1]}"
         if kw is not None:
             name = f"{name}@{_layout_tag(kw)}"
         return name if casc is None else f"{name}@{casc.tag()}"
 
-    return {cname(e, q, kw, casc): make(e, q, kw, casc)
-            for e, q, kw, casc in variants}
+    return {cname(e, q, o, kw, casc): make(e, q, o, kw, casc)
+            for e, q, o, kw, casc in variants}
 
 
 def choose(forest: Forest, batch: int, *, engines=None,
@@ -343,14 +348,18 @@ def choose(forest: Forest, batch: int, *, engines=None,
            quant_specs: Optional[tuple] = None,
            layout_specs: Optional[dict] = None,
            cascade_specs: Optional[tuple] = None,
+           opt_levels: Optional[tuple] = None,
            n_devices: int = 1,
            cache_path=_CACHE_DEFAULT,
            force: bool = False, repeats: int = 3,
            seed: int = 0) -> EngineChoice:
     """Pick the fastest candidate for ``forest`` at this batch-size bucket.
 
-    Candidates are (engine × quantization × layout × cascade) variants —
-    see ``_candidate_factories``; ``n_devices > 1`` tunes the tree-sharded
+    Candidates are (engine × quantization × optimization × layout ×
+    cascade) variants — see ``_candidate_factories``; ``opt_levels=(1,
+    2)`` adds optimizer middle-end variants (``qs@O2``, docs/OPTIM.md)
+    whose compiled forests are smaller but oracle-equivalent;
+    ``n_devices > 1`` tunes the tree-sharded
     wrapper instead.  Cascade candidates (``cascade_specs=``) time the
     gated path on the synthetic benchmark batch — exit fractions on real
     traffic depend on the data, so treat a cascade winner as a hint and
@@ -386,6 +395,8 @@ def choose(forest: Forest, batch: int, *, engines=None,
                                      tuple(quant_specs) if quant_specs
                                      else None, layout_specs, n_devices,
                                      tuple(cascade_specs) if cascade_specs
+                                     else None,
+                                     tuple(opt_levels) if opt_levels
                                      else None)
     candidates = tuple(factories)
     if cache_path is _CACHE_DEFAULT:
@@ -424,8 +435,10 @@ def choose(forest: Forest, batch: int, *, engines=None,
     cached = (prior or {}).get("timings", {})
     to_bench = candidates if force \
         else tuple(e for e in candidates if e not in cached)
+    # n_features_in, not n_features: an already-optimized forest (with a
+    # feat_map from drop_unused_features) still takes full-width rows
     X = np.random.default_rng(seed).normal(
-        0, 1.0, size=(bucket, forest.n_features))
+        0, 1.0, size=(bucket, forest.n_features_in))
     fresh: dict[str, float] = {}
     best_pred, best_t = None, float("inf")
     for name in to_bench:

@@ -58,6 +58,25 @@ class Forest:
     leaf_scale: float = 1.0                # descale factor for int leaves
     feat_lo: Optional[np.ndarray] = None   # per-feature affine normalisation
     feat_hi: Optional[np.ndarray] = None
+    # optimizer column remap (repro.optim drop_unused_features): IR column
+    # j reads the caller's column feat_map[j]; None → identity.  Applied
+    # by quantize_inputs, so callers keep passing full-width rows.
+    # n_features_src records the caller-side width at remap time — the
+    # map alone can only bound it below (trailing unused columns vanish
+    # from max(feat_map)+1).
+    feat_map: Optional[np.ndarray] = None
+    n_features_src: Optional[int] = None
+
+    @property
+    def n_features_in(self) -> int:
+        """Width of the rows callers pass (== n_features unless the
+        optimizer dropped unused columns behind a feat_map)."""
+        if self.feat_map is None:
+            return self.n_features
+        if self.n_features_src is not None:
+            return int(self.n_features_src)
+        # remap of unknown provenance: the tightest provable lower bound
+        return int(np.max(self.feat_map, initial=-1)) + 1
 
     @property
     def n_words(self) -> int:

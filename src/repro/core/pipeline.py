@@ -12,6 +12,11 @@ layout as compiler stages:
   * **quantize**     — apply ``QuantSpec`` fixed-point lowering (paper §5)
     as a named pass; a no-op when the plan carries no spec or the forest
     is already quantized.
+  * **optimize**     — the IR→IR optimizer middle-end (``repro.optim``,
+    docs/OPTIM.md): ``plan.opt`` selects a level (-O0/-O1/-O2) or an
+    explicit pass list; each optimizer pass records its before/after
+    stats as its own ``PassRecord`` and the whole run is oracle-
+    equivalence checked (bit-exact on quantized forests).
   * **layout**       — engine-aware memory-layout decisions: bitmm's leaf
     field packing (bits × npack) and tree-tile size, gemm's compute dtype —
     recorded on the plan so the autotuner can sweep them.
@@ -51,6 +56,8 @@ class CompilePlan:
     engine: str = "bitvector"
     backend: str = "jax"
     quant: Optional[QuantSpec] = None     # None → keep the forest's dtypes
+    opt: object = None                    # optim level (0/1/2, "O2") or
+    #                                       pass-name tuple; None → O0
     n_devices: int = 1
     cascade: Optional[object] = None      # cascade.CascadeSpec → staged eval
     engine_kw: dict = field(default_factory=dict)
@@ -67,7 +74,8 @@ class CompilePlan:
 # Pass registry
 # --------------------------------------------------------------------------- #
 PASSES: dict[str, Callable] = {}
-PIPELINE = ("deserialize", "canonicalize", "quantize", "layout", "lower")
+PIPELINE = ("deserialize", "canonicalize", "quantize", "optimize",
+            "layout", "lower")
 
 
 def forest_pass(name: str):
@@ -127,7 +135,9 @@ def canonicalize(obj, plan: CompilePlan, ctx: dict) -> Forest:
 def quantize(forest: Forest, plan: CompilePlan, ctx: dict) -> Forest:
     """Fixed-point lowering (paper §5) as a compilation stage."""
     if plan.quant is None:
-        plan.record("quantize", "skipped (float forest)")
+        plan.record("quantize", "skipped (already quantized)"
+                    if forest.quant_scale is not None
+                    else "skipped (float forest)")
         return forest
     if forest.quant_scale is not None:
         plan.record("quantize", "skipped (already quantized)")
@@ -138,6 +148,28 @@ def quantize(forest: Forest, plan: CompilePlan, ctx: dict) -> Forest:
                 f"{plan.quant.bits}b scale={qf.quant_scale:g} "
                 f"leaf_scale={qf.leaf_scale:g} calib={calib}")
     return qf
+
+
+@forest_pass("optimize")
+def optimize(forest: Forest, plan: CompilePlan, ctx: dict) -> Forest:
+    """The optimizer middle-end (``repro.optim``, docs/OPTIM.md): run
+    the level / pass list named by ``plan.opt`` on the (possibly
+    quantized) IR.  Each optimizer pass appends its own
+    ``opt.<name>`` record with before/after node / unique-threshold
+    stats, followed by one ``optimize`` summary record; the run is
+    always oracle-equivalence checked (``optim.OptimizationError`` on
+    divergence — never silently wrong scores)."""
+    from .. import optim
+    names, tag = optim.resolve_opt(plan.opt)
+    if not names:
+        plan.record("optimize", f"skipped ({tag})")
+        return forest
+    res = optim.optimize(forest, plan.opt,
+                         ctx={"X_calib": ctx.get("X_calib")})
+    for s in res.stats:
+        plan.record(f"opt.{s.name}", s.detail())
+    plan.record("optimize", res.describe())
+    return res.forest
 
 
 @forest_pass("layout")

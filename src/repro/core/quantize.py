@@ -82,6 +82,11 @@ def quantize_forest(forest: Forest, X: Optional[np.ndarray] = None,
     through ``quantize_inputs`` — engine wrappers do this automatically via
     the stored ``feat_lo``/``feat_hi``/``quant_scale``."""
     assert forest.quant_scale is None, "forest already quantized"
+    if X is not None and forest.feat_map is not None:
+        # optimized forest (repro.optim drop_unused_features): calibration
+        # rows are full-width; the per-feature ranges must align with the
+        # IR's remapped columns
+        X = np.asarray(X)[:, np.asarray(forest.feat_map, dtype=np.int64)]
     lo, hi = feature_ranges(forest, X)
     s = spec.scale if spec.scale is not None else spec.default_scale
     out = replace(forest)
@@ -111,8 +116,12 @@ def quantize_forest(forest: Forest, X: Optional[np.ndarray] = None,
 
 
 def quantize_inputs(forest: Forest, X: np.ndarray) -> np.ndarray:
-    """Apply the forest's stored normalisation + fixed-point grid to raw
-    inputs. No-op for float forests."""
+    """Apply the forest's stored input transform to raw full-width rows:
+    the optimizer's column remap (``feat_map``, if the
+    ``drop_unused_features`` pass ran) followed by normalisation +
+    fixed-point grid.  No-op for float forests without a remap."""
+    if forest.feat_map is not None:
+        X = np.asarray(X)[:, np.asarray(forest.feat_map, dtype=np.int64)]
     if forest.quant_scale is None:
         return X
     if not np.issubdtype(forest.threshold.dtype, np.integer):

@@ -16,10 +16,8 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .forest import Forest
-from .quantize import leaf_scale
 from .quickscorer import CompiledQS, compile_qs, exit_leaf, mask_reduce
 from .registry import BasePredictor, register_engine
 
@@ -38,27 +36,20 @@ class CompiledRS:
 
 def merge_nodes(forest: Forest):
     """Unique (feature, threshold) table + inverse map. Padding nodes map to
-    unique id 0 but are masked out by ``valid`` downstream."""
-    T, N = forest.feature.shape
-    valid = (forest.feature >= 0).ravel()
-    feat = np.maximum(forest.feature, 0).ravel()
-    thr = forest.threshold.ravel()
-    # bit-exact key (works for float and int thresholds alike)
-    key = np.stack([feat.astype(np.int64),
-                    thr.astype(np.float64).view(np.int64)], axis=1)
-    key[~valid] = np.array([-1, 0])
-    uniq, inv = np.unique(key, axis=0, return_inverse=True)
-    n_pad = int((uniq[:, 0] == -1).any())
-    u_feat = np.maximum(uniq[:, 0], 0).astype(np.int32)
-    u_thr = uniq[:, 1].view(np.float64).astype(forest.threshold.dtype)
-    return u_feat, u_thr, inv.reshape(T, N).astype(np.int32), len(uniq) - n_pad
+    unique id 0 but are masked out by ``valid`` downstream.
+
+    The computation is shared compiler analysis now (the optimizer's
+    ``dedup_thresholds`` pass and Table 4 report the same statistic):
+    this is ``repro.optim.analysis.unique_splits``, imported lazily so
+    the two package inits never deadlock."""
+    from ..optim.analysis import unique_splits
+    return unique_splits(forest)
 
 
 def merge_stats(forest: Forest) -> float:
     """Fraction of unique nodes kept after merging (paper Table 4)."""
-    *_, n_unique = merge_nodes(forest)
-    total = int(forest.n_nodes.sum())
-    return n_unique / max(total, 1)
+    from ..optim.analysis import unique_fraction
+    return unique_fraction(forest)
 
 
 def compile_rs(forest: Forest) -> CompiledRS:

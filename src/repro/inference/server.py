@@ -160,7 +160,9 @@ class ForestServer:
         ``cascade_specs=`` (forwarded to ``choose``) adds confidence-gated
         staged candidates — a cascade winner serves through the same
         micro-batcher, with per-stage exit fractions reported in
-        ``ServerStats.summary()``.  ``cache_path=None`` disables the disk
+        ``ServerStats.summary()``; ``opt_levels=`` (also forwarded) adds
+        optimizer middle-end variants (``qs@O2``, docs/OPTIM.md) whose
+        serving interface is unchanged (full-width rows).  ``cache_path=None`` disables the disk
         layer (as in ``choose``); omitting it uses the default cache
         file."""
         from ..core import engine_select

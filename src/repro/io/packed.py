@@ -117,6 +117,13 @@ def _pack_forest(forest: Forest, prefix: str = "") -> tuple[dict, dict]:
     if forest.feat_lo is not None:
         arrays[prefix + "feat_lo"] = np.asarray(forest.feat_lo)
         arrays[prefix + "feat_hi"] = np.asarray(forest.feat_hi)
+    if forest.feat_map is not None:
+        # optimized IR (repro.optim drop_unused_features): the column
+        # remap rides in its own array entry; n_features_in in the header
+        # tells a reader the row width callers still pass (FORMATS.md)
+        arrays[prefix + "feat_map"] = np.asarray(forest.feat_map,
+                                                 dtype=np.int64)
+        meta["n_features_in"] = forest.n_features_in
     return meta, arrays
 
 
@@ -148,6 +155,10 @@ def _unpack_forest(meta: dict, npz, prefix: str = "") -> Forest:
         else None
     feat_hi = npz[prefix + "feat_hi"] if prefix + "feat_hi" in npz.files \
         else None
+    feat_map = npz[prefix + "feat_map"] \
+        if prefix + "feat_map" in npz.files else None
+    n_features_src = None if feat_map is None \
+        else meta.get("n_features_in")
     return Forest(
         n_trees=T, n_leaves=L, n_classes=C,
         n_features=int(meta["n_features"]),
@@ -156,7 +167,8 @@ def _unpack_forest(meta: dict, npz, prefix: str = "") -> Forest:
         quant_scale=meta.get("quant_scale"),
         quant_bits=meta.get("quant_bits"),
         leaf_scale=float(meta.get("leaf_scale", 1.0)),
-        feat_lo=feat_lo, feat_hi=feat_hi, **padded)
+        feat_lo=feat_lo, feat_hi=feat_hi, feat_map=feat_map,
+        n_features_src=n_features_src, **padded)
 
 
 def peek(path: PathLike) -> dict:

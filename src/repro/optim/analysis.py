@@ -1,0 +1,55 @@
+"""Forest IR analysis shared by the optimizer, RapidScorer, and Table 4.
+
+``unique_splits`` is the generalized form of RapidScorer's equivalent-node
+merging (Ye et al. 2018): the ensemble-wide table of unique
+(feature, threshold) pairs plus the node → unique-id inverse map.  It
+started life inside ``core/rapidscorer.py`` as that engine's private
+compile step; the optimizer pass framework (``repro.optim``) needs the
+same statistic to measure what ``dedup_thresholds`` achieves, and
+``benchmarks/table4_merging.py`` needs it to check the paper's
+quantization-collapse claim against the optimizer — so it lives here and
+``rapidscorer.merge_nodes`` delegates.
+
+IMPORT HYGIENE: this module deliberately imports nothing from
+``repro.core`` — ``core/rapidscorer.py`` (imported by ``repro.core``'s
+package init) resolves ``unique_splits`` from here, so an import in the
+other direction would deadlock the package inits.  Forests are
+duck-typed (only ``feature`` / ``threshold`` / ``n_nodes`` are read).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def unique_splits(forest):
+    """Unique (feature, threshold) table + inverse map over the ensemble.
+
+    Returns ``(u_feat (U,) int32, u_thr (U,), inv (T, N) int32,
+    n_unique)``.  Padding nodes map to unique id 0 but are masked out by
+    ``valid`` downstream; the key is bit-exact (float thresholds compared
+    by bit pattern, so ``-0.0`` and ``+0.0`` count as distinct — the
+    ``dedup_thresholds`` optimizer pass canonicalizes them)."""
+    T, N = forest.feature.shape
+    valid = (forest.feature >= 0).ravel()
+    feat = np.maximum(forest.feature, 0).ravel()
+    thr = forest.threshold.ravel()
+    key = np.stack([feat.astype(np.int64),
+                    thr.astype(np.float64).view(np.int64)], axis=1)
+    key[~valid] = np.array([-1, 0])
+    uniq, inv = np.unique(key, axis=0, return_inverse=True)
+    n_pad = int((uniq[:, 0] == -1).any())
+    u_feat = np.maximum(uniq[:, 0], 0).astype(np.int32)
+    u_thr = uniq[:, 1].view(np.float64).astype(forest.threshold.dtype)
+    return u_feat, u_thr, inv.reshape(T, N).astype(np.int32), len(uniq) - n_pad
+
+
+def n_unique_splits(forest) -> int:
+    """Just the unique-(feature, threshold) count (optimizer pass stats)."""
+    *_, n = unique_splits(forest)
+    return n
+
+
+def unique_fraction(forest) -> float:
+    """Fraction of unique nodes kept after merging (paper Table 4)."""
+    total = int(forest.n_nodes.sum())
+    return n_unique_splits(forest) / max(total, 1)

@@ -5,13 +5,19 @@ forest, per engine, on a real classification dataset.
     PYTHONPATH=src python -m benchmarks.bench_cascade --json     # + snapshot
 
 For each (dataset, engine) pair a random forest is trained, quantized,
-and served two ways: the plain engine over all trees, and a calibrated
-cascade (``repro.cascade``, threshold picked on held-out rows under the
-0.5 pp accuracy floor).  Reported per row:
+and served three ways: the plain engine over all trees, the staged
+cascade (host loop between stages), and the fused cascade (one jitted
+computation, ``cascade/fused.py``) — both cascade variants share one
+calibration (``repro.cascade``, threshold picked on held-out rows under
+the 0.5 pp accuracy floor), so their rows differ only in execution.
+Reported per row:
 
+  * ``variant``       — ``staged`` or ``fused``;
+  * ``host_syncs``    — device→host syncs per batch (staged: one per
+    stage; fused: 1);
   * ``speedup_wall``  — full-forest wall-clock / cascade wall-clock;
   * ``speedup_trees`` — n_trees / mean trees evaluated per row (the
-    device-independent work reduction — the acceptance metric);
+    device-independent work reduction);
   * ``acc_drop_pp``   — accuracy delta at the calibrated threshold.
 
 The CSV (experiments/bench/), the raw JSON, and the repo-root
@@ -78,30 +84,46 @@ def _bench_case(dataset, n_trees, max_leaves, stages, engine,
                                cascade=CascadeSpec(stages=stages))
     cal = calibrate(casc, X_cal, y_cal, floor_pp=floor_pp)
     casc.set_policy(cal.policy)
+    fused = core.compile_forest(qf, engine=engine,
+                                cascade=CascadeSpec(stages=stages,
+                                                    fused=True))
+    fused.set_policy(cal.policy)         # one calibration, two executions
 
     us_full = us_per_instance(
         time_predict(lambda: full.predict(X_test), repeats=repeats),
         len(X_test))
-    casc.reset_exit_stats()
-    us_casc = us_per_instance(
-        time_predict(lambda: casc.predict(X_test), repeats=repeats),
-        len(X_test))
     acc_full = float((full.predict_class(X_test) == y_test).mean())
-    acc_casc = float((casc.predict_class(X_test) == y_test).mean())
-    mean_trees = casc.mean_trees_evaluated
-    return {
-        "dataset": dataset, "engine": engine,
-        "trees": n_trees, "leaves": max_leaves,
-        "stages": list(casc.stages), "policy": casc.policy.tag(),
-        "n_test": int(len(X_test)),
-        "us_full": us_full, "us_cascade": us_casc,
-        "speedup_wall": us_full / us_casc,
-        "mean_trees": mean_trees,
-        "speedup_trees": n_trees / mean_trees,
-        "exit_fractions": casc.exit_fractions.tolist(),
-        "acc_full": acc_full, "acc_cascade": acc_casc,
-        "acc_drop_pp": (acc_full - acc_casc) * 100.0,
-    }
+
+    records = []
+    for variant, pred in (("staged", casc), ("fused", fused)):
+        pred.reset_exit_stats()
+        us_casc = us_per_instance(
+            time_predict(lambda: pred.predict(X_test), repeats=repeats),
+            len(X_test))
+        acc_casc = float((pred.predict_class(X_test) == y_test).mean())
+        mean_trees = pred.mean_trees_evaluated
+        records.append({
+            "dataset": dataset, "engine": engine, "variant": variant,
+            "trees": n_trees, "leaves": max_leaves,
+            "stages": list(pred.stages), "policy": pred.policy.tag(),
+            "host_syncs": int(pred.host_syncs),
+            "n_test": int(len(X_test)),
+            "us_full": us_full, "us_cascade": us_casc,
+            "speedup_wall": us_full / us_casc,
+            "mean_trees": mean_trees,
+            "speedup_trees": n_trees / mean_trees,
+            "exit_fractions": pred.exit_fractions.tolist(),
+            "acc_full": acc_full, "acc_cascade": acc_casc,
+            "acc_drop_pp": (acc_full - acc_casc) * 100.0,
+        })
+    # identical decisions by construction (shared jitted gate) — catch
+    # any drift between the two execution schemes right in the bench
+    s, f = records
+    if s["exit_fractions"] != f["exit_fractions"]:
+        raise AssertionError(
+            f"staged/fused exit fractions diverged on {dataset}/{engine}: "
+            f"{s['exit_fractions']} vs {f['exit_fractions']}")
+    return records
 
 
 def run(repeats: int = 5, floor_pp: float = 0.5):
@@ -112,24 +134,26 @@ def run(repeats: int = 5, floor_pp: float = 0.5):
     artifact-consistency rule, enforced like ``bench_engines``'s subset
     rename)."""
     suffix = "" if SCALE == "default" else f"_{SCALE}"
-    cols = ["dataset", "engine", "trees", "stages", "policy",
-            "full_us", "casc_us", "speedup_wall", "mean_trees",
-            "speedup_trees", "acc_full", "acc_casc", "drop_pp"]
+    cols = ["dataset", "engine", "variant", "trees", "stages", "policy",
+            "host_syncs", "full_us", "casc_us", "speedup_wall",
+            "mean_trees", "speedup_trees", "acc_full", "acc_casc",
+            "drop_pp"]
     t = Table(f"bench_cascade{suffix}", cols)
     records = []
     for (dataset, n_trees, max_leaves, stages) in cases():
         for engine in engines():
-            r = _bench_case(dataset, n_trees, max_leaves, stages, engine,
-                            repeats, floor_pp)
-            records.append(r)
-            t.add(r["dataset"], r["engine"], r["trees"],
-                  "/".join(map(str, r["stages"])), r["policy"],
-                  f"{r['us_full']:.1f}", f"{r['us_cascade']:.1f}",
-                  f"{r['speedup_wall']:.2f}x",
-                  f"{r['mean_trees']:.1f}",
-                  f"{r['speedup_trees']:.2f}x",
-                  f"{r['acc_full']:.4f}", f"{r['acc_cascade']:.4f}",
-                  f"{r['acc_drop_pp']:.2f}")
+            for r in _bench_case(dataset, n_trees, max_leaves, stages,
+                                 engine, repeats, floor_pp):
+                records.append(r)
+                t.add(r["dataset"], r["engine"], r["variant"], r["trees"],
+                      "/".join(map(str, r["stages"])), r["policy"],
+                      r["host_syncs"],
+                      f"{r['us_full']:.1f}", f"{r['us_cascade']:.1f}",
+                      f"{r['speedup_wall']:.2f}x",
+                      f"{r['mean_trees']:.1f}",
+                      f"{r['speedup_trees']:.2f}x",
+                      f"{r['acc_full']:.4f}", f"{r['acc_cascade']:.4f}",
+                      f"{r['acc_drop_pp']:.2f}")
     return t, records
 
 
@@ -146,11 +170,11 @@ def main(argv=None) -> int:
     tbl.print()
     tbl.save()
     ok = [r for r in records if r["acc_drop_pp"] <= args.floor_pp]
-    best = max(ok, key=lambda r: r["speedup_trees"], default=None)
+    best = max(ok, key=lambda r: r["speedup_wall"], default=None)
     if best is not None:
         print(f"\nbest cascade (<= {args.floor_pp:g} pp drop): "
-              f"{best['dataset']}/"
-              f"{best['engine']} — {best['speedup_trees']:.2f}x fewer "
+              f"{best['dataset']}/{best['engine']}/{best['variant']} — "
+              f"{best['speedup_trees']:.2f}x fewer "
               f"trees, {best['speedup_wall']:.2f}x wall-clock, "
               f"{best['acc_drop_pp']:.2f} pp drop")
     if args.json:
@@ -159,8 +183,9 @@ def main(argv=None) -> int:
             "floor_pp": args.floor_pp,
             "records": records,
             "best_speedup_trees": best["speedup_trees"] if best else None,
-            "best_pair": (f"{best['dataset']}/{best['engine']}"
-                          if best else None),
+            "best_speedup_wall": best["speedup_wall"] if best else None,
+            "best_pair": (f"{best['dataset']}/{best['engine']}/"
+                          f"{best['variant']}" if best else None),
         }
         save_json(f"{tbl.name}_raw", snapshot)
         if SCALE != "default":      # same source of truth as run()'s suffix

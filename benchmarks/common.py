@@ -30,15 +30,29 @@ def scale_pick(quick, default, full):
     return {"quick": quick, "default": default, "full": full}[SCALE]
 
 
+def sync(result):
+    """Block until the device work backing ``result`` (any array /
+    pytree) has finished, and pass it through.  jax dispatch is async:
+    without this, a timed loop over a fn that returns device arrays
+    (e.g. the fused cascade before its host conversion) stops the clock
+    before the computation does.  Numpy results pass through untouched
+    (predictors that already convert on the host have synced by
+    definition)."""
+    import jax
+    return jax.block_until_ready(result)
+
+
 def time_predict(fn: Callable[[], object], *, warmup: int = 2,
                  repeats: int = 5) -> float:
-    """Median wall-clock seconds of fn() after warmup."""
+    """Median wall-clock seconds of fn() after warmup.  Every call is
+    wrapped in ``sync`` so async device dispatch can't understate the
+    measurement — all bench loops time through here."""
     for _ in range(warmup):
-        fn()
+        sync(fn())
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        fn()
+        sync(fn())
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
 

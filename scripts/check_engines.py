@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python scripts/check_engines.py             # engine matrix
     PYTHONPATH=src python scripts/check_engines.py --cascade   # + cascade e2e
+    PYTHONPATH=src python scripts/check_engines.py --cascade-fused  # + fused
     PYTHONPATH=src python scripts/check_engines.py --optimize  # + -O2 == -O0
 
 The engine list comes from ``core.registry`` — a newly registered engine
@@ -9,7 +10,11 @@ shows up here (and in the benchmarks and the agreement tests) with no
 edits to this file.  ``--cascade`` additionally exercises the staged-
 evaluation subsystem end-to-end on one engine: gate-off bit-exactness,
 a calibrated gate under the accuracy floor, and the exit-fraction
-accounting (the CI smoke path).  ``--optimize`` checks the optimizer
+accounting (the CI smoke path).  ``--cascade-fused`` checks fused
+single-computation execution (docs/CASCADE.md §Fused execution) against
+the staged loop: bit-exact scores and identical per-stage exit counts
+on the quantized forest, for every jax engine and for the single-kernel
+Pallas tier in interpret mode.  ``--optimize`` checks the optimizer
 middle-end (docs/OPTIM.md): every registered engine compiled at ``-O2``
 must agree with its ``-O0`` compile — bit-exactly on the quantized
 forest, within float tolerance on the float one.
@@ -96,6 +101,38 @@ def check_cascade(ds, qf, X, engine="bitvector"):
         FAILED.append("cascade-exit-accounting")
 
 
+def check_cascade_fused(ds, qf, X):
+    """Fused-execution smoke: fused must be bit-exact with the staged
+    loop (scores AND per-stage exit counts) on the quantized forest —
+    every jax engine, plus the single-kernel Pallas tier (interpret
+    mode, a few rows: interpret is slow)."""
+    from repro.cascade import (CascadePredictor, CascadeSpec,
+                               FusedCascadePredictor, MarginGate)
+    spec = CascadeSpec(stages=(max(qf.n_trees // 4, 1), qf.n_trees),
+                       policy=MarginGate(0.5))
+    fspec = CascadeSpec(stages=spec.stages, policy=spec.policy,
+                        fused=True)
+    for engine in registry.engines("jax"):
+        staged = CascadePredictor(qf, spec, engine=engine)
+        fused = core.compile_forest(qf, engine=engine, cascade=fspec)
+        assert isinstance(fused, FusedCascadePredictor)
+        err = float(np.abs(fused.predict(X) - staged.predict(X)).max())
+        if not np.array_equal(fused.last_exit_counts,
+                              staged.last_exit_counts):
+            err = np.inf         # exit-count drift is a hard FAIL too
+        _check(f"fused-{engine}", err, 1e-12)
+    staged = CascadePredictor(qf, spec, engine="bitvector")
+    fused = FusedCascadePredictor(qf, fspec, engine="bitvector",
+                                  backend="pallas",
+                                  engine_kw={"interpret": True})
+    err = float(np.abs(fused.predict(X[:8]) - staged.predict(X[:8])).max())
+    if not np.array_equal(fused.last_exit_counts, staged.last_exit_counts):
+        err = np.inf
+    _check("fused-pallas-kernel", err, 1e-12)
+    print(f"fused host_syncs={fused.host_syncs} "
+          f"(staged: {staged.host_syncs})")
+
+
 def check_optimize(forest, qf, X):
     """Optimizer smoke: every registered engine × -O2 agrees with -O0
     (the acceptance invariant of the optimizer middle-end)."""
@@ -126,6 +163,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--cascade", action="store_true",
                     help="also smoke the cascade subsystem end-to-end")
+    ap.add_argument("--cascade-fused", action="store_true",
+                    help="also check fused execution against the "
+                         "staged loop (scores + exit counts)")
     ap.add_argument("--optimize", action="store_true",
                     help="also check every engine × -O2 against -O0")
     args = ap.parse_args(argv)
@@ -141,6 +181,8 @@ def main(argv=None) -> int:
     check_engines(ds, forest, qf, X)
     if args.cascade:
         check_cascade(ds, qf, X)
+    if args.cascade_fused:
+        check_cascade_fused(ds, qf, X)
     if args.optimize:
         check_optimize(forest, qf, X)
     if FAILED:

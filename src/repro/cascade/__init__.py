@@ -16,17 +16,23 @@ Typical use::
     pred.set_policy(result.policy)
     scores = pred.predict(X)            # early-exits confident rows
     pred.exit_fractions                 # per-stage exit accounting
+
+``CascadeSpec(..., fused=True)`` lowers to ``FusedCascadePredictor``
+instead: the same semantics as one compiled computation with zero host
+syncs between stages (cascade/fused.py, docs/CASCADE.md §Fused).
 """
+from .fused import FusedCascadePredictor
 from .policy import (CalibrationResult, GatePolicy, MarginGate, ProbaGate,
                      ScoreBoundGate, calibrate, default_policy_grid,
-                     policy_from_header, policy_to_header, simulate_gate)
+                     normalize_scores_jnp, policy_from_header,
+                     policy_to_header, simulate_gate)
 from .predictor import (CascadePredictor, CascadeSpec, default_policy,
                         normalize_stages, tree_slice)
 
 __all__ = [
     "GatePolicy", "MarginGate", "ProbaGate", "ScoreBoundGate",
     "CalibrationResult", "calibrate", "default_policy_grid",
-    "simulate_gate", "policy_to_header", "policy_from_header",
-    "CascadePredictor", "CascadeSpec", "default_policy",
-    "normalize_stages", "tree_slice",
+    "normalize_scores_jnp", "simulate_gate", "policy_to_header",
+    "policy_from_header", "CascadePredictor", "FusedCascadePredictor",
+    "CascadeSpec", "default_policy", "normalize_stages", "tree_slice",
 ]

@@ -1,0 +1,267 @@
+"""Fused cascade execution: the whole staged evaluation in ONE jit.
+
+The staged ``CascadePredictor.predict`` pays a host round-trip at every
+stage boundary — scores come back to numpy for the gate, survivors are
+gathered and re-padded on the host, and each stage shape dispatches its
+own compiled call.  BENCH_cascade.json shows where that leaves us: on
+mnist a modest tree reduction *regresses* to 0.67× wall-clock.  This
+module closes the gap by lowering stage scoring, gate decision, and
+survivor masking into a single jitted computation with zero host syncs
+between stages.
+
+Execution scheme (per stage, inside one trace):
+
+  1. **Stage 0** — every valid row is active by definition, so the
+     padded batch evaluates in one vectorized call, exactly like the
+     staged loop's first stage.
+  2. **Compact** — before each later stage a prefix-sum over the
+     survivor mask ranks active rows first (in original order), exited
+     rows after, and a scatter turns the ranks into a permutation —
+     O(B) adds, no sort.
+  3. **Bucket dispatch** — ``lax.switch`` picks the smallest
+     power-of-two prefix of the compacted batch that covers the
+     survivor count and evaluates only that prefix, vectorized.  This
+     is the in-graph twin of the staged loop's ``bucket_batch``
+     shrinking batches (same bucket sizes, so the same compute), traded
+     against a full-batch masked sweep which would burn every exited
+     lane for zero savings.  Branch 0 is a no-op: when the survivor
+     count hits zero, remaining stages dispatch to it — early
+     termination without leaving the graph.
+  4. **Scatter + gate** — the prefix's delta scores scatter back
+     through the permutation (overrun lanes masked to zero), then the
+     policy's pure-jax ``decide(scores, stage)`` — the same jitted rule
+     the staged loop's ``exits`` wraps — marks exits, and per-stage
+     exit counts accumulate in-graph.  ``ServerStats`` accounting costs
+     exactly one device→host sync per batch.
+
+Rows that exit keep their frozen cumulative score — identical semantics
+to the staged loop, and bit-exact against it on quantized forests: the
+per-row traversal is batch-composition independent, integer partial
+sums make every reduction order agree, and the gate sees the same f32
+values either way (the conformance suite pins this for every engine).
+
+For the bitvector engine on the Pallas backend a second tier replaces
+the per-stage program with one fused kernel (``kernels.cascade_kernel``):
+stage tree-blocks evaluate under an in-kernel survivor mask held in
+VMEM scratch, and a fully-decided batch tile skips all remaining stage
+blocks via ``pl.when``.
+
+When does the staged host loop still win?  Tiny batches (a handful of
+rows — compaction/scatter overhead against a couple of cheap syncs)
+and third-party policies that only implement the numpy ``exits``.
+Everything else should prefer ``fused=True``; ``engine_select.choose``
+times both when given both specs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..core.engine_select import bucket_batch
+from ..core.forest import Forest
+from ..core.registry import ensure_feature_column
+from .predictor import CascadePredictor, CascadeSpec
+
+
+def _stage_eval_fn(pred):
+    """One stage predictor → a traceable ``X -> (n, C) descaled scores``.
+
+    Registry engines share ``BasePredictor._fn`` (a jitted closure over
+    the compiled arrays — calling it under an outer jit inlines the
+    trace); Pallas predictors expose the same ``_fn`` but descale on the
+    host, so the leaf scale is divided out here to match
+    ``predict_transformed`` exactly."""
+    fn = getattr(pred, "_fn", None)
+    if fn is None:
+        raise TypeError(
+            f"stage predictor {type(pred).__name__} exposes no traceable "
+            "eval fn (_fn) — fused cascade execution needs one; use the "
+            "staged CascadePredictor for this engine")
+    scale = getattr(pred, "leaf_scale", None)
+    if scale is not None and scale != 1.0:
+        return lambda X: fn(X) / jnp.float32(scale)
+    return fn
+
+
+class FusedCascadePredictor(CascadePredictor):
+    """Drop-in ``CascadePredictor`` whose ``predict`` is one compiled
+    computation (module docstring).  Stage building, policy handling,
+    calibration (``cumulative_scores``), exit-stat accounting, and the
+    packed-artifact protocol are all inherited — only the hot path and
+    its sync count change."""
+
+    fused = True
+
+    def __init__(self, forest: Forest, spec: CascadeSpec, *,
+                 engine: str = "bitvector", backend: str = "jax",
+                 engine_kw: Optional[dict] = None,
+                 stage_predictors: Optional[list] = None):
+        super().__init__(forest, spec, engine=engine, backend=backend,
+                         engine_kw=engine_kw, stage_predictors=stage_predictors)
+        self._stage_fns = [_stage_eval_fn(p) for p in self.stage_predictors]
+        blocks = [p.block_b for p in self.stage_predictors
+                  if hasattr(p, "block_b")]
+        # Pallas stages demand f32 rows padded to their batch block; it
+        # also floors the bucket ladder so every switch branch tiles
+        self._row_mult = max(blocks) if blocks else 1
+        self._feed_f32 = bool(blocks)
+        # the bitvector/pallas pair gets the single-kernel tier
+        self._use_kernel = (engine == "bitvector" and backend == "pallas"
+                            and stage_predictors is None)
+
+    # ------------------------------------------------------------- policy
+    def set_policy(self, policy) -> None:
+        super().set_policy(policy)
+        # the fused traces close over the policy — stale jits must die
+        self._jit_cache = {}
+
+    # -------------------------------------------------------- fused trace
+    def _bucket_ladder(self, Bp: int) -> list:
+        """Switch-branch sizes: ``F·2^j`` and ``3F·2^j`` up to Bp, F the
+        floor (16 rows, or the Pallas batch block — both families stay
+        multiples of the block).  The half-steps cap the worst-case
+        over-evaluation at 1.5× instead of 2×, which is what decides
+        the low-exit regime (mnist: ~73 % of rows reach the last
+        stage); the floor keeps the branch count — and with it compile
+        time and conditional dispatch — modest."""
+        floor = min(max(16, self._row_mult), Bp)
+        half = self._row_mult if self._row_mult > 1 \
+            else max(floor // 2, 1)
+        sizes = set([Bp])
+        s = floor
+        while s < Bp:
+            sizes.add(s)
+            s *= 2
+        # finer steps only near the top, where over-evaluation is paid
+        # in real tree traversals (a 57 %-survivor stage at a 2× bucket
+        # nearly doubles its cost); below Bp/4 the absolute waste is
+        # small and every extra branch taxes compile + dispatch
+        for m, lo in ((3, Bp // 4), (5, Bp // 2), (7, Bp // 2)):
+            s = m * half
+            while s < Bp:
+                if s >= max(floor, lo):
+                    sizes.add(s)
+                s *= 2
+        return sorted(sizes)
+
+    def _fused_program(self):
+        """Tier-1 generic program: ``(Xp, n) -> (scores, counts)`` over
+        a (Bp, d) zero-padded batch, Bp a multiple of row_mult; the
+        first ``n`` rows are real."""
+        stage_fns = self._stage_fns
+        decide = self.policy.decide
+        K = len(self.stages)
+        C = self.forest.n_classes
+
+        def run(Xp, n):
+            Bp = Xp.shape[0]
+            iota = jnp.arange(Bp, dtype=jnp.int32)
+            acc = jnp.zeros((Bp, C), dtype=jnp.float32)
+            counts = jnp.zeros((K,), dtype=jnp.int32)
+            active = iota < n
+            n_act = n.astype(jnp.int32)
+            sizes = self._bucket_ladder(Bp)
+            sizes_arr = jnp.asarray(sizes, dtype=jnp.int32)
+
+            for k in range(K):
+                if k == 0:
+                    # every valid row is active and valid rows are a
+                    # prefix: the identity permutation compacts
+                    order = iota
+                else:
+                    # compact survivors to the front: prefix-sum ranks
+                    # (no sort — an XLA sort over Bp keys costs more
+                    # than the small stage evals it feeds), scattered
+                    # into a permutation; original row order preserved
+                    na = active.astype(jnp.int32)
+                    pos = jnp.where(active, jnp.cumsum(na) - 1,
+                                    n_act + jnp.cumsum(1 - na) - 1)
+                    order = jnp.zeros(Bp, jnp.int32).at[pos].set(iota)
+
+                def mk(size, _k=k, _order=order, _n=n_act):
+                    def branch(a):
+                        # gather only the bucket's rows, in-branch; the
+                        # overrun lanes (exited or padded rows) are
+                        # masked so frozen scores stay frozen
+                        delta = stage_fns[_k](Xp[_order[:size]])
+                        ok = jnp.arange(size) < _n
+                        return a.at[_order[:size]].add(
+                            jnp.where(ok[:, None], delta, 0.0))
+                    return branch
+
+                # smallest bucket covering the survivors; 0 → no-op
+                # (early termination once everything has exited)
+                idx = jnp.where(
+                    n_act > 0,
+                    1 + jnp.sum((sizes_arr < n_act).astype(jnp.int32)),
+                    0)
+                acc = lax.switch(idx, [lambda a: a]
+                                 + [mk(s) for s in sizes], acc)
+                if k == K - 1:
+                    counts = counts.at[k].add(n_act)
+                else:
+                    ex = decide(acc, k) & active
+                    nex = jnp.sum(ex.astype(jnp.int32))
+                    counts = counts.at[k].add(nex)
+                    active = active & ~ex
+                    n_act = n_act - nex
+            return acc, counts
+
+        return run
+
+    def _kernel_program(self):
+        """Tier-2: the single Pallas cascade kernel plus in-graph exit
+        accounting (per-row exit stage → one-hot → per-stage counts)."""
+        from ..kernels import ops as kops
+        fn = kops.pallas_fused_cascade_qs(
+            self.forest, self.stages, self.policy, **self.engine_kw)
+        K = len(self.stages)
+
+        def run(Xp, n):
+            valid = jnp.arange(Xp.shape[0], dtype=jnp.int32) < n
+            scores, exit_stage = fn(Xp, valid)
+            hot = (exit_stage == jnp.arange(K, dtype=jnp.int32)[None, :]) \
+                & valid[:, None]
+            return scores, jnp.sum(hot.astype(jnp.int32), axis=0)
+
+        return run
+
+    def _fused_call(self):
+        fn = self._jit_cache.get("prog")
+        if fn is None:
+            run = self._kernel_program() if self._use_kernel \
+                else self._fused_program()
+            fn = self._jit_cache["prog"] = jax.jit(run)
+        return fn
+
+    # --------------------------------------------------------- prediction
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X)
+        K = len(self.stages)
+        if X.shape[0] == 0:
+            self.last_exit_counts = np.zeros(K, dtype=np.int64)
+            return np.zeros((0, self.forest.n_classes), dtype=np.float32)
+        feed = ensure_feature_column(np.asarray(self.transform_inputs(X)))
+        if self._feed_f32:
+            feed = feed.astype(np.float32)
+        n, mult = feed.shape[0], self._row_mult
+        # same power-of-two bucketing as the staged loop / Pallas
+        # predictors: O(log B) distinct shapes → O(log B) traces
+        bucket = mult * bucket_batch(-(-n // mult)) if mult > 1 \
+            else bucket_batch(n)
+        Xp = np.zeros((bucket,) + feed.shape[1:], dtype=feed.dtype)
+        Xp[:n] = feed
+        scores, counts = self._fused_call()(jnp.asarray(Xp),
+                                            np.int32(n))
+        counts = np.asarray(counts, dtype=np.int64)   # the ONE host sync
+        self.last_exit_counts = counts
+        self.exit_counts += counts
+        return np.asarray(scores)[:n]
+
+    @property
+    def host_syncs(self) -> int:
+        return 1

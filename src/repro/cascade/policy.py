@@ -8,8 +8,12 @@ module holds the gate side of the subsystem (docs/CASCADE.md):
 
   * ``GatePolicy`` — the pluggable interface: ``prepare(forest, stages)``
     precomputes whatever per-stage state the gate needs from the host IR,
-    ``exits(scores, stage)`` maps the batch's *cumulative* stage scores
-    to a boolean exit mask.
+    ``decide(scores, stage)`` is the **pure-jax** decision rule mapping
+    the batch's *cumulative* stage scores to a boolean exit mask, and
+    ``exits(scores, stage)`` is its numpy-facing wrapper.  The staged
+    host loop and the fused in-graph cascade (``cascade/fused.py``) both
+    run the *same* jitted ``decide``, so their per-stage exit counts are
+    identical by construction.
   * ``MarginGate`` / ``ProbaGate`` — heuristic confidence gates for
     classification forests: exit when the normalized top-1/top-2 margin
     (or the top-1 probability) clears a threshold.  ``threshold=inf``
@@ -37,37 +41,102 @@ import importlib
 from dataclasses import dataclass, field, fields
 from typing import Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from ..core.engine_select import bucket_batch
 from ..core.forest import Forest
 from ..core.quantize import leaf_scale
-from ..core.registry import normalize_scores, votes_mode
+from ..core.registry import votes_mode
 
 
-def _probs(scores: np.ndarray, votes: bool) -> np.ndarray:
-    """Cumulative stage scores (n, C) → per-row probabilities — the
-    shared ``registry.normalize_scores`` rule (it tolerates partial
-    sums: a vote prefix has less total mass, all-zero rows fall back to
-    uniform), so gate confidence and served ``predict_proba`` can never
-    drift apart.  Callers guard C >= 2."""
-    return normalize_scores(scores, votes=votes)
+def normalize_scores_jnp(scores: jnp.ndarray, votes: bool) -> jnp.ndarray:
+    """Traceable twin of ``registry.normalize_scores`` in canonical f32:
+    vote counts normalize by total mass (all-zero rows fall back to
+    uniform), margins/logits go through softmax.  It tolerates partial
+    sums — a vote prefix simply has less total mass — so gate confidence
+    and served ``predict_proba`` use the same rule.  Callers guard
+    C >= 2.  Every op lowers inside a Pallas kernel body, so the fused
+    cascade kernel can evaluate gates in-kernel."""
+    s = scores.astype(jnp.float32)
+    if votes:
+        v = jnp.maximum(s, 0.0)
+        tot = jnp.sum(v, axis=1, keepdims=True)
+        uniform = jnp.float32(1.0 / s.shape[1])
+        return jnp.where(tot > 0, v / jnp.where(tot > 0, tot, 1.0), uniform)
+    m = jnp.max(s, axis=1, keepdims=True)
+    e = jnp.exp(s - m)
+    return e / jnp.sum(e, axis=1, keepdims=True)
+
+
+def _f32_down(x64: np.ndarray) -> np.ndarray:
+    """f64 → f32 rounding toward -inf (exact values pass through)."""
+    x32 = x64.astype(np.float32)
+    hi = x32.astype(np.float64) > x64
+    return np.where(hi, np.nextafter(x32, -np.inf), x32).astype(np.float32)
+
+
+def _f32_up(x64: np.ndarray) -> np.ndarray:
+    """f64 → f32 rounding toward +inf (exact values pass through)."""
+    x32 = x64.astype(np.float32)
+    lo = x32.astype(np.float64) < x64
+    return np.where(lo, np.nextafter(x32, np.inf), x32).astype(np.float32)
+
+
+def _argmax_onehot(s: jnp.ndarray) -> jnp.ndarray:
+    """(n, C) → boolean one-hot of the *first* row maximum — matches
+    ``np.argmax`` tie-breaking without ``argmax``/``one_hot`` ops (both
+    awkward inside Mosaic kernel bodies: plain compare/cumsum lower
+    everywhere)."""
+    eq = s == jnp.max(s, axis=1, keepdims=True)
+    return eq & (jnp.cumsum(eq.astype(jnp.int32), axis=1) == 1)
 
 
 @dataclass
 class GatePolicy:
-    """Interface: subclasses implement ``exits`` (and usually ``prepare``).
+    """Interface: subclasses implement ``decide`` (and usually ``prepare``).
 
     ``prepare(forest, stages)`` is called once per cascade build with the
     *host* forest and the normalized stage boundaries (cumulative tree
-    counts, last == n_trees); ``exits(scores, stage)`` is called between
-    stages with the cumulative descaled scores of the still-active rows
-    and must return a boolean (n,) mask — True exits now."""
+    counts, last == n_trees).  ``decide(scores, stage)`` is the pure-jax
+    decision rule: cumulative descaled scores (n, C) f32 → boolean (n,)
+    mask, True exits now.  It must be traceable (the fused cascade calls
+    it inside one jitted program — for the bitvector Pallas path, inside
+    the kernel body itself), with ``stage`` a static Python int.
+
+    ``exits(scores, stage)`` is the numpy-facing wrapper the staged host
+    loop calls between stages: it pads to the power-of-two batch bucket
+    and runs the *same jitted* ``decide``, so staged and fused cascades
+    make bit-identical gate decisions by construction.  Third-party
+    policies may still override ``exits`` directly (numpy-only); such
+    policies work with the staged ``CascadePredictor`` but cannot be
+    fused."""
 
     def prepare(self, forest: Forest, stages: Sequence[int]) -> None:
-        pass
+        self._decide_jit = None
+
+    def decide(self, scores: jnp.ndarray, stage: int) -> jnp.ndarray:
+        raise NotImplementedError(
+            f"{type(self).__name__} defines no pure-jax decide(); "
+            "implement it (or override exits() and use the staged "
+            "CascadePredictor — fused execution requires decide)")
 
     def exits(self, scores: np.ndarray, stage: int) -> np.ndarray:
-        raise NotImplementedError
+        n = scores.shape[0]
+        if n == 0:
+            return np.zeros(0, dtype=bool)
+        fn = getattr(self, "_decide_jit", None)
+        if fn is None:
+            # cache per prepared instance: decide closes over prepared
+            # state, so prepare() resets the cache (set_policy copies
+            # the policy before preparing — a stale trace never leaks)
+            fn = self._decide_jit = jax.jit(self.decide,
+                                            static_argnums=(1,))
+        bucket = bucket_batch(n)
+        s = np.zeros((bucket,) + scores.shape[1:], dtype=np.float32)
+        s[:n] = scores
+        return np.asarray(fn(jnp.asarray(s), stage))[:n]
 
     def tag(self) -> str:
         """Short candidate-name tag (autotuner cache: distinct configs
@@ -88,16 +157,17 @@ class MarginGate(GatePolicy):
     _n_classes: int = field(default=1, init=False, repr=False, compare=False)
 
     def prepare(self, forest: Forest, stages: Sequence[int]) -> None:
+        super().prepare(forest, stages)
         self._votes = votes_mode(forest)
         self._n_classes = forest.n_classes
 
-    def exits(self, scores: np.ndarray, stage: int) -> np.ndarray:
-        n = scores.shape[0]
+    def decide(self, scores: jnp.ndarray, stage: int) -> jnp.ndarray:
         if self._n_classes < 2 or not np.isfinite(self.threshold):
-            return np.zeros(n, dtype=bool)
-        p = _probs(scores, self._votes)
-        top2 = np.partition(p, -2, axis=1)[:, -2:]
-        return (top2[:, 1] - top2[:, 0]) >= self.threshold
+            return jnp.zeros(scores.shape[0], dtype=bool)
+        p = normalize_scores_jnp(scores, votes=self._votes)
+        top = jnp.max(p, axis=1)
+        second = jnp.max(jnp.where(_argmax_onehot(p), -jnp.inf, p), axis=1)
+        return (top - second) >= jnp.float32(self.threshold)
 
     def tag(self) -> str:
         return f"margin{self.threshold:g}"
@@ -108,11 +178,11 @@ class ProbaGate(MarginGate):
     """Exit when the top-1 probability >= ``threshold``."""
     threshold: float = 0.95
 
-    def exits(self, scores: np.ndarray, stage: int) -> np.ndarray:
-        n = scores.shape[0]
+    def decide(self, scores: jnp.ndarray, stage: int) -> jnp.ndarray:
         if self._n_classes < 2 or not np.isfinite(self.threshold):
-            return np.zeros(n, dtype=bool)
-        return _probs(scores, self._votes).max(axis=1) >= self.threshold
+            return jnp.zeros(scores.shape[0], dtype=bool)
+        p = normalize_scores_jnp(scores, votes=self._votes)
+        return jnp.max(p, axis=1) >= jnp.float32(self.threshold)
 
     def tag(self) -> str:
         return f"proba{self.threshold:g}"
@@ -148,6 +218,7 @@ class ScoreBoundGate(GatePolicy):
                                             repr=False, compare=False)
 
     def prepare(self, forest: Forest, stages: Sequence[int]) -> None:
+        super().prepare(forest, stages)
         lv = np.asarray(forest.leaf_value, dtype=np.float64)
         lv = lv / leaf_scale(forest)                      # descaled, like scores
         T, L, C = lv.shape
@@ -161,22 +232,30 @@ class ScoreBoundGate(GatePolicy):
         suf_max = np.concatenate([np.cumsum(tree_max[::-1], axis=0)[::-1],
                                   np.zeros((1, C))])
         bounds = [int(min(s, T)) for s in stages]
-        self._rest_min = np.stack([suf_min[b] for b in bounds])   # (K, C)
-        self._rest_max = np.stack([suf_max[b] for b in bounds])
+        # f32 (decide's canonical dtype), rounded *outward*: a
+        # round-to-nearest cast could shrink an interval by 1 ulp and
+        # make a "provably decided" row exit unsoundly on float forests
+        # (quantized bounds are small integers — the cast is exact there)
+        self._rest_min = _f32_down(np.stack([suf_min[b] for b in bounds]))
+        self._rest_max = _f32_up(np.stack([suf_max[b] for b in bounds]))
 
-    def exits(self, scores: np.ndarray, stage: int) -> np.ndarray:
-        s = np.asarray(scores, dtype=np.float64)
-        lo = s + self._rest_min[stage]
-        hi = s + self._rest_max[stage]
+    def decide(self, scores: jnp.ndarray, stage: int) -> jnp.ndarray:
+        s = scores.astype(jnp.float32)
+        C = s.shape[1]
+        # per-class bounds as python-float literals, not a constant array:
+        # Pallas kernel bodies reject captured array constants, and the
+        # f32 → float → f32 trip is value-exact
+        lo = jnp.stack([s[:, c] + float(self._rest_min[stage][c])
+                        for c in range(C)], axis=1)
+        hi = jnp.stack([s[:, c] + float(self._rest_max[stage][c])
+                        for c in range(C)], axis=1)
         if s.shape[1] < 2:
             return ((lo[:, 0] > self.decision - self.slack) |
                     (hi[:, 0] < self.decision + self.slack))
-        c = s.argmax(axis=1)
-        rows = np.arange(s.shape[0])
-        best_lo = lo[rows, c]
-        other_hi = hi.copy()
-        other_hi[rows, c] = -np.inf
-        return best_lo > other_hi.max(axis=1) - self.slack
+        onehot = _argmax_onehot(s)
+        best_lo = jnp.sum(jnp.where(onehot, lo, 0.0), axis=1)
+        other_hi = jnp.max(jnp.where(onehot, -jnp.inf, hi), axis=1)
+        return best_lo > other_hi - jnp.float32(self.slack)
 
     def tag(self) -> str:
         t = "bound"

@@ -48,20 +48,26 @@ class CascadeSpec:
     """Declarative cascade request: stage boundaries (cumulative tree
     counts — ``(16, 48, 192)`` evaluates 16 trees, then 32 more, then
     144 more) plus the gate policy.  ``policy=None`` → ``MarginGate(0.9)``.
+    ``fused=True`` lowers to ``FusedCascadePredictor`` (one jitted
+    computation, zero host syncs between stages — docs/CASCADE.md).
     Passed to ``core.compile_forest(..., cascade=...)`` /
     ``compile_plan`` and swept by the autotuner via ``cascade_specs=``."""
     stages: tuple
     policy: Optional[GatePolicy] = None
+    fused: bool = False
 
     def resolved_policy(self) -> GatePolicy:
         return self.policy if self.policy is not None else default_policy()
 
     def tag(self) -> str:
-        """Autotuner candidate tag, e.g. ``cascade=16/48:margin0.9``.
-        Every field that changes the compiled variant participates, so
-        distinct cascades never alias in the timing cache."""
+        """Autotuner candidate tag, e.g. ``cascade=16/48:margin0.9`` or
+        ``cascade-fused=16/48:margin0.9``.  Every field that changes the
+        compiled variant participates, so distinct cascades never alias
+        in the timing cache — fused tags also key-miss any pre-fusion
+        cache entries."""
         s = "/".join(str(int(x)) for x in self.stages)
-        return f"cascade={s}:{self.resolved_policy().tag()}"
+        kind = "cascade-fused" if self.fused else "cascade"
+        return f"{kind}={s}:{self.resolved_policy().tag()}"
 
 
 def normalize_stages(stages: Sequence[int], n_trees: int) -> tuple:
@@ -138,13 +144,26 @@ class CascadePredictor:
         self.policy = copy.copy(policy)
         self.policy.prepare(self.forest, self.stages)
 
+    #: class-level flag — ``FusedCascadePredictor`` flips it; drives the
+    #: spec/tag/describe/serialization split between the two variants
+    fused = False
+
     @property
     def spec(self) -> CascadeSpec:
-        return CascadeSpec(stages=self.stages, policy=self.policy)
+        return CascadeSpec(stages=self.stages, policy=self.policy,
+                           fused=self.fused)
 
     def describe(self) -> str:
         s = "/".join(str(x) for x in self.stages)
-        return f"stages={s} policy={self.policy.tag()}"
+        d = f"stages={s} policy={self.policy.tag()}"
+        return f"fused {d}" if self.fused else d
+
+    @property
+    def host_syncs(self) -> int:
+        """Device→host synchronizations per ``predict`` batch: the staged
+        loop materializes every stage's scores on the host for the gate
+        (one sync per stage); the fused predictor overrides this with 1."""
+        return len(self.stages)
 
     # ------------------------------------------------------------ serving
     def reset_exit_stats(self) -> None:
@@ -182,7 +201,11 @@ class CascadePredictor:
         n = X.shape[0]
         bucket = bucket_batch(n)
         if bucket > n:
-            X = np.concatenate([X, np.repeat(X[:1], bucket - n, axis=0)])
+            # zero rows, not repeats of row 0: a pathological first row
+            # would otherwise be re-evaluated up to bucket - n times per
+            # stage; the padding is sliced off before any gate sees it
+            X = np.concatenate(
+                [X, np.zeros((bucket - n,) + X.shape[1:], dtype=X.dtype)])
         pred = self.stage_predictors[k]
         out = pred.predict_transformed(X) if self._pre_transform \
             else pred.predict(X)

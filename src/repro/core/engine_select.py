@@ -263,11 +263,15 @@ def _candidate_factories(forest: Forest, engines: tuple,
     ``layout_specs[engine]`` (engine-kw overrides such as bitmm's
     ``tree_chunk`` or gemm block sizes), and
     ``<engine>@cascade=16/48:<policy>`` per ``CascadeSpec`` (staged
-    evaluation, ``repro.cascade``).  Opt and cascade tags participate in
+    evaluation, ``repro.cascade``) — or ``<engine>@cascade-fused=...``
+    when the spec sets ``fused=True`` (one-jit execution,
+    ``cascade/fused.py``; pass both variants to time staged vs fused).
+    Opt and cascade tags participate in
     cache entries the same way the ``_dev{n}`` key component does for
     sharding: entries written before those axes existed simply lack the
     tagged timings, so the sweep key-misses them and re-benchmarks
-    instead of mis-hitting.  With ``n_devices > 1`` each candidate is
+    instead of mis-hitting — ``cascade-fused`` tags likewise key-miss
+    every pre-fusion cache entry.  With ``n_devices > 1`` each candidate is
     wrapped tree-sharded (non-shardable engines are rejected up front;
     cascade + sharding is rejected too).
 
@@ -363,7 +367,9 @@ def choose(forest: Forest, batch: int, *, engines=None,
     wrapper instead.  Cascade candidates (``cascade_specs=``) time the
     gated path on the synthetic benchmark batch — exit fractions on real
     traffic depend on the data, so treat a cascade winner as a hint and
-    benchmark on representative rows when it matters.  Cache hits
+    benchmark on representative rows when it matters; include
+    ``CascadeSpec(..., fused=True)`` entries to race the fused one-jit
+    execution against the staged host loop.  Cache hits
     (in-memory, then the JSON file at
     ``cache_path``) skip the sweep and only build the winning predictor.
     A cached entry counts as a hit only if its accumulated sweeps covered

@@ -197,20 +197,23 @@ def lower(forest: Forest, plan: CompilePlan, ctx: dict):
 
     With ``plan.cascade`` set, the forest is partitioned into tree-prefix
     stages and each stage lowers through the same engine builder; the
-    cascade is recorded as its own plan stage (docs/CASCADE.md)."""
+    cascade is recorded as its own plan stage (docs/CASCADE.md).
+    ``CascadeSpec(fused=True)`` picks the fused predictor — one jitted
+    computation instead of a per-stage host loop."""
     spec = registry.get(plan.engine, plan.backend)
     if plan.cascade is not None:
         if plan.n_devices > 1:
             raise ValueError(
                 "cascade + tree-sharded execution is not supported "
                 f"(n_devices={plan.n_devices}); pick one")
-        from ..cascade import CascadePredictor
-        pred = CascadePredictor(forest, plan.cascade, engine=plan.engine,
-                                backend=plan.backend,
-                                engine_kw=plan.engine_kw)
+        from ..cascade import CascadePredictor, FusedCascadePredictor
+        fused = bool(getattr(plan.cascade, "fused", False))
+        cls = FusedCascadePredictor if fused else CascadePredictor
+        pred = cls(forest, plan.cascade, engine=plan.engine,
+                   backend=plan.backend, engine_kw=plan.engine_kw)
         plan.record("cascade", pred.describe())
-        plan.record("lower", f"{spec.tune_name} × {len(pred.stages)} "
-                             "cascade stages")
+        stage_note = f"{spec.tune_name} × {len(pred.stages)} cascade stages"
+        plan.record("lower", stage_note + (" (fused)" if fused else ""))
         pred.plan = plan
         return pred
     if plan.n_devices > 1:

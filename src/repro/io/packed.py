@@ -339,6 +339,7 @@ def _save_cascade(pred, path: PathLike, extra: Optional[dict]) -> None:
         "kind": "cascade",
         "engine": pred.engine, "backend": pred.backend,
         "tune_name": spec.tune_name,
+        "fused": bool(getattr(pred, "fused", False)),
         "stages": [int(s) for s in pred.stages],
         "policy": policy_to_header(pred.policy),
         "engine_kw": {k: _encode_scalar(v)
@@ -357,8 +358,11 @@ def _load_cascade(header: dict, npz, path: PathLike):
     """Rebuild a cascade artifact: unpack the forest once, rebuild each
     stage's compiled arrays against its tree-slice of the IR, restore the
     gate policy from its header config — predictions are bit-identical to
-    the saved cascade's (same stage arrays, same thresholds)."""
-    from ..cascade import CascadePredictor, CascadeSpec, tree_slice
+    the saved cascade's (same stage arrays, same thresholds).  The
+    ``fused`` header flag restores the fused variant (the loaded stage
+    arrays back its single jitted program)."""
+    from ..cascade import (CascadePredictor, CascadeSpec,
+                           FusedCascadePredictor, tree_slice)
     from ..cascade.policy import policy_from_header
     from ..core import registry
     from ..core.pipeline import CompilePlan
@@ -376,8 +380,11 @@ def _load_cascade(header: dict, npz, path: PathLike):
     policy = policy_from_header(header["policy"])
     engine_kw = {k: _decode_scalar(v)
                  for k, v in (header.get("engine_kw") or {}).items()}
-    pred = CascadePredictor(
-        forest, CascadeSpec(stages=tuple(stages), policy=policy),
+    fused = bool(header.get("fused", False))
+    cls = FusedCascadePredictor if fused else CascadePredictor
+    pred = cls(
+        forest,
+        CascadeSpec(stages=tuple(stages), policy=policy, fused=fused),
         engine=header["engine"], backend=header["backend"],
         engine_kw=engine_kw, stage_predictors=stage_preds)
     plan = CompilePlan(engine=header["engine"], backend=header["backend"])

@@ -2,15 +2,18 @@
 
 quickscorer_kernel     — bitvector QS/VQS/RS forest engine (VPU + MXU
                          one-hot gathers); the paper's technique, tiled
+cascade_kernel         — fused cascade over QS stages: in-kernel gate +
+                         survivor mask in scratch (docs/CASCADE.md)
 gemm_forest_kernel     — Hummingbird-style MXU forest engine (beyond-paper)
 flash_attention_kernel — GQA flash attention (LM-side hot-spot; §Perf 9)
 ops                    — jit'd wrappers / predictors
 ref                    — pure-jnp oracles
 """
 from . import ops, ref
+from .cascade_kernel import cascade_qs_forward
 from .flash_attention_kernel import flash_attention_bshd, flash_forward
 from .gemm_forest_kernel import gemm_forward
 from .quickscorer_kernel import qs_forward
 
-__all__ = ["ops", "ref", "gemm_forward", "qs_forward", "flash_forward",
-           "flash_attention_bshd"]
+__all__ = ["ops", "ref", "cascade_qs_forward", "gemm_forward", "qs_forward",
+           "flash_forward", "flash_attention_bshd"]

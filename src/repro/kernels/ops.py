@@ -76,9 +76,13 @@ class _PallasPredictor(BasePredictor):
         return len(self._buckets)
 
 
-def pallas_qs_predictor(forest: Forest, block_b: int = 128, block_t: int = 8,
-                        interpret: bool = True) -> _PallasPredictor:
-    """QuickScorer bitvector engine, Pallas backend."""
+def _qs_arrays(forest: Forest, block_t: int):
+    """QuickScorer kernel arrays (feat, thr, masks, init_idx, leaf_val),
+    tree axis padded to ``block_t`` with inert trees (+inf thresholds →
+    no predicate fires, init 0 → leaf 0 → all-zero leaf row).  Shared by
+    the per-forest predictor and the fused cascade builder, which preps
+    each stage slice independently so stage scores match the staged
+    per-stage kernels bit-for-bit."""
     thr_pad = _thr_pad_value(forest)
     feat = _pad_to(np.maximum(forest.feature, 0).astype(np.int32), 0, block_t)
     thr = forest.threshold.astype(np.float32).copy()
@@ -89,6 +93,13 @@ def pallas_qs_predictor(forest: Forest, block_b: int = 128, block_t: int = 8,
     init_idx = _pad_to(forest.init_leafidx(), 0, block_t)           # pad: 0
     lv = forest.leaf_value.astype(np.float32)
     leaf_val = _pad_to(lv, 0, block_t)                              # pad: 0
+    return feat, thr, masks, init_idx, leaf_val
+
+
+def pallas_qs_predictor(forest: Forest, block_b: int = 128, block_t: int = 8,
+                        interpret: bool = True) -> _PallasPredictor:
+    """QuickScorer bitvector engine, Pallas backend."""
+    feat, thr, masks, init_idx, leaf_val = _qs_arrays(forest, block_t)
 
     feat_j, thr_j = jnp.asarray(feat), jnp.asarray(thr)
     masks_j, init_j = jnp.asarray(masks), jnp.asarray(init_idx)
@@ -101,6 +112,44 @@ def pallas_qs_predictor(forest: Forest, block_b: int = 128, block_t: int = 8,
             block_b=block_b, block_t=block_t, interpret=interpret)
 
     return _PallasPredictor(forest, fn, block_b)
+
+
+def pallas_fused_cascade_qs(forest: Forest, stages, policy, *,
+                            block_b: int = 128, block_t: int = 8,
+                            interpret: bool = True):
+    """Single-kernel cascade for the bitvector engine: all stages + the
+    in-kernel gate (``cascade_kernel.py``).  Returns a jitted
+    ``(Xp (B, d) f32, valid (B,) bool) -> (scores (B, C) descaled,
+    exit_stage (B, 1) i32)`` with ``B`` a multiple of ``block_b``;
+    ``FusedCascadePredictor`` owns the batch padding and exit-count
+    reduction around it."""
+    from ..cascade.predictor import tree_slice
+    from . import cascade_kernel
+
+    bounds = (0,) + tuple(stages)
+    parts = [_qs_arrays(tree_slice(forest, bounds[k], bounds[k + 1]), block_t)
+             for k in range(len(stages))]
+    feat, thr, masks, init_idx, leaf_val = (
+        np.concatenate([p[i] for p in parts]) for i in range(5))
+    stage_bounds = (0,) + tuple(
+        np.cumsum([p[0].shape[0] for p in parts]).tolist())
+    scale = leaf_scale(forest)
+
+    feat_j, thr_j = jnp.asarray(feat), jnp.asarray(thr)
+    masks_j, init_j = jnp.asarray(masks), jnp.asarray(init_idx)
+    leaf_j = jnp.asarray(leaf_val)
+
+    @jax.jit
+    def fn(Xp, valid):
+        scores, exit_stage = cascade_kernel.cascade_qs_forward(
+            Xp, valid.astype(jnp.float32)[:, None],
+            feat_j, thr_j, masks_j, init_j, leaf_j,
+            stage_bounds=stage_bounds, policy=policy,
+            inv_scale=1.0 / scale, block_b=block_b, interpret=interpret)
+        # power-of-two scale: the multiply is exact on quantized forests
+        return scores * jnp.float32(1.0 / scale), exit_stage
+
+    return fn
 
 
 def pallas_bitmm_predictor(forest: Forest, block_b: int = 128,

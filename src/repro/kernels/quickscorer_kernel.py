@@ -47,40 +47,42 @@ def _ctz(w: jnp.ndarray) -> jnp.ndarray:
     return jax.lax.population_count(lsb - jnp.uint32(1)).astype(jnp.int32)
 
 
-def _qs_kernel(x_ref, feat_ref, thr_ref, masks_ref, init_ref, leaf_ref,
-               out_ref, *, n_leaves: int):
-    """One (block_b, block_t) tile.
+def qs_tile_scores(x, feat, thr, masks, init_idx, leaf_val):
+    """Score one (instances × trees) tile — the QuickScorer traversal
+    shared by the plain kernel and the fused cascade kernel
+    (``cascade_kernel.py``).  Operates on *values* (already read from
+    refs), so callers can slice per-stage tree ranges statically.
 
-    x_ref     (Bt, d)      f32   — inputs (quantized forests: ints cast f32)
-    feat_ref  (Tt, N)      i32   — per-node feature id (padding: 0)
-    thr_ref   (Tt, N)      f32   — thresholds (padding: +inf → never fires)
-    masks_ref (Tt, N, W)   u32   — interval bitmasks
-    init_ref  (Tt, W)      u32   — initial leafidx (padding trees: 0)
-    leaf_ref  (Tt, L, C)   f32   — leaf table (padding trees: 0)
-    out_ref   (Bt, C)      f32   — accumulated over the tree grid axis
+    x         (Bt, d)      f32   — inputs (quantized forests: ints cast f32)
+    feat      (Tt, N)      i32   — per-node feature id (padding: 0)
+    thr       (Tt, N)      f32   — thresholds (padding: +inf → never fires)
+    masks     (Tt, N, W)   u32   — interval bitmasks
+    init_idx  (Tt, W)      u32   — initial leafidx (padding trees: 0)
+    leaf_val  (Tt, L, C)   f32   — leaf table (padding trees: 0)
+    returns   (Bt, C)      f32   — tile partial scores (raw leaf units)
     """
-    Bt, d = x_ref.shape
-    Tt, N = feat_ref.shape
-    W = masks_ref.shape[-1]
-    L, C = leaf_ref.shape[-2:]
+    Bt, d = x.shape
+    Tt, N = feat.shape
+    W = masks.shape[-1]
+    L, C = leaf_val.shape[-2:]
 
-    x = x_ref[...].astype(jnp.float32)
-    feat = feat_ref[...].reshape(Tt * N)
+    x = x.astype(jnp.float32)
+    flat = feat.reshape(Tt * N)
     # ---- feature select via one-hot matmul (MXU) ------------------------- #
     onehot = (jax.lax.broadcasted_iota(jnp.int32, (d, Tt * N), 0)
-              == feat[None, :]).astype(jnp.float32)
+              == flat[None, :]).astype(jnp.float32)
     # HIGHEST: the select must return x bit-exactly or near-threshold
     # predicates flip under TPU bf16 multiplies.
     xsel = jnp.dot(x, onehot, precision=jax.lax.Precision.HIGHEST,
                    preferred_element_type=jnp.float32)           # (Bt, Tt*N)
-    cond = xsel.reshape(Bt, Tt, N) > thr_ref[...][None]          # (Bt, Tt, N)
+    cond = xsel.reshape(Bt, Tt, N) > thr[None]                   # (Bt, Tt, N)
 
     # ---- predicated mask AND-reduction (VPU) ----------------------------- #
     ones = jnp.uint32(0xFFFFFFFF)
-    sel = jnp.where(cond[..., None], masks_ref[...][None], ones)  # (Bt,Tt,N,W)
+    sel = jnp.where(cond[..., None], masks[None], ones)           # (Bt,Tt,N,W)
     leafidx = jax.lax.reduce(sel, ones, jax.lax.bitwise_and,
                              dimensions=(2,))                     # (Bt, Tt, W)
-    leafidx = leafidx & init_ref[...][None]
+    leafidx = leafidx & init_idx[None]
 
     # ---- exit leaf: first nonzero word, LSB isolate ----------------------- #
     leaf = jnp.zeros((Bt, Tt), dtype=jnp.int32)
@@ -90,16 +92,24 @@ def _qs_kernel(x_ref, feat_ref, thr_ref, masks_ref, init_ref, leaf_ref,
         hit = (word != 0) & (~found)
         leaf = jnp.where(hit, w * WORD + _ctz(word), leaf)
         found = found | hit
-    # padding trees: found stays False → leaf 0 → leaf_ref row is zeros.
+    # padding trees: found stays False → leaf 0 → leaf_val row is zeros.
 
     # ---- leaf one-hot × leaf table (MXU) ---------------------------------- #
     lhot = (jax.lax.broadcasted_iota(jnp.int32, (Bt, Tt, L), 2)
             == leaf[..., None]).astype(jnp.float32)
     part = jax.lax.dot_general(
-        lhot, leaf_ref[...].astype(jnp.float32),
+        lhot, leaf_val.astype(jnp.float32),
         dimension_numbers=(((2,), (1,)), ((1,), (0,))),
         preferred_element_type=jnp.float32)                      # (Tt, Bt, C)
-    part = part.sum(axis=0)                                      # (Bt, C)
+    return part.sum(axis=0)                                      # (Bt, C)
+
+
+def _qs_kernel(x_ref, feat_ref, thr_ref, masks_ref, init_ref, leaf_ref,
+               out_ref, *, n_leaves: int):
+    """One (block_b, block_t) tile — ref plumbing around
+    ``qs_tile_scores``, accumulating over the tree grid axis."""
+    part = qs_tile_scores(x_ref[...], feat_ref[...], thr_ref[...],
+                          masks_ref[...], init_ref[...], leaf_ref[...])
 
     @pl.when(pl.program_id(1) == 0)
     def _init():

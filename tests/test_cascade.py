@@ -6,10 +6,11 @@ import numpy as np
 import pytest
 
 from repro import core, io
-from repro.cascade import (CascadePredictor, CascadeSpec, MarginGate,
-                           ProbaGate, ScoreBoundGate, calibrate,
-                           normalize_stages, policy_from_header,
-                           policy_to_header, simulate_gate, tree_slice)
+from repro.cascade import (CascadePredictor, CascadeSpec,
+                           FusedCascadePredictor, MarginGate, ProbaGate,
+                           ScoreBoundGate, calibrate, normalize_stages,
+                           policy_from_header, policy_to_header,
+                           simulate_gate, tree_slice)
 from repro.inference.server import ForestServer, ServerStats
 
 
@@ -276,6 +277,146 @@ def test_autotuned_cascade_winner_has_clean_exit_stats(class_forest,
                              repeats=2)
     assert c.engine == cascade_name
     assert isinstance(c.predictor, CascadePredictor)
+    assert c.predictor.exit_counts.sum() == 0
+    engine_select.clear_cache()
+
+
+# --------------------------------------------------------------------------- #
+# satellite regression: survivor padding must be zero rows, not repeats
+# of row 0 — and padding must never leak into gates or exit accounting
+# --------------------------------------------------------------------------- #
+def test_stage_padding_rows_are_zero_and_inert(qclass_forest, monkeypatch):
+    casc = CascadePredictor(qclass_forest,
+                            CascadeSpec((6, 24), MarginGate(0.3)))
+    captured = []
+    stage0 = casc.stage_predictors[0]
+    orig = stage0.predict_transformed
+
+    def spy(X):
+        captured.append(np.asarray(X).copy())
+        return orig(X)
+
+    monkeypatch.setattr(stage0, "predict_transformed", spy)
+    X = _X(qclass_forest, B=13, seed=30)
+    X[0] = 50.0                  # pathological first row
+    got = casc.predict(X)
+    counts = casc.last_exit_counts.copy()
+    assert captured[0].shape[0] == 16
+    assert not np.any(captured[0][13:]), \
+        "bucket padding must be zero rows, not row-0 repeats"
+    # padding inertness: each row's score and exit stage are what the
+    # row gets when predicted alone (any padding influence would shift
+    # the gate statistics of some batch composition)
+    casc.reset_exit_stats()
+    rows, stages = [], []
+    for i in range(13):
+        rows.append(casc.predict(X[i:i + 1]))
+        stages.append(int(np.flatnonzero(casc.last_exit_counts)[0]))
+    np.testing.assert_array_equal(got, np.concatenate(rows))
+    np.testing.assert_array_equal(
+        np.bincount(stages, minlength=len(casc.stages)), counts)
+
+
+# --------------------------------------------------------------------------- #
+# fused execution: one jitted computation, same observable behavior
+# --------------------------------------------------------------------------- #
+def test_fused_spec_tag_keys_new_cache_entries(qclass_forest):
+    staged_spec = CascadeSpec((6, 24), MarginGate(0.3))
+    fused_spec = CascadeSpec((6, 24), MarginGate(0.3), fused=True)
+    assert "cascade-fused=" in fused_spec.tag()
+    assert fused_spec.tag() != staged_spec.tag()
+
+
+def test_compile_forest_fused_plan_records(qclass_forest):
+    pred = core.compile_forest(qclass_forest, engine="bitmm",
+                               cascade=CascadeSpec((8, 24), fused=True))
+    assert isinstance(pred, FusedCascadePredictor) and pred.fused
+    assert "(fused)" in pred.plan.describe()
+    assert "fused" in pred.describe()
+    assert pred.host_syncs == 1
+
+
+def test_staged_host_syncs_is_stage_count(qclass_forest):
+    casc = CascadePredictor(qclass_forest, CascadeSpec((6, 12, 24)))
+    assert casc.host_syncs == 3
+
+
+def test_fused_matches_staged_across_batch_sizes(qclass_forest):
+    staged = CascadePredictor(qclass_forest,
+                              CascadeSpec((6, 12, 24), MarginGate(0.3)))
+    fused = FusedCascadePredictor(
+        qclass_forest, CascadeSpec((6, 12, 24), MarginGate(0.3),
+                                   fused=True))
+    for B in (1, 3, 37, 64):
+        X = _X(qclass_forest, B=B, seed=B)
+        np.testing.assert_array_equal(fused.predict(X), staged.predict(X),
+                                      err_msg=f"B={B}")
+        np.testing.assert_array_equal(fused.last_exit_counts,
+                                      staged.last_exit_counts,
+                                      err_msg=f"B={B}")
+    assert fused.exit_counts.sum() == staged.exit_counts.sum() == 105
+
+
+def test_fused_empty_batch(qclass_forest):
+    fused = FusedCascadePredictor(qclass_forest,
+                                  CascadeSpec((6, 12), fused=True))
+    out = fused.predict(np.zeros((0, qclass_forest.n_features)))
+    assert out.shape == (0, 3)
+    assert fused.last_exit_counts.sum() == 0
+
+
+def test_fused_set_policy_rebuilds_program(qclass_forest):
+    """The fused trace closes over the gate — swapping the policy must
+    swap the compiled behavior, not serve a stale jit."""
+    fused = FusedCascadePredictor(
+        qclass_forest, CascadeSpec((6, 12, 24), MarginGate(np.inf),
+                                   fused=True))
+    X = _X(qclass_forest, B=20, seed=31)
+    fused.predict(X)
+    assert fused.last_exit_counts.tolist() == [0, 0, 20]   # never exits
+    fused.set_policy(MarginGate(0.0))
+    fused.predict(X)
+    assert fused.last_exit_counts.tolist() == [20, 0, 0]   # all exit at 0
+
+
+def test_fused_server_reports_exit_fractions(qclass_forest):
+    """The in-graph exit-count vector must feed ServerStats exactly like
+    the staged loop's host-side accounting."""
+    fused = core.compile_forest(qclass_forest, engine="bitvector",
+                                cascade=CascadeSpec((6, 24),
+                                                    MarginGate(0.3),
+                                                    fused=True))
+    srv = ForestServer(fused, max_batch=8, max_wait_ms=1.0)
+    X = _X(qclass_forest, B=24, seed=12)
+    for i in range(24):
+        srv.submit(X[i], arrival_s=float(i) * 1e-4)
+    srv.flush(now_s=1.0)
+    s = srv.stats.summary()
+    assert len(s["exit_fractions"]) == 2
+    np.testing.assert_allclose(np.sum(s["exit_fractions"]), 1.0)
+    assert sum(srv.stats.stage_exit_counts) == 24
+
+
+def test_autotuner_accepts_fused_candidates(class_forest, monkeypatch):
+    """A fused spec flows through engine_select.choose under its
+    cascade-fused tag (key-missing pre-fusion cache entries)."""
+    from repro.core import engine_select
+    engine_select.clear_cache()
+    spec = CascadeSpec(stages=(2, 12), policy=MarginGate(0.0), fused=True)
+    assert "cascade-fused=" in spec.tag()
+
+    real_bench = engine_select._bench_once
+
+    def rigged(pred, X, repeats):
+        real_bench(pred, X, repeats)
+        return 0.0 if isinstance(pred, CascadePredictor) else 1.0
+
+    monkeypatch.setattr(engine_select, "_bench_once", rigged)
+    c = engine_select.choose(class_forest, 16, engines=("qs",),
+                             cascade_specs=(spec,), cache_path=None,
+                             repeats=2)
+    assert c.engine == f"qs@{spec.tag()}"
+    assert isinstance(c.predictor, FusedCascadePredictor)
     assert c.predictor.exit_counts.sum() == 0
     engine_select.clear_cache()
 

@@ -284,8 +284,8 @@ def test_import_compile_save_load_differential(tmp_path):
 # cascade conformance: a cascade whose gate never fires computes the same
 # function as the underlying engine (docs/CASCADE.md)
 # --------------------------------------------------------------------------- #
-from repro.cascade import CascadePredictor, CascadeSpec, MarginGate, \
-    ScoreBoundGate
+from repro.cascade import CascadePredictor, CascadeSpec, \
+    FusedCascadePredictor, MarginGate, ScoreBoundGate
 
 CASCADE_CASES = ["mixed_stump_and_deep", "multiclass_stumps",
                  "unused_features"]
@@ -362,6 +362,111 @@ def test_cascade_roundtrip_bitexact(case, engine, tmp_path):
     assert loaded.stages == casc.stages
     assert loaded.policy == casc.policy
     np.testing.assert_array_equal(casc.predict(X), loaded.predict(X),
+                                  err_msg=f"{case}/{engine}")
+
+
+# --------------------------------------------------------------------------- #
+# fused vs staged: the one-jit execution (cascade/fused.py) must be
+# indistinguishable from the host loop — scores bit-exact on quantized
+# forests, identical class decisions, identical per-stage exit counts —
+# for every registered engine/backend and across save/load
+# --------------------------------------------------------------------------- #
+# all-exit-at-stage-0 / mixed / never-exit: the three gate regimes hit
+# the no-op early-termination branch, partial compaction, and the full
+# every-stage path respectively
+FIRING_THRESHOLDS = [0.0, 0.5, np.inf]
+
+
+def _casc_pair(qf, name, backend, policy):
+    kw = {"interpret": True} if backend == "pallas" else {}
+    staged = CascadePredictor(qf, CascadeSpec(_mid_stages(qf), policy),
+                              engine=name, backend=backend, engine_kw=kw)
+    fused = FusedCascadePredictor(
+        qf, CascadeSpec(_mid_stages(qf), policy, fused=True),
+        engine=name, backend=backend, engine_kw=kw)
+    return staged, fused
+
+
+@pytest.mark.parametrize("name,backend", COMBOS, ids=COMBO_IDS)
+@pytest.mark.parametrize("case", CASCADE_CASES)
+def test_fused_matches_staged_quantized_bitexact(case, name, backend):
+    forest = ADVERSARIAL[case]()
+    X = _X(forest, B=12, seed=17)
+    qf = core.quantize_forest(forest, X)
+    for thr in FIRING_THRESHOLDS:
+        staged, fused = _casc_pair(qf, name, backend, MarginGate(thr))
+        tag = f"{case}/{name}/{backend}/margin{thr}"
+        np.testing.assert_array_equal(fused.predict(X), staged.predict(X),
+                                      err_msg=tag)
+        np.testing.assert_array_equal(fused.last_exit_counts,
+                                      staged.last_exit_counts, err_msg=tag)
+        np.testing.assert_array_equal(fused.predict_class(X),
+                                      staged.predict_class(X), err_msg=tag)
+
+
+@pytest.mark.parametrize("name,backend", COMBOS, ids=COMBO_IDS)
+@pytest.mark.parametrize("case", ["mixed_stump_and_deep",
+                                  "multiclass_stumps"])
+def test_fused_sound_gate_matches_staged_and_base(case, name, backend):
+    """ScoreBoundGate exercises both decide paths (C=1 decision band,
+    C>1 interval dominance); soundness means class decisions also equal
+    the plain engine's."""
+    forest = ADVERSARIAL[case]()
+    X = _X(forest, B=12, seed=18)
+    qf = core.quantize_forest(forest, X)
+    staged, fused = _casc_pair(qf, name, backend, ScoreBoundGate())
+    tag = f"{case}/{name}/{backend}"
+    np.testing.assert_array_equal(fused.predict(X), staged.predict(X),
+                                  err_msg=tag)
+    np.testing.assert_array_equal(fused.last_exit_counts,
+                                  staged.last_exit_counts, err_msg=tag)
+    if forest.n_classes > 1:
+        base = _compile(qf, name, backend)
+        np.testing.assert_array_equal(fused.predict_class(X),
+                                      base.predict_class(X), err_msg=tag)
+
+
+def test_fused_exit_counts_nontrivial_and_engine_independent():
+    """Guard against a vacuous equivalence: on this forest the gate
+    splits the batch across stages (neither all-exit nor none), and the
+    per-stage counts agree across every XLA engine and with staged."""
+    forest = core.random_forest_ir(12, 16, 6, n_classes=3, seed=7,
+                                   full=False)
+    X = np.random.default_rng(20).normal(0, 2.0, size=(33, 6))
+    qf = core.quantize_forest(forest, X)
+    seen = set()
+    for name in JAX_ENGINES:
+        staged, fused = _casc_pair(qf, name, "jax", MarginGate(0.35))
+        staged.predict(X)
+        fused.predict(X)
+        np.testing.assert_array_equal(fused.last_exit_counts,
+                                      staged.last_exit_counts, err_msg=name)
+        seen.add(tuple(fused.last_exit_counts))
+    assert len(seen) == 1
+    counts = next(iter(seen))
+    assert 0 < counts[0] < 33, f"gate never/always fired: {counts}"
+
+
+@pytest.mark.parametrize("engine", JAX_ENGINES)
+@pytest.mark.parametrize("case", CASCADE_CASES)
+def test_fused_roundtrip_bitexact(case, engine, tmp_path):
+    """save → load restores a FusedCascadePredictor whose scores and
+    exit counts are bit-identical to the in-memory fused predictor."""
+    forest = ADVERSARIAL[case]()
+    X = _X(forest, B=10, seed=19)
+    qf = core.quantize_forest(forest, X)
+    fused = FusedCascadePredictor(
+        qf, CascadeSpec(_mid_stages(qf), MarginGate(0.5), fused=True),
+        engine=engine)
+    p = str(tmp_path / "fused.repro.npz")
+    io.save_predictor(fused, p)
+    loaded = io.load_predictor(p)
+    assert isinstance(loaded, FusedCascadePredictor) and loaded.fused
+    assert loaded.spec.fused and loaded.stages == fused.stages
+    np.testing.assert_array_equal(fused.predict(X), loaded.predict(X),
+                                  err_msg=f"{case}/{engine}")
+    np.testing.assert_array_equal(fused.last_exit_counts,
+                                  loaded.last_exit_counts,
                                   err_msg=f"{case}/{engine}")
 
 

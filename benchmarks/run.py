@@ -64,6 +64,7 @@ def _benches(json_flag: bool) -> dict:
         "bench_engines": with_json("bench_engines"),
         "bench_cascade": with_json("bench_cascade"),
         "bench_optim": with_json("bench_optim"),
+        "bench_serving": with_json("bench_serving"),
         "roofline_forest": _run_roofline,
     }
 

@@ -4,6 +4,7 @@
     PYTHONPATH=src python scripts/check_engines.py --cascade   # + cascade e2e
     PYTHONPATH=src python scripts/check_engines.py --cascade-fused  # + fused
     PYTHONPATH=src python scripts/check_engines.py --optimize  # + -O2 == -O0
+    PYTHONPATH=src python scripts/check_engines.py --serving   # + runtime
 
 The engine list comes from ``core.registry`` — a newly registered engine
 shows up here (and in the benchmarks and the agreement tests) with no
@@ -17,7 +18,12 @@ on the quantized forest, for every jax engine and for the single-kernel
 Pallas tier in interpret mode.  ``--optimize`` checks the optimizer
 middle-end (docs/OPTIM.md): every registered engine compiled at ``-O2``
 must agree with its ``-O0`` compile — bit-exactly on the quantized
-forest, within float tolerance on the float one.
+forest, within float tolerance on the float one.  ``--serving`` checks
+the concurrent runtime (docs/SERVING.md): shape warmup leaves
+predictions bit-identical, served scores equal the synchronous
+``predictor.predict`` for every jax engine and for a cascade tenant
+(exit accounting intact), and the adaptive controller never leaves its
+configured bounds under adversarial latency streams.
 
 Exit status is non-zero on any FAIL line, so CI can gate on it.
 """
@@ -159,6 +165,75 @@ def check_optimize(forest, qf, X):
                1e-12)
 
 
+def check_serving(ds, qf, X):
+    """Serving-runtime smoke (docs/SERVING.md acceptance invariants):
+    warmup bit-identity, served == synchronous predict per engine and
+    for a cascade tenant, controller bounds under adversarial input."""
+    from repro.cascade import CascadePredictor, CascadeSpec, MarginGate
+    from repro.inference import (AdaptiveBatchController, ServingRuntime,
+                                 SLOConfig)
+
+    # 1. warmup leaves predictions bit-identical (zeros never leak)
+    for engine in registry.engines("jax"):
+        pred = core.compile_forest(qf, engine=engine)
+        before = pred.predict(X)
+        rt = ServingRuntime()
+        rt.add_model("m", pred, max_batch=32)
+        rt.warmup()
+        err = float(np.abs(pred.predict(X) - before).max())
+        _check(f"serve-warm-{engine}", err, 1e-12)
+
+    # 2. served scores == synchronous predict (odd batches → padding)
+    for engine in registry.engines("jax"):
+        pred = core.compile_forest(qf, engine=engine)
+        direct = pred.predict(X)
+        rt = ServingRuntime()
+        rt.add_model("m", pred, max_batch=7, max_wait_ms=1.0)
+        rt.warmup()
+        reqs = [rt.submit("m", X[i], arrival_s=i * 1e-4)
+                for i in range(len(X))]
+        rt.flush(now_s=1.0)
+        got = np.stack([r.result for r in reqs])
+        _check(f"serve-{engine}", float(np.abs(got - direct).max()), 1e-12)
+
+    # 3. cascade tenant: scores + exit accounting intact through serving
+    spec = CascadeSpec(stages=(max(qf.n_trees // 4, 1), qf.n_trees),
+                       policy=MarginGate(0.5))
+    ref = CascadePredictor(qf, spec, engine="bitvector")
+    served = CascadePredictor(qf, spec, engine="bitvector")
+    direct = ref.predict(X)
+    rt = ServingRuntime()
+    rt.add_model("casc", served, max_batch=len(X), max_wait_ms=1.0)
+    rt.warmup()
+    reqs = [rt.submit("casc", X[i], arrival_s=0.0) for i in range(len(X))]
+    rt.flush(now_s=1.0)
+    got = np.stack([r.result for r in reqs])
+    err = float(np.abs(got - direct).max())
+    if served.exit_counts.sum() != len(X) or \
+            not np.array_equal(served.exit_counts, ref.exit_counts):
+        err = np.inf             # accounting drift is a hard FAIL too
+    _check("serve-cascade-exits", err, 1e-12)
+
+    # 4. controller bounds under adversarial latency streams
+    slo = SLOConfig(target_p99_ms=5.0, window=4, min_batch=2,
+                    max_batch=128, min_wait_ms=0.25, max_wait_ms=16.0)
+    c = AdaptiveBatchController(slo, batch=64, wait_ms=8.0)
+    rng = np.random.default_rng(0)
+    streams = [np.full(400, 1e6), np.full(400, 0.0),
+               rng.exponential(5.0, size=400),
+               np.tile([0.0, 1e6], 200)]           # oscillation attack
+    worst = 0.0
+    for s in streams:
+        for v in s:
+            c.observe(float(v))
+            worst = max(worst,
+                        slo.min_batch - c.max_batch,
+                        c.max_batch - slo.max_batch,
+                        slo.min_wait_ms - c.max_wait_ms,
+                        c.max_wait_ms - slo.max_wait_ms)
+    _check("serve-slo-bounds", worst, 1e-12)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--cascade", action="store_true",
@@ -168,6 +243,8 @@ def main(argv=None) -> int:
                          "staged loop (scores + exit counts)")
     ap.add_argument("--optimize", action="store_true",
                     help="also check every engine × -O2 against -O0")
+    ap.add_argument("--serving", action="store_true",
+                    help="also check the concurrent serving runtime")
     args = ap.parse_args(argv)
 
     ds = load("magic", n=2000)
@@ -185,6 +262,8 @@ def main(argv=None) -> int:
         check_cascade_fused(ds, qf, X)
     if args.optimize:
         check_optimize(forest, qf, X)
+    if args.serving:
+        check_serving(ds, qf, X)
     if FAILED:
         print(f"\nFAILED: {FAILED}", file=sys.stderr)
         return 1

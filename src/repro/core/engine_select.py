@@ -120,6 +120,21 @@ def bucket_batch(batch: int) -> int:
     return 1 << max(int(batch) - 1, 0).bit_length()
 
 
+def bucket_ladder(max_batch: int) -> tuple:
+    """Every power-of-two batch bucket up to ``bucket_batch(max_batch)``
+    — the complete set of batch shapes the bucketed execution paths
+    (Pallas predictors, the fused cascade, and the serving runtime's
+    pad-to-bucket dispatch) can ever emit for batches ≤ ``max_batch``.
+    ``ServingRuntime.warmup`` pre-traces exactly these shapes so no live
+    request pays a trace/compile (docs/SERVING.md)."""
+    top = bucket_batch(max_batch)
+    out, b = [], 1
+    while b <= top:
+        out.append(b)
+        b *= 2
+    return tuple(out)
+
+
 def shape_key(forest: Forest, batch_bucket: int, n_devices: int = 1) -> str:
     # max_depth is part of the structure key: native/unrolled run
     # O(depth) iterations and bitmm's field packing widens with depth, so

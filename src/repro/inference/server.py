@@ -14,9 +14,22 @@ devices; the framework generalises that to a server abstraction:
 
 Requests are processed in arrival order; the batcher is deterministic given
 arrival timestamps, so tests can assert exact batching decisions.
+
+Timestamps: all *default* clocks here are ``time.perf_counter()`` —
+monotonic, so a latency can never go negative because NTP stepped the
+wall clock mid-request.  Callers that pass explicit ``arrival_s`` /
+``now_s`` values (virtual clocks — the deterministic-test contract, and
+``repro.launch.serve``'s replayed arrival traces) are untouched: the
+server only ever *subtracts* timestamps, so any consistent timebase
+works.
+
+The concurrent multi-tenant front door (threaded request loop, adaptive
+batching, shape warmup) lives in ``repro.inference.runtime`` and is
+built out of these parts — see docs/SERVING.md.
 """
 from __future__ import annotations
 
+import random
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
@@ -44,12 +57,88 @@ class Request:
         return (self.done_s - self.arrival_s) * 1e3
 
 
+class Reservoir:
+    """Bounded sample of a value stream: exact below ``cap``, a uniform
+    random sample above (Vitter's Algorithm R, deterministic seed), with
+    the running count and sum kept exactly so ``mean()`` is always exact
+    while percentiles come from the retained sample.
+
+    This replaces the unbounded ``ServerStats`` lists: a server under
+    sustained traffic holds O(cap) floats no matter how many requests it
+    has completed, and ``summary()`` percentiles stay O(cap) work.
+    Below the cap the sample IS the full stream, so short runs (every
+    test, every benchmark window) lose nothing.
+    """
+
+    __slots__ = ("cap", "n", "total", "_sample", "_rng")
+
+    def __init__(self, cap: int = 4096, seed: int = 0):
+        if cap < 1:
+            raise ValueError(f"reservoir cap must be >= 1, got {cap}")
+        self.cap = cap
+        self.n = 0                       # values ever observed (exact)
+        self.total = 0.0                 # running sum (exact mean)
+        self._sample: list[float] = []
+        self._rng = random.Random(seed)
+
+    def append(self, v: float) -> None:
+        v = float(v)
+        self.n += 1
+        self.total += v
+        if len(self._sample) < self.cap:
+            self._sample.append(v)
+        else:
+            # Algorithm R: keep each of the n values with prob cap/n
+            j = self._rng.randrange(self.n)
+            if j < self.cap:
+                self._sample[j] = v
+
+    def extend(self, it) -> None:
+        for v in it:
+            self.append(v)
+
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+    def percentile(self, q) -> float:
+        if not self._sample:
+            raise ValueError("percentile of an empty reservoir")
+        return float(np.percentile(self._sample, q))
+
+    # list-compatible surface: existing callers iterate, truth-test,
+    # np.asarray, and compare against plain lists
+    def __len__(self) -> int:
+        return len(self._sample)
+
+    def __iter__(self):
+        return iter(self._sample)
+
+    def __bool__(self) -> bool:
+        return self.n > 0
+
+    def __array__(self, dtype=None, copy=None):
+        return np.asarray(self._sample, dtype=dtype)
+
+    def __eq__(self, other):
+        if isinstance(other, Reservoir):
+            return self._sample == other._sample and self.n == other.n
+        if isinstance(other, (list, tuple)):
+            return self._sample == list(other)
+        return NotImplemented
+
+    __hash__ = None
+
+    def __repr__(self) -> str:
+        return (f"Reservoir(n={self.n}, cap={self.cap}, "
+                f"retained={len(self._sample)})")
+
+
 @dataclass
 class ServerStats:
     n_requests: int = 0
     n_batches: int = 0
-    batch_sizes: list = field(default_factory=list)
-    latencies_ms: list = field(default_factory=list)
+    batch_sizes: Reservoir = field(default_factory=Reservoir)
+    latencies_ms: Reservoir = field(default_factory=Reservoir)
     # cascade serving: cumulative per-stage exit counts (empty unless the
     # predictor reports them — see ForestServer._run / docs/CASCADE.md)
     stage_exit_counts: list = field(default_factory=list)
@@ -79,16 +168,13 @@ class ServerStats:
         # no completed request → no latency distribution: report null,
         # not the 0.0 percentiles of a zeros(1) placeholder (a dashboard
         # reading p99=0.0 would conclude the server is infinitely fast)
-        lat = np.asarray(self.latencies_ms) if self.latencies_ms else None
+        lat = self.latencies_ms if self.latencies_ms else None
         out = {
             "n_requests": self.n_requests,
             "n_batches": self.n_batches,
-            "mean_batch": float(np.mean(self.batch_sizes))
-            if self.batch_sizes else 0.0,
-            "p50_ms": float(np.percentile(lat, 50)) if lat is not None
-            else None,
-            "p99_ms": float(np.percentile(lat, 99)) if lat is not None
-            else None,
+            "mean_batch": self.batch_sizes.mean(),
+            "p50_ms": lat.percentile(50) if lat is not None else None,
+            "p99_ms": lat.percentile(99) if lat is not None else None,
         }
         if self.stage_exit_counts:
             tot = sum(self.stage_exit_counts)
@@ -217,15 +303,19 @@ class ForestServer:
 
     def submit(self, features: np.ndarray,
                arrival_s: Optional[float] = None) -> Request:
+        # default timestamps are monotonic (perf_counter): latency is a
+        # timestamp difference, and the wall clock can step backwards
+        # (NTP) mid-request — virtual-clock callers pass arrival_s
         self._rid += 1
         req = Request(self._rid, np.asarray(features),
-                      arrival_s if arrival_s is not None else time.time())
+                      arrival_s if arrival_s is not None
+                      else time.perf_counter())
         self.batcher.add(req)
         return req
 
     def poll(self, now_s: Optional[float] = None) -> list[Request]:
         """Flush if the dispatch rule fires; returns completed requests."""
-        now = now_s if now_s is not None else time.time()
+        now = now_s if now_s is not None else time.perf_counter()
         if not self.batcher.ready(now):
             return []
         return self._run(self.batcher.drain(), now)
@@ -233,7 +323,7 @@ class ForestServer:
     def flush(self, now_s: Optional[float] = None) -> list[Request]:
         """Unconditional drain (shutdown path)."""
         done = []
-        now = now_s if now_s is not None else time.time()
+        now = now_s if now_s is not None else time.perf_counter()
         while self.batcher.queue:
             done.extend(self._run(self.batcher.drain(), now))
         return done
@@ -242,11 +332,17 @@ class ForestServer:
         if not reqs:                   # empty flush/drain: no-op, no stats
             return []
         X = np.stack([r.payload for r in reqs])
-        t0 = time.time()
+        t0 = time.perf_counter()
         scores = self.predictor.predict(X)
+        # async dispatch: a predictor returning device arrays has only
+        # *launched* the work when predict returns — block before
+        # stamping done_s or the recorded latency understates reality
+        # (the same bug PR 6 fixed in the bench loops)
+        jax.block_until_ready(scores)
         # completion on the caller's clock: virtual arrival time + real
         # compute time (keeps latency stats consistent under virtual clocks)
-        done_s = (now_s if now_s is not None else t0) + (time.time() - t0)
+        done_s = (now_s if now_s is not None
+                  else t0) + (time.perf_counter() - t0)
         for r, s in zip(reqs, scores):
             r.result = s
             r.done_s = done_s

@@ -16,12 +16,14 @@ artifacts::
 from .importers import (import_lightgbm_json, import_sklearn,
                         import_xgboost_json, load_model,
                         sklearn_shim_from_json)
-from .packed import (FORMAT, VERSION, load_forest, load_predictor, peek,
-                     save_forest, save_predictor)
+from .packed import (FORMAT, VERSION, load_forest, load_manifest,
+                     load_predictor, peek, save_forest, save_manifest,
+                     save_predictor)
 
 __all__ = [
     "import_sklearn", "import_xgboost_json", "import_lightgbm_json",
     "load_model", "sklearn_shim_from_json",
     "save_forest", "load_forest", "save_predictor", "load_predictor",
+    "save_manifest", "load_manifest",
     "peek", "FORMAT", "VERSION",
 ]

@@ -437,6 +437,70 @@ def save_predictor(pred, path: PathLike, *, extra: Optional[dict] = None
     _write_npz(path, header, arrays)
 
 
+# --------------------------------------------------------------------------- #
+# Multi-tenant serving manifest
+# --------------------------------------------------------------------------- #
+MANIFEST_FORMAT = "repro.tenants"
+MANIFEST_VERSION = 1
+
+
+def save_manifest(path: PathLike, tenants: dict) -> str:
+    """Write a multi-tenant serving manifest (plain JSON, versioned like
+    the packed container): model id → ``{"artifact": <relative path>,
+    "max_batch", "max_wait_ms", "slo"}``.  The artifacts are ordinary
+    packed predictor/cascade files stored next to the manifest;
+    ``inference.runtime.ServingRuntime.load`` cold-starts the whole
+    fleet from one manifest — no sweep, no recompile (docs/SERVING.md,
+    docs/FORMATS.md)."""
+    path = os.fspath(path)
+    for tid, e in tenants.items():
+        if not isinstance(e, dict) or "artifact" not in e:
+            raise ValueError(f"manifest entry for {tid!r} must be a dict "
+                             f"with an 'artifact' path, got {e!r}")
+    doc = {"format": MANIFEST_FORMAT, "version": MANIFEST_VERSION,
+           "tenants": tenants}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
+
+
+def load_manifest(path: PathLike) -> dict:
+    """Read a ``save_manifest`` file (or the directory holding a
+    ``manifest.json``); returns model id → entry with the ``artifact``
+    path resolved relative to the manifest's directory.  Malformed or
+    newer-versioned manifests are rejected loudly — a serving fleet must
+    never cold-start from a file it half-understands."""
+    path = os.fspath(path)
+    if os.path.isdir(path):
+        path = os.path.join(path, "manifest.json")
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        raise ValueError(f"{path!r} is not a readable manifest: {e}") from e
+    if not isinstance(doc, dict) or doc.get("format") != MANIFEST_FORMAT:
+        raise ValueError(f"{path!r}: unknown manifest format "
+                         f"{doc.get('format') if isinstance(doc, dict) else doc!r} "
+                         f"(expected {MANIFEST_FORMAT})")
+    if int(doc.get("version", -1)) > MANIFEST_VERSION:
+        raise ValueError(
+            f"{path!r} is manifest version {doc['version']}, newer than "
+            f"this reader (max {MANIFEST_VERSION}) — upgrade first")
+    tenants = doc.get("tenants")
+    if not isinstance(tenants, dict) or not tenants:
+        raise ValueError(f"{path!r} holds no tenants")
+    base = os.path.dirname(os.path.abspath(path))
+    out = {}
+    for tid, e in tenants.items():
+        if not isinstance(e, dict) or "artifact" not in e:
+            raise ValueError(f"{path!r}: malformed entry for {tid!r}")
+        e = dict(e)
+        if not os.path.isabs(e["artifact"]):
+            e["artifact"] = os.path.join(base, e["artifact"])
+        out[tid] = e
+    return out
+
+
 def load_predictor(pred_or_path: PathLike, *, return_header: bool = False):
     """Rebuild a compiled predictor from a packed artifact — no
     recompilation: the engine's device arrays upload as-saved, so

@@ -4,9 +4,19 @@
     PYTHONPATH=src python -m repro.launch.serve --mode forest \
         --engine rapidscorer --quantize --n-requests 2000
 
+    # concurrent multi-tenant runtime (threaded, adaptive batching)
+    PYTHONPATH=src python -m repro.launch.serve --mode runtime \
+        --tenants 2 --quantize --slo-p99-ms 10 --n-requests 2000
+
     # LM generation (reduced config on CPU)
     PYTHONPATH=src python -m repro.launch.serve --mode lm \
         --arch smollm_360m --reduced --n-new 16
+
+``--mode runtime`` drives ``repro.inference.runtime.ServingRuntime``
+(docs/SERVING.md): N tenants hot in one process, shape-warmed, served by
+the worker thread under open-loop Poisson arrivals; ``--slo-p99-ms``
+attaches the adaptive batching controller, ``--save-fleet``/
+``--load-fleet`` round-trip the whole fleet through packed artifacts.
 """
 from __future__ import annotations
 
@@ -86,6 +96,67 @@ def serve_forest(args) -> dict:
     return out
 
 
+def serve_runtime(args) -> dict:
+    """Concurrent multi-tenant serving: threaded runtime, real clock."""
+    from ..inference import ServingRuntime, SLOConfig
+
+    slo = SLOConfig(target_p99_ms=args.slo_p99_ms) \
+        if args.slo_p99_ms is not None else None
+    if args.load_fleet:
+        rt = ServingRuntime.load(args.load_fleet)
+    else:
+        ds = datasets.load(args.dataset)
+        rt = ServingRuntime()
+        for i in range(args.tenants):
+            rf = RandomForest(RandomForestConfig(
+                n_trees=args.n_trees, max_leaves=args.n_leaves,
+                seed=args.seed + i)).fit(ds.X_train, ds.y_train)
+            forest = core.from_random_forest(rf)
+            if args.quantize:
+                forest = core.quantize_forest(forest, ds.X_train)
+            rt.add_model(f"t{i}", core.compile_forest(
+                forest, engine=args.engine, backend=args.backend,
+                cascade=_cascade_spec(args)),
+                max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+                slo=slo)
+        if args.save_fleet:
+            print(f"fleet manifest: {rt.save(args.save_fleet)}")
+    warmed = rt.warmup() if args.warmup else {}
+
+    ds = datasets.load(args.dataset)
+    rng = np.random.default_rng(args.seed)
+    rows = rng.integers(0, ds.X_test.shape[0], size=args.n_requests)
+    tids = rng.choice(list(rt.model_ids), size=args.n_requests)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
+                                         size=args.n_requests))
+    t_wall = time.time()
+    base = time.perf_counter() + 0.005
+    reqs = []
+    with rt:
+        for row, tid, at in zip(rows, tids, arrivals):
+            target = base + at
+            while time.perf_counter() < target:
+                time.sleep(min(max(target - time.perf_counter(), 0.0),
+                               5e-4))
+            reqs.append(rt.submit(tid, ds.X_test[row], arrival_s=target))
+        for r in reqs:
+            r.wait(timeout=120)
+    lats = np.array([r.latency_ms for r in reqs])
+    correct = sum(int(np.argmax(r.result)) == int(ds.y_test[row])
+                  for row, r in zip(rows, reqs))
+    return {
+        "tenants": {tid: rt.summary(tid) for tid in rt.model_ids},
+        "warmed": warmed,
+        "adaptive": slo is not None,
+        "n_requests": len(reqs),
+        "rate": args.rate,
+        "p50_ms": float(np.percentile(lats, 50)),
+        "p99_ms": float(np.percentile(lats, 99)),
+        "accuracy": correct / max(len(reqs), 1),
+        "wall_s": round(time.time() - t_wall, 2),
+    }
+
+
 def serve_lm(args) -> dict:
     cfg = get_config(args.arch)
     if args.reduced:
@@ -107,7 +178,8 @@ def serve_lm(args) -> dict:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="forest", choices=["forest", "lm"])
+    ap.add_argument("--mode", default="forest",
+                    choices=["forest", "runtime", "lm"])
     # forest args
     ap.add_argument("--dataset", default="magic")
     ap.add_argument("--engine", default="bitvector",
@@ -129,6 +201,18 @@ def main() -> None:
                     help="arrival rate (req/s, virtual clock)")
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    # runtime args
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="runtime mode: number of hot models")
+    ap.add_argument("--slo-p99-ms", type=float, default=None,
+                    help="attach the adaptive batching controller with "
+                         "this p99 latency budget")
+    ap.add_argument("--no-warmup", dest="warmup", action="store_false",
+                    help="skip shape warmup (first requests pay compiles)")
+    ap.add_argument("--save-fleet", type=str, default=None,
+                    help="persist the fleet as packed artifacts + manifest")
+    ap.add_argument("--load-fleet", type=str, default=None,
+                    help="cold-start the fleet from a saved manifest")
     # lm args
     ap.add_argument("--arch", default="smollm_360m")
     ap.add_argument("--reduced", action="store_true")
@@ -138,7 +222,8 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    out = serve_forest(args) if args.mode == "forest" else serve_lm(args)
+    out = {"forest": serve_forest, "runtime": serve_runtime,
+           "lm": serve_lm}[args.mode](args)
     print(json.dumps(out, indent=2))
 
 

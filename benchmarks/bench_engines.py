@@ -14,6 +14,13 @@ includes at least one forest with >= 64 leaves/tree, where eliminating
 The candidate set comes from ``core.registry`` (via
 ``engine_select.default_engines``) — engines registered once appear here
 automatically; there is no engine list to keep in sync.
+
+A second table times integer vs float accumulation on the same quantized
+forests (``QuantSpec(bits=16)`` vs ``QuantSpec(bits=16,
+int_accum=True)``, docs/QUANT.md §3): identical thresholds and leaves,
+only the accumulator dtype differs, so the ratio isolates the
+accumulation cost. Both variants are bit-exact vs the quantized oracle —
+this is a pure wall-clock comparison.
 """
 from __future__ import annotations
 
@@ -77,6 +84,44 @@ def run(engines, repeats: int = 5):
     return t, records
 
 
+def run_int(engines, repeats: int = 5):
+    """Integer vs float accumulation on identical quantized forests.
+
+    Same thresholds, same integer leaves — only the accumulator dtype
+    (and the final descale) differs between the two timed predictors, so
+    ``int_vs_f32`` isolates what integer accumulation costs (or saves)
+    per engine on this backend."""
+    cols = ["trees", "leaves", "batch", "engine", "f32_us", "int_us",
+            "int_vs_f32"]
+    t = Table("bench_engines_int", cols)
+    records = []
+    for (T, L, d, B) in shapes():
+        forest = core.random_forest_ir(T, L, d, seed=T + L)
+        rng = np.random.default_rng(0)
+        X = rng.normal(0, 1, size=(B, d))
+        X_cal = np.random.default_rng(1).normal(0, 1, size=(512, d))
+        qf32 = core.quantize_forest(forest, X_cal,
+                                    core.QuantSpec(bits=16))
+        qint = core.quantize_forest(forest, X_cal,
+                                    core.QuantSpec(bits=16,
+                                                   int_accum=True))
+        for e in engines:
+            us = {}
+            for tag, qf in (("f32", qf32), ("int", qint)):
+                pred = engine_select.ENGINE_FACTORIES[e](qf)
+                us[tag] = us_per_instance(
+                    time_predict(lambda: pred.predict(X),
+                                 repeats=repeats), B)
+            ratio = us["f32"] / us["int"]
+            t.add(T, L, B, e, f"{us['f32']:.1f}", f"{us['int']:.1f}",
+                  f"{ratio:.2f}x")
+            records.append({"trees": T, "leaves": L, "batch": B,
+                            "engine": e, "f32_us": us["f32"],
+                            "int_us": us["int"],
+                            "speedup_int_vs_f32": ratio})
+    return t, records
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", action="store_true",
@@ -107,12 +152,17 @@ def main(argv=None) -> int:
     if best is not None:
         print(f"\nbitmm vs seed-QS speedup on L>=64 forests: "
               f"best {best:.2f}x")
+    int_tbl, int_records = run_int(engines_run, repeats=args.repeats)
+    print()
+    int_tbl.print()
+    int_tbl.save()
     if args.json:
         snapshot = {
             "scale": os.environ.get("REPRO_BENCH_SCALE", "default"),
             "engines": list(engines_run),
             "records": records,
             "best_bitmm_vs_qs_L64": best,
+            "int_records": int_records,
         }
         save_json(f"{tbl.name}_raw", snapshot)
         if subset:

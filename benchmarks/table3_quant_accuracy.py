@@ -6,12 +6,20 @@ Paper scale: 1024 trees × 64 leaves. Default scale here trains 128×32
 paper (synthetic data stand-ins, DESIGN.md §5); the *claim under test* is
 the quantization deltas: ≈0 everywhere except EEG-like heavy-tailed
 features, where split-quantization costs points.
+
+Two integer-execution rows ride along (docs/QUANT.md): `int16/int16-acc`
+(same quantized forest, pure-integer accumulation — bit-exact vs
+`int16/int16` by construction, so its column must match exactly) and
+`flint` (f32 comparisons rekeyed as monotone int32 — bit-identical to
+`float/float` by construction). Any delta in those rows is a bug, not a
+trade-off.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro import core
+from repro.core.pipeline import CompilePlan, compile_plan
 from repro.core.quantize import QuantSpec
 from repro.data import datasets
 from repro.trees.random_forest import RandomForest, RandomForestConfig
@@ -25,6 +33,8 @@ COMBOS = [
     ("float/int16", QuantSpec(quantize_splits=False)),
     ("int16/float", QuantSpec(quantize_leaves=False)),
     ("int16/int16", QuantSpec()),
+    ("int16/int16-acc", QuantSpec(int_accum=True)),
+    ("flint", "flint"),
 ]
 
 
@@ -43,9 +53,13 @@ def run() -> Table:
         forest = core.from_random_forest(rf)
         accs = []
         for _, spec in COMBOS:
-            f = forest if spec is None else core.quantize_forest(
-                forest, ds.X_train, spec=spec)
-            pred = core.compile_forest(f, engine="bitvector")
+            if spec == "flint":
+                pred = compile_plan(forest, CompilePlan(engine="bitvector",
+                                                        flint=True))
+            else:
+                f = forest if spec is None else core.quantize_forest(
+                    forest, ds.X_train, spec=spec)
+                pred = core.compile_forest(f, engine="bitvector")
             acc = (pred.predict_class(ds.X_test) == ds.y_test).mean()
             accs.append(acc)
         delta = (max(accs) - min(accs)) * 100

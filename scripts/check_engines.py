@@ -5,6 +5,7 @@
     PYTHONPATH=src python scripts/check_engines.py --cascade-fused  # + fused
     PYTHONPATH=src python scripts/check_engines.py --optimize  # + -O2 == -O0
     PYTHONPATH=src python scripts/check_engines.py --serving   # + runtime
+    PYTHONPATH=src python scripts/check_engines.py --int       # + int/FLInt
 
 The engine list comes from ``core.registry`` — a newly registered engine
 shows up here (and in the benchmarks and the agreement tests) with no
@@ -23,7 +24,11 @@ the concurrent runtime (docs/SERVING.md): shape warmup leaves
 predictions bit-identical, served scores equal the synchronous
 ``predictor.predict`` for every jax engine and for a cascade tenant
 (exit accounting intact), and the adaptive controller never leaves its
-configured bounds under adversarial latency streams.
+configured bounds under adversarial latency streams.  ``--int`` checks
+the integer end-to-end paths (docs/QUANT.md): int-accum engines
+bit-exact vs the quantized oracle (every jax engine + the Pallas tier in
+interpret mode), FLInt engines equal to the float engines exactly, and
+the int-gate cascade class-exact with the full forest.
 
 Exit status is non-zero on any FAIL line, so CI can gate on it.
 """
@@ -165,6 +170,48 @@ def check_optimize(forest, qf, X):
                1e-12)
 
 
+def check_int(ds, forest, X):
+    """Integer end-to-end smoke (docs/QUANT.md): int-accum bit-exactness
+    vs the quantized oracle, FLInt == float engines, int-gate cascade
+    class-exact."""
+    from repro.cascade import CascadeSpec, ScoreBoundGate
+    from repro.core.pipeline import CompilePlan, compile_plan
+    from repro.core.quantize import QuantSpec, accum_bits
+
+    qi = core.quantize_forest(forest, ds.X_train,
+                              spec=QuantSpec(int_accum=True))
+    print(f"int-accum: acc_bits={accum_bits(qi)} "
+          f"err_bound={qi.leaf_err_bound:g}")
+    oracle = (qi.predict_oracle(core.quantize_inputs(qi, X))
+              / core.leaf_scale(qi)).astype(np.float32)
+    for engine in registry.engines("jax"):
+        pred = core.compile_forest(qi, engine=engine)
+        err = 0.0 if np.array_equal(pred.predict(X), oracle) else np.inf
+        _check(f"int-{engine}", err, 1e-12)
+    for spec in registry.specs("pallas"):
+        pred = core.compile_forest(qi, engine=spec.name, backend="pallas",
+                                   interpret=True)
+        err = 0.0 if np.array_equal(pred.predict(X[:8]), oracle[:8]) \
+            else np.inf
+        _check(f"int-{spec.tune_name}", err, 1e-12)
+
+    # FLInt: integer compares must reproduce the float engines exactly
+    for engine in registry.engines("jax"):
+        ref = core.compile_forest(forest, engine=engine).predict(X)
+        fl = compile_plan(forest, CompilePlan(engine=engine, flint=True))
+        err = 0.0 if np.array_equal(fl.predict(X), ref) else np.inf
+        _check(f"flint-{engine}", err, 1e-12)
+
+    # int-gate cascade: exact integer suffix bounds, class-exact at slack 0
+    base = core.compile_forest(qi, engine="bitvector")
+    casc = core.compile_forest(qi, engine="bitvector", cascade=CascadeSpec(
+        stages=(max(qi.n_trees // 4, 1), qi.n_trees),
+        policy=ScoreBoundGate()))
+    same = np.array_equal(casc.predict_class(ds.X_test),
+                          base.predict_class(ds.X_test))
+    _check("int-cascade-gate", 0.0 if same else np.inf, 1e-12)
+
+
 def check_serving(ds, qf, X):
     """Serving-runtime smoke (docs/SERVING.md acceptance invariants):
     warmup bit-identity, served == synchronous predict per engine and
@@ -245,6 +292,9 @@ def main(argv=None) -> int:
                     help="also check every engine × -O2 against -O0")
     ap.add_argument("--serving", action="store_true",
                     help="also check the concurrent serving runtime")
+    ap.add_argument("--int", action="store_true", dest="int_paths",
+                    help="also check int-accum / FLInt bit-exactness "
+                         "and the exact-integer cascade gate")
     args = ap.parse_args(argv)
 
     ds = load("magic", n=2000)
@@ -264,6 +314,8 @@ def main(argv=None) -> int:
         check_optimize(forest, qf, X)
     if args.serving:
         check_serving(ds, qf, X)
+    if args.int_paths:
+        check_int(ds, forest, X)
     if FAILED:
         print(f"\nFAILED: {FAILED}", file=sys.stderr)
         return 1

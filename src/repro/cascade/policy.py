@@ -219,11 +219,42 @@ class ScoreBoundGate(GatePolicy):
 
     def prepare(self, forest: Forest, stages: Sequence[int]) -> None:
         super().prepare(forest, stages)
-        lv = np.asarray(forest.leaf_value, dtype=np.float64)
-        lv = lv / leaf_scale(forest)                      # descaled, like scores
-        T, L, C = lv.shape
+        raw = np.asarray(forest.leaf_value)
+        scale = leaf_scale(forest)
+        T, L, C = raw.shape
         real = np.arange(L)[None, :] < \
             np.asarray(forest.n_leaves_per_tree)[:, None]       # (T, L)
+        bounds = [int(min(s, T)) for s in stages]
+        if np.issubdtype(raw.dtype, np.integer):
+            # quantized forests: exact integer gate arithmetic
+            # (docs/QUANT.md).  Per-tree min/max and the suffix sums run
+            # in int64 — no rounding anywhere — and the pow2 leaf-scale
+            # descale is exact in f64.  When every bound is
+            # f32-representable (always, in practice: |bound| < 2^24
+            # scaled units) the cast is value-exact and no outward
+            # rounding is applied — the gate bounds are bit-exact, the
+            # soundness interval is tight.
+            lv = raw.astype(np.int64)
+            imin, imax = np.iinfo(np.int64).min, np.iinfo(np.int64).max
+            tree_min = np.where(real[..., None], lv, imax).min(axis=1)
+            tree_max = np.where(real[..., None], lv, imin).max(axis=1)
+            zero = np.zeros((1, C), dtype=np.int64)
+            suf_min = np.concatenate(
+                [np.cumsum(tree_min[::-1], axis=0)[::-1], zero])
+            suf_max = np.concatenate(
+                [np.cumsum(tree_max[::-1], axis=0)[::-1], zero])
+            rmin64 = np.stack([suf_min[b] for b in bounds]) / scale
+            rmax64 = np.stack([suf_max[b] for b in bounds]) / scale
+            rmin32 = rmin64.astype(np.float32)
+            rmax32 = rmax64.astype(np.float32)
+            if (np.all(rmin32.astype(np.float64) == rmin64)
+                    and np.all(rmax32.astype(np.float64) == rmax64)):
+                self._rest_min, self._rest_max = rmin32, rmax32
+            else:        # bounds beyond f32's exact-integer range
+                self._rest_min = _f32_down(rmin64)
+                self._rest_max = _f32_up(rmax64)
+            return
+        lv = raw.astype(np.float64) / scale               # descaled, like scores
         tree_min = np.where(real[..., None], lv, np.inf).min(axis=1)   # (T, C)
         tree_max = np.where(real[..., None], lv, -np.inf).max(axis=1)
         # suffix sums: bounds over trees [stages[k], T) for each gate k
@@ -231,11 +262,9 @@ class ScoreBoundGate(GatePolicy):
                                   np.zeros((1, C))])
         suf_max = np.concatenate([np.cumsum(tree_max[::-1], axis=0)[::-1],
                                   np.zeros((1, C))])
-        bounds = [int(min(s, T)) for s in stages]
         # f32 (decide's canonical dtype), rounded *outward*: a
         # round-to-nearest cast could shrink an interval by 1 ulp and
         # make a "provably decided" row exit unsoundly on float forests
-        # (quantized bounds are small integers — the cast is exact there)
         self._rest_min = _f32_down(np.stack([suf_min[b] for b in bounds]))
         self._rest_max = _f32_up(np.stack([suf_max[b] for b in bounds]))
 

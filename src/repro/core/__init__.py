@@ -16,8 +16,9 @@ across a device mesh (``core.shard``).  See docs/DESIGN.md.
 """
 from .forest import (Forest, from_gradient_boosting, from_random_forest,
                      from_trees, random_forest_ir)
-from .quantize import (QuantSpec, feature_ranges, leaf_scale,
-                       normalize_features, quantize_forest, quantize_inputs)
+from .quantize import (QuantSpec, accum_bits, feature_ranges, flint_forest,
+                       flint_key, leaf_scale, normalize_features,
+                       quantize_forest, quantize_inputs)
 from . import registry
 from .registry import (BasePredictor, EngineSpec, ForestEngine, Predictor,
                        normalize_scores, register_engine)
@@ -83,6 +84,7 @@ __all__ = [
     "Forest", "from_trees", "from_random_forest", "from_gradient_boosting",
     "random_forest_ir", "QuantSpec", "quantize_forest", "quantize_inputs",
     "feature_ranges", "normalize_features", "leaf_scale",
+    "accum_bits", "flint_forest", "flint_key",
     "CompiledQS", "compile_qs", "QSPredictor", "eval_batch",
     "CompiledBitMM", "compile_qs_bitmm", "BitMMPredictor",
     "eval_batch_bitmm",

@@ -21,6 +21,7 @@ import numpy as np
 
 from .forest import Forest
 from .quantize import leaf_scale, quantize_inputs
+from .quickscorer import acc_dtype_for, forest_acc_bits
 from .registry import BasePredictor, register_engine
 
 
@@ -37,6 +38,7 @@ class CompiledNative:
     max_depth: int
     leaf_scale: float
     single_leaf: jnp.ndarray  # (T,) bool — degenerate single-leaf trees
+    acc_bits: int = 32        # accumulator width (16 | 32)
     forest: Forest = None
 
     def transform_inputs(self, X):
@@ -53,6 +55,7 @@ def compile_native(forest: Forest) -> CompiledNative:
         max_depth=int(forest.max_depth),
         leaf_scale=leaf_scale(forest),
         single_leaf=jnp.asarray(forest.n_nodes == 0),
+        acc_bits=forest_acc_bits(forest),
         forest=forest,
     )
 
@@ -86,8 +89,9 @@ def eval_native(nat: CompiledNative, X: jnp.ndarray,
     leaf = jnp.maximum(leaf, 0)                                   # safety
     vals = jnp.take_along_axis(
         nat.leaf_val[None], leaf[..., None, None], axis=2)[:, :, 0]
-    acc = jnp.float32 if nat.leaf_val.dtype == jnp.float32 else jnp.int32
-    return vals.astype(acc).sum(axis=1).astype(jnp.float32) / nat.leaf_scale
+    acc = acc_dtype_for(nat.leaf_val.dtype, nat.acc_bits)
+    score = vals.astype(acc).sum(axis=1, dtype=acc)
+    return score.astype(jnp.float32) / nat.leaf_scale
 
 
 # --------------------------------------------------------------------------- #
@@ -100,9 +104,10 @@ class CompiledGEMM:
     valid: jnp.ndarray      # (T, N) bool
     A: jnp.ndarray          # (T, N, L)  +1 left-subtree, -1 right-subtree
     Bvec: jnp.ndarray       # (T, L)  required left-edge count (pad → +inf-ish)
-    leaf_val: jnp.ndarray   # (T, L, C)
+    leaf_val: jnp.ndarray   # (T, L, C) f32 | i32 | i16
     leaf_scale: float
     compute_dtype: jnp.dtype
+    acc_bits: int = 32      # accumulator width (16 | 32)
     forest: Forest = None
 
     def transform_inputs(self, X):
@@ -128,9 +133,14 @@ def compile_gemm(forest: Forest, compute_dtype=jnp.float32) -> CompiledGEMM:
         valid=jnp.asarray(forest.feature >= 0),
         A=jnp.asarray(A, dtype=compute_dtype),
         Bvec=jnp.asarray(Bvec, dtype=compute_dtype),
-        leaf_val=jnp.asarray(forest.leaf_value, dtype=jnp.float32),
+        # integer leaves keep their dtype: the float leaf-einsum is exact
+        # only below 2^24, the integer gather path in eval_gemm always is
+        leaf_val=(jnp.asarray(forest.leaf_value)
+                  if np.issubdtype(forest.leaf_value.dtype, np.integer)
+                  else jnp.asarray(forest.leaf_value, dtype=jnp.float32)),
         leaf_scale=leaf_scale(forest),
         compute_dtype=compute_dtype,
+        acc_bits=forest_acc_bits(forest),
         forest=forest,
     )
 
@@ -142,8 +152,20 @@ def eval_gemm(g: CompiledGEMM, X: jnp.ndarray) -> jnp.ndarray:
     xf = X[:, g.feat]                                            # (B, T, N)
     S = ((xf <= g.thr[None]) & g.valid[None]).astype(g.compute_dtype)
     R = jnp.einsum("btn,tnl->btl", S, g.A)                       # MXU
-    onehot = (R == g.Bvec[None]).astype(jnp.float32)             # (B, T, L)
-    score = jnp.einsum("btl,tlc->bc", onehot, g.leaf_val)        # MXU
+    hit = R == g.Bvec[None]                                      # (B, T, L)
+    if g.leaf_val.dtype == jnp.float32:
+        score = jnp.einsum("btl,tlc->bc", hit.astype(jnp.float32),
+                           g.leaf_val)                           # MXU
+    else:
+        # integer leaves: exactly one leaf per (row, tree) matches its
+        # left-edge count, so argmax recovers the exit leaf; the gather-
+        # sum stays in the integer accumulator (always exact, unlike a
+        # float leaf-einsum above 2^24)
+        leaf = jnp.argmax(hit, axis=2)                           # (B, T)
+        vals = jnp.take_along_axis(
+            g.leaf_val[None], leaf[..., None, None], axis=2)[:, :, 0]
+        acc = acc_dtype_for(g.leaf_val.dtype, g.acc_bits)
+        score = vals.astype(acc).sum(axis=1, dtype=acc)
     return score.astype(jnp.float32) / g.leaf_scale
 
 

@@ -252,6 +252,8 @@ def _quant_tag(q: QuantSpec) -> str:
     changes the compiled variant, so distinct specs never alias in the
     timing cache (``q16`` for the default, suffixes otherwise)."""
     tag = f"q{q.bits}"
+    if q.int_accum:
+        tag += "i"                  # integer leaf accumulation (QUANT.md)
     if q.scale is not None:
         tag += f"s{q.scale:g}"
     if not q.quantize_splits:
@@ -266,7 +268,8 @@ def _candidate_factories(forest: Forest, engines: tuple,
                          layout_specs: Optional[dict],
                          n_devices: int,
                          cascade_specs: Optional[tuple] = None,
-                         opt_levels: Optional[tuple] = None
+                         opt_levels: Optional[tuple] = None,
+                         flint: bool = False
                          ) -> dict[str, Callable]:
     """Candidate name → zero-arg predictor factory.
 
@@ -309,15 +312,26 @@ def _candidate_factories(forest: Forest, engines: tuple,
                          "(use autotuner tune names, e.g. 'qs-bitmm')")
     for o in opt_levels or ():
         resolve_opt(o)                 # reject garbage levels up front
+    if flint and forest.quant_scale is not None:
+        raise ValueError("flint=True needs a float forest (FLInt rekeys "
+                         "f32 thresholds; this one is already quantized)")
     quants: tuple = (None,) + (tuple(quant_specs) if quant_specs else ())
     opts: tuple = (None,) + (tuple(opt_levels) if opt_levels else ())
     cascades: tuple = (None,) + (tuple(cascade_specs) if cascade_specs
                                  else ())
+    # FLInt axis: f32 thresholds rekeyed as monotone int32 (QUANT.md §4).
+    # Only the float variant gets it (flint ⊕ quantize), and only jax
+    # engines — the Pallas kernels cast inputs f32, losing int32 keys.
+    def flints(e: str, q) -> tuple:
+        if flint and q is None and \
+                registry.by_tune_name(e).backend != "pallas":
+            return (False, True)
+        return (False,)
     variants: list[tuple] = [
-        (e, q, o, kw, casc)
+        (e, q, o, kw, casc, fl)
         for e in engines for q in quants for o in opts
         for kw in (None,) + tuple((layout_specs or {}).get(e, ()))
-        for casc in cascades]
+        for casc in cascades for fl in flints(e, q)]
 
     qforests: dict[int, Forest] = {}   # one quantized forest per spec
 
@@ -329,7 +343,7 @@ def _candidate_factories(forest: Forest, engines: tuple,
         return qforests[id(q)]
 
     def make(name: str, q: Optional[QuantSpec], o,
-             kw: Optional[dict], casc) -> Callable:
+             kw: Optional[dict], casc, fl: bool = False) -> Callable:
         spec = registry.by_tune_name(name)
         ekw = dict(kw or {})
         if n_devices > 1 and not spec.shardable:
@@ -344,22 +358,24 @@ def _candidate_factories(forest: Forest, engines: tuple,
             from .pipeline import CompilePlan, compile_plan
             plan = CompilePlan(engine=spec.name, backend=spec.backend,
                                opt=o, n_devices=n_devices, cascade=casc,
-                               engine_kw=dict(ekw))
+                               flint=fl, engine_kw=dict(ekw))
             return compile_plan(qf(q), plan)
 
         return factory
 
     def cname(e: str, q: Optional[QuantSpec], o, kw: Optional[dict],
-              casc) -> str:
+              casc, fl: bool = False) -> str:
         name = e if q is None else f"{e}@{_quant_tag(q)}"
+        if fl:
+            name = f"{name}@flint"
         if o is not None:
             name = f"{name}@{resolve_opt(o)[1]}"
         if kw is not None:
             name = f"{name}@{_layout_tag(kw)}"
         return name if casc is None else f"{name}@{casc.tag()}"
 
-    return {cname(e, q, o, kw, casc): make(e, q, o, kw, casc)
-            for e, q, o, kw, casc in variants}
+    return {cname(e, q, o, kw, casc, fl): make(e, q, o, kw, casc, fl)
+            for e, q, o, kw, casc, fl in variants}
 
 
 def choose(forest: Forest, batch: int, *, engines=None,
@@ -368,6 +384,7 @@ def choose(forest: Forest, batch: int, *, engines=None,
            layout_specs: Optional[dict] = None,
            cascade_specs: Optional[tuple] = None,
            opt_levels: Optional[tuple] = None,
+           flint: bool = False,
            n_devices: int = 1,
            cache_path=_CACHE_DEFAULT,
            force: bool = False, repeats: int = 3,
@@ -376,7 +393,9 @@ def choose(forest: Forest, batch: int, *, engines=None,
 
     Candidates are (engine × quantization × optimization × layout ×
     cascade) variants — see ``_candidate_factories``; ``opt_levels=(1,
-    2)`` adds optimizer middle-end variants (``qs@O2``, docs/OPTIM.md)
+    2)`` adds optimizer middle-end variants (``qs@O2``, docs/OPTIM.md);
+    ``flint=True`` adds ``<engine>@flint`` variants — f32 thresholds
+    rekeyed as monotone int32 (docs/QUANT.md, jax engines only)
     whose compiled forests are smaller but oracle-equivalent;
     ``n_devices > 1`` tunes the tree-sharded
     wrapper instead.  Cascade candidates (``cascade_specs=``) time the
@@ -418,7 +437,7 @@ def choose(forest: Forest, batch: int, *, engines=None,
                                      tuple(cascade_specs) if cascade_specs
                                      else None,
                                      tuple(opt_levels) if opt_levels
-                                     else None)
+                                     else None, flint=flint)
     candidates = tuple(factories)
     if cache_path is _CACHE_DEFAULT:
         cache_path = default_cache_path()

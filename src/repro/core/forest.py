@@ -66,6 +66,10 @@ class Forest:
     # from max(feat_map)+1).
     feat_map: Optional[np.ndarray] = None
     n_features_src: Optional[int] = None
+    # integer end-to-end extensions (docs/QUANT.md)
+    int_accum: bool = False               # engines accumulate leaves as ints
+    flint: bool = False                   # thresholds are FLInt int32 keys
+    leaf_err_bound: Optional[float] = None  # worst-case leaf-sum quant error
 
     @property
     def n_features_in(self) -> int:

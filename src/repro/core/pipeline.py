@@ -56,6 +56,7 @@ class CompilePlan:
     engine: str = "bitvector"
     backend: str = "jax"
     quant: Optional[QuantSpec] = None     # None → keep the forest's dtypes
+    flint: bool = False                   # FLInt int32-key traversal pass
     opt: object = None                    # optim level (0/1/2, "O2") or
     #                                       pass-name tuple; None → O0
     n_devices: int = 1
@@ -75,7 +76,7 @@ class CompilePlan:
 # --------------------------------------------------------------------------- #
 PASSES: dict[str, Callable] = {}
 PIPELINE = ("deserialize", "canonicalize", "quantize", "optimize",
-            "layout", "lower")
+            "flint", "layout", "lower")
 
 
 def forest_pass(name: str):
@@ -142,11 +143,17 @@ def quantize(forest: Forest, plan: CompilePlan, ctx: dict) -> Forest:
     if forest.quant_scale is not None:
         plan.record("quantize", "skipped (already quantized)")
         return forest
+    if plan.flint:
+        raise ValueError("quant= and flint=True are mutually exclusive: "
+                         "FLInt keys float thresholds, quantization "
+                         "replaces them")
     qf = quantize_forest(forest, ctx.get("X_calib"), plan.quant)
     calib = "data" if ctx.get("X_calib") is not None else "thresholds"
-    plan.record("quantize",
-                f"{plan.quant.bits}b scale={qf.quant_scale:g} "
-                f"leaf_scale={qf.leaf_scale:g} calib={calib}")
+    detail = (f"{plan.quant.bits}b scale={qf.quant_scale:g} "
+              f"leaf_scale={qf.leaf_scale:g} calib={calib}")
+    if qf.int_accum:
+        detail += f" int_accum err_bound={qf.leaf_err_bound:g}"
+    plan.record("quantize", detail)
     return qf
 
 
@@ -170,6 +177,35 @@ def optimize(forest: Forest, plan: CompilePlan, ctx: dict) -> Forest:
         plan.record(f"opt.{s.name}", s.detail())
     plan.record("optimize", res.describe())
     return res.forest
+
+
+@forest_pass("flint")
+def flint(forest: Forest, plan: CompilePlan, ctx: dict) -> Forest:
+    """FLInt lowering (arXiv 2209.04181, docs/QUANT.md): reinterpret the
+    float forest's ordered f32 thresholds as monotone int32 keys so every
+    engine's ``x <= t`` compare runs on integers with zero quantization
+    error.  Runs after the optimizer (which works on the plain float IR
+    with straightforward oracle equivalence) and before layout."""
+    if not plan.flint:
+        plan.record("flint", "skipped (not requested)")
+        return forest
+    if forest.flint:
+        plan.record("flint", "skipped (already FLInt-keyed)")
+        return forest
+    if forest.quant_scale is not None:
+        raise ValueError("flint=True on a quantized forest: thresholds "
+                         "are already integers (FLInt applies to float "
+                         "forests)")
+    if plan.backend == "pallas":
+        raise ValueError(
+            "FLInt is unsupported on the pallas backend: the kernel "
+            "wrappers stage inputs through f32, which cannot represent "
+            "int32 keys exactly (docs/QUANT.md)")
+    from .quantize import flint_forest
+    out = flint_forest(forest)
+    plan.record("flint", "f32 thresholds → monotone int32 keys "
+                         "(zero quantization error)")
+    return out
 
 
 @forest_pass("layout")

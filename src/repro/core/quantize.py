@@ -1,4 +1,5 @@
-"""Fixed-point quantization of tree ensembles (paper §5).
+"""Fixed-point quantization of tree ensembles (paper §5) + the integer
+end-to-end extensions (docs/QUANT.md).
 
 ``q(x) = floor(s * x)`` with scaling constant ``s`` (paper default 2^15),
 applied to split thresholds and/or leaf values, stored in ``bits``-wide
@@ -12,10 +13,22 @@ but makes the fixed-point grid meaningful. Heavy-tailed features (EEG) get
 their threshold mass compressed by this — exactly the failure mode the paper
 observes in Tables 3/4.
 
+Two integer paths extend the paper's scheme (docs/QUANT.md):
+
+  * ``QuantSpec(int_accum=True)`` — InTreeger-style (arXiv 2505.15391)
+    integer end-to-end: quantized leaves carry a tracked worst-case error
+    bound (``Forest.leaf_err_bound``) and engines accumulate in the
+    narrowest integer dtype that provably cannot overflow
+    (``accum_bits`` — asserted at compile time, not checked at runtime).
+  * ``flint_forest`` — FLInt-style (arXiv 2209.04181) reinterpretation of
+    ordered f32 thresholds/inputs as monotone int32 keys, so *float*
+    forests traverse with integer compares and zero quantization error.
+
 In the compile pipeline this is the ``quantize`` pass
 (``core/pipeline.py``): pass ``quant=QuantSpec(...)`` to
 ``core.compile_plan`` instead of mutating the forest by hand, and the
-autotuner sweeps it as the ``<engine>@q<bits>`` candidate axis.
+autotuner sweeps it as the ``<engine>@q<bits>`` candidate axis (the FLInt
+path is the ``flint`` pass / ``<engine>@flint`` axis).
 """
 from __future__ import annotations
 
@@ -33,6 +46,7 @@ class QuantSpec:
     scale: Optional[float] = None  # None → 2^(bits-1) for splits
     quantize_splits: bool = True
     quantize_leaves: bool = True
+    int_accum: bool = False        # engines accumulate leaves as integers
 
     @property
     def default_scale(self) -> float:
@@ -49,10 +63,24 @@ class QuantSpec:
 
 def feature_ranges(forest: Forest, X: Optional[np.ndarray] = None):
     """Per-feature (lo, hi) for min-max normalisation: from data if given,
-    else from the forest's own thresholds."""
+    else from the forest's own thresholds.
+
+    Non-finite calibration entries (NaN/±inf sensor rows) are masked out
+    per column rather than poisoning the range: a single NaN row would
+    otherwise propagate through ``min``/``max`` into ``feat_lo``/``feat_hi``
+    and make every normalized input NaN with no error raised."""
     d = forest.n_features
     if X is not None:
-        lo, hi = X.min(axis=0).astype(np.float64), X.max(axis=0).astype(np.float64)
+        Xf = np.asarray(X, dtype=np.float64)
+        finite = np.isfinite(Xf)
+        if finite.all():
+            lo, hi = Xf.min(axis=0), Xf.max(axis=0)
+        else:
+            lo = np.where(finite, Xf, np.inf).min(axis=0)
+            hi = np.where(finite, Xf, -np.inf).max(axis=0)
+            # columns with no finite calibration value at all
+            lo[~np.isfinite(lo)] = 0.0
+            hi[~np.isfinite(hi)] = 1.0
     else:
         lo = np.full(d, np.inf)
         hi = np.full(d, -np.inf)
@@ -82,6 +110,10 @@ def quantize_forest(forest: Forest, X: Optional[np.ndarray] = None,
     through ``quantize_inputs`` — engine wrappers do this automatically via
     the stored ``feat_lo``/``feat_hi``/``quant_scale``."""
     assert forest.quant_scale is None, "forest already quantized"
+    assert not forest.flint, "FLInt forests carry no quantization grid"
+    if spec.int_accum and not spec.quantize_leaves:
+        raise ValueError("QuantSpec(int_accum=True) requires quantized "
+                         "leaves (quantize_leaves=True)")
     if X is not None and forest.feat_map is not None:
         # optimized forest (repro.optim drop_unused_features): calibration
         # rows are full-width; the per-feature ranges must align with the
@@ -99,15 +131,28 @@ def quantize_forest(forest: Forest, X: Optional[np.ndarray] = None,
         out.threshold = q.astype(spec.dtype)
 
     if spec.quantize_leaves:
+        if not np.isfinite(forest.leaf_value).all():
+            # NaN would silently skip the shrink loop (NaN > x is False)
+            # and floor to garbage — reject loudly instead
+            raise ValueError("leaf values contain NaN/inf — cannot "
+                             "quantize leaves")
         max_abs = float(np.abs(forest.leaf_value).max()) or 1.0
-        # paper: s in [M, 2^B]; auto-shrink for GBT leaves that exceed 1.0
+        # paper: s in [M, 2^B]; auto-shrink for GBT leaves that exceed 1.0.
+        # Keep shrinking until every quantized leaf fits ±int_max — the old
+        # "stop at s_leaf <= 2" floor let floor(s*leaf) wrap on astype for
+        # large leaves, silently corrupting predictions.
         s_leaf = s
-        while s_leaf * max_abs > spec.int_max and s_leaf > 2.0:
+        while s_leaf * max_abs > spec.int_max:
             s_leaf /= 2.0
-        out.leaf_value = np.floor(s_leaf * forest.leaf_value).astype(
-            np.int32 if spec.bits == 16 else np.int16)
+        q = np.clip(np.floor(s_leaf * forest.leaf_value),
+                    -spec.int_max - 1, spec.int_max)
+        out.leaf_value = q.astype(np.int32 if spec.bits == 16 else np.int16)
         out.leaf_scale = s_leaf
+        # worst-case |float leaf sum − descaled int sum| under identical
+        # traversal: per-tree floor error is in [0, 1/s_leaf)
+        out.leaf_err_bound = forest.n_trees / s_leaf
 
+    out.int_accum = bool(spec.int_accum)
     out.quant_scale = s
     out.quant_bits = spec.bits
     out.feat_lo = lo
@@ -115,13 +160,77 @@ def quantize_forest(forest: Forest, X: Optional[np.ndarray] = None,
     return out
 
 
+def accum_bits(forest: Forest) -> int:
+    """Narrowest accumulator width (16 or 32) that provably cannot
+    overflow when summing this forest's quantized leaves.
+
+    The bound is structural — Σ_t max|leaf_t| per class — so the check
+    runs once at compile time; there is no runtime overflow path by
+    construction.  Raises ``ValueError`` if even int32 cannot hold the
+    worst case (> 65 k trees at full 16-bit leaf magnitude — the caller
+    must fall back to float accumulation)."""
+    lv = forest.leaf_value
+    if not np.issubdtype(lv.dtype, np.integer):
+        raise ValueError("accum_bits needs integer leaves — quantize with "
+                         "QuantSpec(quantize_leaves=True) first")
+    worst = int(np.abs(lv.astype(np.int64)).max(axis=(1, 2)).sum()) \
+        if lv.size else 0
+    if worst <= np.iinfo(np.int16).max:
+        return 16
+    if worst <= np.iinfo(np.int32).max:
+        return 32
+    raise ValueError(
+        f"worst-case leaf sum {worst} overflows int32 — integer "
+        "accumulation is unsound for this forest (use float leaves or a "
+        "smaller leaf scale)")
+
+
+# --------------------------------------------------------------------------- #
+# FLInt: ordered-float → int32 key reinterpretation (arXiv 2209.04181)
+# --------------------------------------------------------------------------- #
+def flint_key(x: np.ndarray) -> np.ndarray:
+    """Map f32 values to int32 keys preserving total order, so the split
+    predicate ``x <= t`` holds on keys iff it holds on floats.
+
+    The map is the standard sign-flip on the raw bit pattern
+    (``b ^ ((b >> 31) & 0x7fffffff)``): non-negative floats keep their
+    (already ordered) bits, negative floats get their magnitude bits
+    inverted so more-negative sorts lower; -0.0 lands just below +0.0.
+    NaN canonicalizes to INT32_MAX — above every threshold key (+inf
+    keys at 0x7f800000), so NaN inputs always traverse right, matching
+    float semantics (``NaN <= t`` is False)."""
+    xf = np.ascontiguousarray(np.asarray(x, dtype=np.float32))
+    b = xf.view(np.int32)
+    key = b ^ ((b >> 31) & np.int32(0x7FFFFFFF))
+    return np.where(np.isnan(xf), np.int32(np.iinfo(np.int32).max), key)
+
+
+def flint_forest(forest: Forest) -> Forest:
+    """Return a new Forest whose f32 thresholds are replaced by their
+    FLInt int32 keys (``Forest.flint`` set); ``quantize_inputs`` then
+    keys raw inputs the same way, and every engine's ``x <= t`` compare
+    runs on integers with **zero** quantization error — traversal
+    decisions are bit-identical to the float forest's."""
+    assert forest.quant_scale is None, \
+        "FLInt applies to float forests (quantized thresholds are " \
+        "already integers)"
+    assert not forest.flint, "forest already FLInt-keyed"
+    out = replace(forest)
+    out.threshold = flint_key(forest.threshold)
+    out.flint = True
+    return out
+
+
 def quantize_inputs(forest: Forest, X: np.ndarray) -> np.ndarray:
     """Apply the forest's stored input transform to raw full-width rows:
     the optimizer's column remap (``feat_map``, if the
     ``drop_unused_features`` pass ran) followed by normalisation +
-    fixed-point grid.  No-op for float forests without a remap."""
+    fixed-point grid (quantized forests) or the FLInt key map (flint
+    forests).  No-op for float forests without a remap."""
     if forest.feat_map is not None:
         X = np.asarray(X)[:, np.asarray(forest.feat_map, dtype=np.int64)]
+    if forest.flint:
+        return flint_key(X)
     if forest.quant_scale is None:
         return X
     if not np.issubdtype(forest.threshold.dtype, np.integer):

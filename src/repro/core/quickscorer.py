@@ -41,8 +41,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from .forest import Forest, WORD
-from .quantize import leaf_scale, quantize_inputs
+from .quantize import accum_bits, leaf_scale, quantize_inputs
 from .registry import BasePredictor, register_engine
+
+
+def forest_acc_bits(forest: Forest) -> int:
+    """Accumulator width an engine should compile for: 32 unless the
+    forest opted into integer accumulation (``QuantSpec(int_accum=True)``)
+    and its worst-case leaf sum provably fits int16 (``accum_bits`` — the
+    compile-time no-overflow assertion, docs/QUANT.md)."""
+    return accum_bits(forest) if forest.int_accum else 32
+
+
+def acc_dtype_for(leaf_dtype, acc_bits: int):
+    """Leaf storage dtype + compiled accumulator width → jnp accumulator
+    dtype.  Float leaves always accumulate f32; integer leaves accumulate
+    int32, narrowed to int16 only when the compile-time bound allows."""
+    if leaf_dtype == jnp.float32:
+        return jnp.float32
+    return jnp.int16 if acc_bits == 16 else jnp.int32
 
 
 @dataclass
@@ -58,6 +75,7 @@ class CompiledQS:
     n_classes: int
     n_features: int
     leaf_scale: float
+    acc_bits: int = 32                # accumulator width (16 | 32)
     forest: Optional[Forest] = None   # host-side IR (for input quantization)
 
     @property
@@ -86,6 +104,7 @@ def compile_qs(forest: Forest) -> CompiledQS:
         n_classes=forest.n_classes,
         n_features=forest.n_features,
         leaf_scale=leaf_scale(forest),
+        acc_bits=forest_acc_bits(forest),
         forest=forest,
     )
 
@@ -132,8 +151,10 @@ def eval_batch(qs: CompiledQS, X: jnp.ndarray) -> jnp.ndarray:
     leaf = exit_leaf(leafidx)                                   # (B, T)
     vals = jnp.take_along_axis(
         qs.leaf_val[None], leaf[..., None, None], axis=2)[:, :, 0]  # (B, T, C)
-    acc_dtype = jnp.float32 if qs.leaf_val.dtype == jnp.float32 else jnp.int32
-    score = vals.astype(acc_dtype).sum(axis=1)
+    acc_dtype = acc_dtype_for(qs.leaf_val.dtype, qs.acc_bits)
+    # dtype= keeps the reduction itself in acc_dtype (sum would otherwise
+    # widen int16 lanes back to int32 per numpy promotion rules)
+    score = vals.astype(acc_dtype).sum(axis=1, dtype=acc_dtype)
     return score.astype(jnp.float32) / qs.leaf_scale
 
 
@@ -175,6 +196,7 @@ class CompiledBitMM:
     n_trees: int             # real tree count (Tp >= n_trees is padded)
     tree_chunk: int          # scan tile size over the tree axis
     leaf_scale: float
+    acc_bits: int = 32       # accumulator width (16 | 32)
     forest: Optional[Forest] = None
 
     @property
@@ -284,7 +306,7 @@ def compile_qs_bitmm(forest: Forest,
         bits=bits, npack=npack, n_leaves=forest.n_leaves,
         n_classes=forest.n_classes, n_features=forest.n_features,
         n_trees=T, tree_chunk=tree_chunk, leaf_scale=leaf_scale(forest),
-        forest=forest,
+        acc_bits=forest_acc_bits(forest), forest=forest,
     )
 
 
@@ -330,7 +352,7 @@ def _bitmm_tile(bm: CompiledBitMM, X: jnp.ndarray, feat, thr, valid,
                            n_leaves=bm.n_leaves).T        # (B, Tc)
     vals = jnp.take_along_axis(
         lv[None], leaf[..., None, None], axis=2)[:, :, 0]  # (B, Tc, C)
-    return vals.astype(acc_dtype).sum(axis=1)
+    return vals.astype(acc_dtype).sum(axis=1, dtype=acc_dtype)
 
 
 def eval_batch_bitmm(bm: CompiledBitMM, X: jnp.ndarray) -> jnp.ndarray:
@@ -341,8 +363,7 @@ def eval_batch_bitmm(bm: CompiledBitMM, X: jnp.ndarray) -> jnp.ndarray:
     B = X.shape[0]
     Tp, N = bm.feat.shape
     G = bm.n_groups
-    acc_dtype = (jnp.float32 if bm.leaf_val.dtype == jnp.float32
-                 else jnp.int32)
+    acc_dtype = acc_dtype_for(bm.leaf_val.dtype, bm.acc_bits)
     nc = Tp // bm.tree_chunk
     if nc <= 1:
         score = _bitmm_tile(bm, X, bm.feat, bm.thr, bm.valid, bm.packed,

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from .forest import Forest
-from .quickscorer import CompiledQS, compile_qs, exit_leaf, mask_reduce
+from .quickscorer import (CompiledQS, acc_dtype_for, compile_qs, exit_leaf,
+                          mask_reduce)
 from .registry import BasePredictor, register_engine
 
 
@@ -68,8 +69,9 @@ def eval_batch(rs: CompiledRS, X: jnp.ndarray) -> jnp.ndarray:
     leaf = exit_leaf(leafidx)
     vals = jnp.take_along_axis(
         qs.leaf_val[None], leaf[..., None, None], axis=2)[:, :, 0]
-    acc_dtype = jnp.float32 if qs.leaf_val.dtype == jnp.float32 else jnp.int32
-    return vals.astype(acc_dtype).sum(axis=1).astype(jnp.float32) / qs.leaf_scale
+    acc_dtype = acc_dtype_for(qs.leaf_val.dtype, qs.acc_bits)
+    score = vals.astype(acc_dtype).sum(axis=1, dtype=acc_dtype)
+    return score.astype(jnp.float32) / qs.leaf_scale
 
 
 class RSPredictor(BasePredictor):

@@ -114,6 +114,14 @@ def _pack_forest(forest: Forest, prefix: str = "") -> tuple[dict, dict]:
         "quant_scale": forest.quant_scale, "quant_bits": forest.quant_bits,
         "leaf_scale": forest.leaf_scale,
     }
+    # integer end-to-end extensions (docs/QUANT.md): written only when
+    # set, so pre-existing artifacts stay byte-identical
+    if forest.int_accum:
+        meta["int_accum"] = True
+    if forest.flint:
+        meta["flint"] = True
+    if forest.leaf_err_bound is not None:
+        meta["leaf_err_bound"] = float(forest.leaf_err_bound)
     if forest.feat_lo is not None:
         arrays[prefix + "feat_lo"] = np.asarray(forest.feat_lo)
         arrays[prefix + "feat_hi"] = np.asarray(forest.feat_hi)
@@ -168,7 +176,10 @@ def _unpack_forest(meta: dict, npz, prefix: str = "") -> Forest:
         quant_bits=meta.get("quant_bits"),
         leaf_scale=float(meta.get("leaf_scale", 1.0)),
         feat_lo=feat_lo, feat_hi=feat_hi, feat_map=feat_map,
-        n_features_src=n_features_src, **padded)
+        n_features_src=n_features_src,
+        int_accum=bool(meta.get("int_accum", False)),
+        flint=bool(meta.get("flint", False)),
+        leaf_err_bound=meta.get("leaf_err_bound"), **padded)
 
 
 def peek(path: PathLike) -> dict:

@@ -42,7 +42,9 @@ def _gemm_kernel(x_ref, feat_ref, thr_ref, a_ref, b_ref, leaf_ref, out_ref):
         hit, leaf_ref[...].astype(jnp.float32),
         dimension_numbers=(((2,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32)                      # (Tt, Bt, C)
-    part = part.sum(axis=0)
+    # int out_refs: per-tile f32 partial is exact (builder asserts
+    # block_t × max|leaf| < 2^24); the cross-tile sum runs in int32.
+    part = part.sum(axis=0).astype(out_ref.dtype)
 
     @pl.when(pl.program_id(1) == 0)
     def _init():
@@ -55,7 +57,7 @@ def _gemm_kernel(x_ref, feat_ref, thr_ref, a_ref, b_ref, leaf_ref, out_ref):
 
 def gemm_forward(x, feat, thr, A, Bvec, leaf_val, *,
                  block_b: int = 128, block_t: int = 8,
-                 interpret: bool = True):
+                 interpret: bool = True, out_dtype=jnp.float32):
     B, d = x.shape
     T, N = feat.shape
     L, C = leaf_val.shape[-2:]
@@ -72,7 +74,7 @@ def gemm_forward(x, feat, thr, A, Bvec, leaf_val, *,
             pl.BlockSpec((block_t, L, C), lambda i, j: (j, 0, 0)),
         ],
         out_specs=pl.BlockSpec((block_b, C), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, C), out_dtype),
         interpret=interpret,
         compiler_params=mosaic_params("parallel", "arbitrary")
         if not interpret else None,

@@ -38,11 +38,33 @@ def bucket_rows(n: int, block_b: int) -> int:
     return block_b * bucket_batch(-(-n // block_b))
 
 
+def _out_dtype(forest: Forest, block_t: int):
+    """Kernel output dtype: int32 cross-tile accumulation for int-accum
+    forests.  The per-tile partial stays an f32 leaf matmul, which is
+    exact only while ``block_t × max|leaf| < 2^24`` — checked here at
+    build time so the bit-exactness claim can never silently degrade
+    (docs/QUANT.md)."""
+    if not forest.int_accum:
+        return jnp.float32
+    lv = forest.leaf_value
+    max_abs = int(np.abs(lv.astype(np.int64)).max()) if lv.size else 0
+    if block_t * max_abs >= 2 ** 24:
+        raise ValueError(
+            f"pallas int accumulation needs block_t*max|leaf| < 2^24, got "
+            f"{block_t}*{max_abs}; lower block_t or quantize to fewer bits")
+    return jnp.int32
+
+
 class _PallasPredictor(BasePredictor):
     """Kernel-backed predictor on the shared base: overrides the predict
     path for batch bucketing/padding, inherits predict_class/proba."""
 
     def __init__(self, forest: Forest, fn, block_b: int):
+        if forest.flint:
+            raise ValueError(
+                "FLInt forests are unsupported on the pallas backend: the "
+                "kernels cast input rows to f32, which cannot represent "
+                "int32 FLInt keys (use backend='jax')")
         # no BasePredictor.__init__: fn is already jit'd by the builders
         # and the "compiled" state is the host forest + closure arrays
         self.forest = forest
@@ -64,7 +86,9 @@ class _PallasPredictor(BasePredictor):
         self._buckets.add(bucket)
         Xp = _pad_to(Xq, 0, bucket)
         out = np.asarray(self._fn(jnp.asarray(Xp)))
-        return out[:B] / self.leaf_scale
+        # int-accum kernels return int32 totals; the f32 cast + pow2
+        # descale matches the XLA engines' rounding bit-for-bit
+        return out[:B].astype(np.float32) / self.leaf_scale
 
     def predict(self, X: np.ndarray) -> np.ndarray:
         return self.predict_transformed(self.transform_inputs(X))
@@ -100,6 +124,7 @@ def pallas_qs_predictor(forest: Forest, block_b: int = 128, block_t: int = 8,
                         interpret: bool = True) -> _PallasPredictor:
     """QuickScorer bitvector engine, Pallas backend."""
     feat, thr, masks, init_idx, leaf_val = _qs_arrays(forest, block_t)
+    out_dtype = _out_dtype(forest, block_t)
 
     feat_j, thr_j = jnp.asarray(feat), jnp.asarray(thr)
     masks_j, init_j = jnp.asarray(masks), jnp.asarray(init_idx)
@@ -109,7 +134,8 @@ def pallas_qs_predictor(forest: Forest, block_b: int = 128, block_t: int = 8,
     def fn(X):
         return quickscorer_kernel.qs_forward(
             X, feat_j, thr_j, masks_j, init_j, leaf_j,
-            block_b=block_b, block_t=block_t, interpret=interpret)
+            block_b=block_b, block_t=block_t, interpret=interpret,
+            out_dtype=out_dtype)
 
     return _PallasPredictor(forest, fn, block_b)
 
@@ -126,6 +152,11 @@ def pallas_fused_cascade_qs(forest: Forest, stages, policy, *,
     from ..cascade.predictor import tree_slice
     from . import cascade_kernel
 
+    if forest.flint:
+        raise ValueError(
+            "FLInt forests are unsupported on the pallas backend: the "
+            "fused cascade kernel casts input rows to f32, which cannot "
+            "represent int32 FLInt keys (use backend='jax')")
     bounds = (0,) + tuple(stages)
     parts = [_qs_arrays(tree_slice(forest, bounds[k], bounds[k + 1]), block_t)
              for k in range(len(stages))]
@@ -170,6 +201,7 @@ def pallas_bitmm_predictor(forest: Forest, block_b: int = 128,
     # leaf 0 → all-zero leaf row → contributes nothing.
     bias = _pad_to(bias, 0, block_t, fill=float(bitmm_full_word(bits, npack)))
     leaf_val = _pad_to(forest.leaf_value.astype(np.float32), 0, block_t)
+    out_dtype = _out_dtype(forest, block_t)
 
     feat_j, thr_j = jnp.asarray(feat), jnp.asarray(thr)
     packed_j, bias_j = jnp.asarray(packed), jnp.asarray(bias)
@@ -182,7 +214,7 @@ def pallas_bitmm_predictor(forest: Forest, block_b: int = 128,
             X, feat_j, thr_j, packed_j, bias_j, leaf_j,
             bits=bits, npack=npack, n_leaves=n_leaves,
             block_b=block_b, block_t=block_t, block_n=block_n,
-            interpret=interpret)
+            interpret=interpret, out_dtype=out_dtype)
 
     return _PallasPredictor(forest, fn, block_b)
 
@@ -202,6 +234,7 @@ def pallas_gemm_predictor(forest: Forest, block_b: int = 128, block_t: int = 8,
     Bvec = _pad_to(np.asarray(g.Bvec, dtype=np.float32), 0, block_t,
                    fill=forest.n_leaves + 1.0)
     leaf_val = _pad_to(np.asarray(g.leaf_val, dtype=np.float32), 0, block_t)
+    out_dtype = _out_dtype(forest, block_t)
 
     feat_j, thr_j = jnp.asarray(feat), jnp.asarray(thr)
     A_j, B_j, leaf_j = jnp.asarray(A), jnp.asarray(Bvec), jnp.asarray(leaf_val)
@@ -210,6 +243,7 @@ def pallas_gemm_predictor(forest: Forest, block_b: int = 128, block_t: int = 8,
     def fn(X):
         return gemm_forest_kernel.gemm_forward(
             X, feat_j, thr_j, A_j, B_j, leaf_j,
-            block_b=block_b, block_t=block_t, interpret=interpret)
+            block_b=block_b, block_t=block_t, interpret=interpret,
+            out_dtype=out_dtype)
 
     return _PallasPredictor(forest, fn, block_b)

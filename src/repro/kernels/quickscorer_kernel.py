@@ -107,9 +107,16 @@ def qs_tile_scores(x, feat, thr, masks, init_idx, leaf_val):
 def _qs_kernel(x_ref, feat_ref, thr_ref, masks_ref, init_ref, leaf_ref,
                out_ref, *, n_leaves: int):
     """One (block_b, block_t) tile — ref plumbing around
-    ``qs_tile_scores``, accumulating over the tree grid axis."""
+    ``qs_tile_scores``, accumulating over the tree grid axis.
+
+    Integer accumulation (``out_ref`` int32): the per-tile partial is
+    still the f32 leaf matmul — exact, since the builder asserts
+    ``block_t × max|leaf| < 2^24`` — but the cross-tile running sum is
+    carried in int32, so totals stay exact for any tree count
+    (docs/QUANT.md)."""
     part = qs_tile_scores(x_ref[...], feat_ref[...], thr_ref[...],
                           masks_ref[...], init_ref[...], leaf_ref[...])
+    part = part.astype(out_ref.dtype)
 
     @pl.when(pl.program_id(1) == 0)
     def _init():
@@ -122,9 +129,10 @@ def _qs_kernel(x_ref, feat_ref, thr_ref, masks_ref, init_ref, leaf_ref,
 
 def qs_forward(x, feat, thr, masks, init_idx, leaf_val, *,
                block_b: int = 128, block_t: int = 8,
-               interpret: bool = True):
+               interpret: bool = True, out_dtype=jnp.float32):
     """Padded full arrays → scores (B, C). All leading dims must be multiples
-    of the block sizes (ops.py pads)."""
+    of the block sizes (ops.py pads).  ``out_dtype=jnp.int32`` selects
+    integer cross-tile accumulation for int-leaf forests."""
     B, d = x.shape
     T, N = feat.shape
     W = masks.shape[-1]
@@ -143,7 +151,7 @@ def qs_forward(x, feat, thr, masks, init_idx, leaf_val, *,
             pl.BlockSpec((block_t, L, C), lambda i, j: (j, 0, 0)),
         ],
         out_specs=pl.BlockSpec((block_b, C), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, C), out_dtype),
         interpret=interpret,
         compiler_params=mosaic_params("parallel", "arbitrary")
         if not interpret else None,
@@ -207,9 +215,10 @@ def _qs_bitmm_kernel(x_ref, feat_ref, thr_ref, packed_ref, bias_ref,
                            n_leaves=n_leaves)                    # (Tt, Bt)
 
     # ---- leaf one-hot × leaf table (MXU) ---------------------------------- #
-    # f32 accumulation, like the mask-based kernel: quantized leaf sums are
-    # exact while |sum| < 2^24 (int16 leaves: fine to ~1k trees); beyond
-    # that the XLA path's int32 accumulator is the bit-exact engine.
+    # The per-tile leaf matmul stays f32 (exact: the builder asserts
+    # block_t × max|leaf| < 2^24); for integer out_refs the cross-tile
+    # running sum is carried in int32, so totals stay exact for any tree
+    # count (docs/QUANT.md).
     lhot = (jax.lax.broadcasted_iota(jnp.int32, (Tt, Bt, L), 2)
             == leaf[..., None]).astype(jnp.float32)
     part = jax.lax.dot_general(
@@ -217,7 +226,7 @@ def _qs_bitmm_kernel(x_ref, feat_ref, thr_ref, packed_ref, bias_ref,
         dimension_numbers=(((2,), (1,)), ((0,), (0,))),
         precision=jax.lax.Precision.HIGHEST,
         preferred_element_type=jnp.float32)                      # (Tt, Bt, C)
-    part = part.sum(axis=0)                                      # (Bt, C)
+    part = part.sum(axis=0).astype(out_ref.dtype)                # (Bt, C)
 
     @pl.when(pl.program_id(1) == 0)
     def _init():
@@ -231,10 +240,11 @@ def _qs_bitmm_kernel(x_ref, feat_ref, thr_ref, packed_ref, bias_ref,
 def qs_bitmm_forward(x, feat, thr, packed, bias, leaf_val, *, bits: int,
                      npack: int, n_leaves: int, block_b: int = 128,
                      block_t: int = 8, block_n: int = 128,
-                     interpret: bool = True):
+                     interpret: bool = True, out_dtype=jnp.float32):
     """Padded full arrays → scores (B, C).  B and T must be multiples of the
     block sizes (ops.py pads); ``block_n`` tiles the in-kernel bit-matmul so
-    the MXU sees well-shaped contractions on wide forests."""
+    the MXU sees well-shaped contractions on wide forests.
+    ``out_dtype=jnp.int32`` selects integer cross-tile accumulation."""
     B, d = x.shape
     T, N = feat.shape
     G = packed.shape[-1]
@@ -254,7 +264,7 @@ def qs_bitmm_forward(x, feat, thr, packed, bias, leaf_val, *, bits: int,
             pl.BlockSpec((block_t, L, C), lambda i, j: (j, 0, 0)),
         ],
         out_specs=pl.BlockSpec((block_b, C), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, C), out_dtype),
         interpret=interpret,
         compiler_params=mosaic_params("parallel", "arbitrary")
         if not interpret else None,

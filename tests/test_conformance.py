@@ -471,6 +471,126 @@ def test_fused_roundtrip_bitexact(case, engine, tmp_path):
 
 
 # --------------------------------------------------------------------------- #
+# integer end-to-end (docs/QUANT.md): int-accum engines bit-exact vs the
+# quantized oracle for every engine × backend (Pallas in interpret mode)
+# and across save/load; FLInt engines reproduce the float engines'
+# decisions exactly
+# --------------------------------------------------------------------------- #
+from repro.core.pipeline import CompilePlan, compile_plan
+from repro.core.quantize import QuantSpec, accum_bits, flint_forest
+
+
+def _q_oracle(qf, X):
+    return (qf.predict_oracle(core.quantize_inputs(qf, X))
+            / core.leaf_scale(qf)).astype(np.float32)
+
+
+@pytest.mark.parametrize("name,backend", COMBOS, ids=COMBO_IDS)
+@pytest.mark.parametrize("case", QUANTIZABLE)
+def test_int_accum_bitexact_every_engine_backend(case, name, backend):
+    forest = ADVERSARIAL[case]()
+    X = _X(forest, B=12, seed=23)
+    qf = core.quantize_forest(forest, X, spec=QuantSpec(int_accum=True))
+    assert qf.int_accum and qf.leaf_err_bound is not None
+    got = _compile(qf, name, backend).predict(X)
+    np.testing.assert_array_equal(got, _q_oracle(qf, X),
+                                  err_msg=f"{case}/{name}/{backend}")
+
+
+@pytest.mark.parametrize("name,backend", COMBOS, ids=COMBO_IDS)
+def test_int16_accumulation_bitexact(name, backend):
+    """A tiny leaf scale keeps the worst-case sum inside int16 — the
+    engines then accumulate in int16 (asserted via accum_bits) and must
+    still match the oracle bit-for-bit."""
+    forest = ADVERSARIAL["mixed_stump_and_deep"]()
+    X = _X(forest, B=12, seed=24)
+    qf = core.quantize_forest(forest, X,
+                              spec=QuantSpec(scale=8.0, int_accum=True))
+    assert accum_bits(qf) == 16
+    got = _compile(qf, name, backend).predict(X)
+    np.testing.assert_array_equal(got, _q_oracle(qf, X),
+                                  err_msg=f"{name}/{backend}")
+
+
+@pytest.mark.parametrize("engine", JAX_ENGINES)
+@pytest.mark.parametrize("case", QUANTIZABLE)
+def test_int_accum_predictor_roundtrip_bitexact(case, engine, tmp_path):
+    forest = ADVERSARIAL[case]()
+    X = _X(forest, B=10, seed=25)
+    qf = core.quantize_forest(forest, X, spec=QuantSpec(int_accum=True))
+    pred = _compile(qf, engine, "jax")
+    p = str(tmp_path / "int.repro.npz")
+    io.save_predictor(pred, p)
+    loaded = io.load_predictor(p)
+    np.testing.assert_array_equal(loaded.predict(X), _q_oracle(qf, X),
+                                  err_msg=f"{case}/{engine}")
+
+
+def test_int_accum_forest_roundtrip_preserves_metadata(tmp_path):
+    forest = ADVERSARIAL["multiclass_stumps"]()
+    X = _X(forest, B=16, seed=26)
+    qf = core.quantize_forest(forest, X, spec=QuantSpec(int_accum=True))
+    p = str(tmp_path / "qf.repro.npz")
+    io.save_forest(qf, p)
+    loaded = io.load_forest(p)
+    assert loaded.int_accum and not loaded.flint
+    assert loaded.leaf_err_bound == qf.leaf_err_bound
+    np.testing.assert_array_equal(loaded.leaf_value, qf.leaf_value)
+
+
+@pytest.mark.parametrize("engine", JAX_ENGINES)
+@pytest.mark.parametrize("case", sorted(ADVERSARIAL))
+def test_flint_reproduces_float_engine_exactly(case, engine):
+    """FLInt rekeys f32 thresholds/inputs as monotone int32: traversal
+    decisions — and therefore scores, which sum the identical f32 leaf
+    table in the identical order — equal the float engine's bit-for-bit,
+    ±inf thresholds included."""
+    forest = ADVERSARIAL[case]()
+    X = _X(forest, B=12, seed=27)
+    ref = _compile(forest, engine, "jax").predict(X)
+    pred = compile_plan(forest, CompilePlan(engine=engine, flint=True))
+    np.testing.assert_array_equal(pred.predict(X), ref,
+                                  err_msg=f"{case}/{engine}")
+
+
+@pytest.mark.parametrize("engine", JAX_ENGINES)
+def test_flint_predictor_roundtrip_bitexact(engine, tmp_path):
+    forest = ADVERSARIAL["mixed_stump_and_deep"]()
+    X = _X(forest, B=10, seed=28)
+    pred = compile_plan(forest, CompilePlan(engine=engine, flint=True))
+    p = str(tmp_path / "flint.repro.npz")
+    io.save_predictor(pred, p)
+    loaded = io.load_predictor(p)
+    np.testing.assert_array_equal(loaded.predict(X), pred.predict(X),
+                                  err_msg=engine)
+
+
+def test_flint_forest_roundtrip_preserves_keys(tmp_path):
+    forest = ADVERSARIAL["inf_thresholds"]()
+    ff = flint_forest(forest)
+    p = str(tmp_path / "ff.repro.npz")
+    io.save_forest(ff, p)
+    loaded = io.load_forest(p)
+    assert loaded.flint and loaded.threshold.dtype == np.int32
+    np.testing.assert_array_equal(loaded.threshold, ff.threshold)
+
+
+def test_flint_rejected_on_pallas():
+    forest = ADVERSARIAL["one_tree"]()
+    with pytest.raises(ValueError, match="pallas"):
+        compile_plan(forest, CompilePlan(engine="bitvector",
+                                         backend="pallas", flint=True,
+                                         engine_kw={"interpret": True}))
+
+
+def test_flint_and_quant_mutually_exclusive():
+    forest = ADVERSARIAL["one_tree"]()
+    with pytest.raises(ValueError):
+        compile_plan(forest, CompilePlan(engine="bitvector",
+                                         quant=QuantSpec(), flint=True))
+
+
+# --------------------------------------------------------------------------- #
 # hypothesis: randomized adversarial forests (CI; skipped offline)
 # --------------------------------------------------------------------------- #
 if HAVE_HYPOTHESIS:
@@ -574,6 +694,68 @@ if HAVE_HYPOTHESIS:
         sound = CascadePredictor(qf, CascadeSpec(ks, ScoreBoundGate()))
         np.testing.assert_array_equal(sound.predict_class(X),
                                       base.predict_class(X))
+
+    @settings(max_examples=20, deadline=None)
+    @given(adversarial_forests(), st.integers(1, 16), st.integers(0, 9999))
+    def test_hypothesis_leaf_err_bound_never_exceeded(af, B, xseed):
+        """The tracked worst-case bound is sound: under identical
+        traversal (leaves-only quantization) the descaled integer score
+        never drifts from the float score by more than
+        ``leaf_err_bound``."""
+        base, d_total, n_stumps, seed = af
+        forest = _widen(base, d_total, n_stumps, seed)
+        ql = core.quantize_forest(
+            forest, spec=QuantSpec(quantize_splits=False, int_accum=True))
+        X = np.random.default_rng(xseed).normal(0, 2.0, size=(B, d_total))
+        got = (ql.predict_oracle(X) / core.leaf_scale(ql))
+        expect = forest.predict_oracle(X)
+        assert ql.leaf_err_bound is not None
+        assert np.abs(got - expect).max() <= ql.leaf_err_bound + 1e-9
+
+    @settings(max_examples=20, deadline=None)
+    @given(adversarial_forests(), st.integers(1, 16), st.integers(0, 9999))
+    def test_hypothesis_int_accum_cannot_overflow_and_is_bitexact(af, B,
+                                                                  xseed):
+        """``accum_bits`` is a compile-time proof: the structural
+        worst-case |leaf sum| fits the chosen accumulator, so no input
+        can overflow it; and the int-accum engines stay bit-exact vs the
+        quantized oracle on randomized adversarial forests."""
+        base, d_total, n_stumps, seed = af
+        forest = _widen(base, d_total, n_stumps, seed)
+        X = np.random.default_rng(xseed).normal(0, 2.0, size=(B, d_total))
+        qf = core.quantize_forest(forest, X, spec=QuantSpec(int_accum=True))
+        bits = accum_bits(qf)
+        worst = int(np.abs(qf.leaf_value.astype(np.int64))
+                    .max(axis=(1, 2)).sum())
+        assert worst <= np.iinfo(np.int16 if bits == 16 else np.int32).max
+        oracle = _q_oracle(qf, X)
+        Xq = jnp.asarray(core.quantize_inputs(qf, X))
+        got = {
+            "qs": eval_batch(compile_qs(qf), Xq),
+            "bitmm": eval_batch_bitmm(compile_qs_bitmm(qf), Xq),
+            "rs": rs_eval(compile_rs(qf), Xq),
+            "native": eval_native(compile_native(qf), Xq),
+            "gemm": eval_gemm(compile_gemm(qf), Xq),
+        }
+        for e, y in got.items():
+            np.testing.assert_array_equal(np.asarray(y), oracle, err_msg=e)
+
+    @settings(max_examples=20, deadline=None)
+    @given(adversarial_forests(), st.integers(1, 16), st.integers(0, 9999))
+    def test_hypothesis_flint_matches_float_engines(af, B, xseed):
+        base, d_total, n_stumps, seed = af
+        forest = _widen(base, d_total, n_stumps, seed)
+        X = np.random.default_rng(xseed).normal(
+            0, 2.0, size=(B, d_total)).astype(np.float32)
+        ff = flint_forest(forest)
+        Xk = jnp.asarray(core.quantize_inputs(ff, X))
+        Xf = jnp.asarray(X)
+        np.testing.assert_array_equal(
+            np.asarray(eval_batch(compile_qs(ff), Xk)),
+            np.asarray(eval_batch(compile_qs(forest), Xf)))
+        np.testing.assert_array_equal(
+            np.asarray(eval_native(compile_native(ff), Xk)),
+            np.asarray(eval_native(compile_native(forest), Xf)))
 
     @settings(max_examples=12, deadline=None)
     @given(adversarial_forests(), st.integers(0, 9999))

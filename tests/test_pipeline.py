@@ -69,7 +69,7 @@ def test_register_engine_decorator_and_live_tables(small_forest):
 # --------------------------------------------------------------------------- #
 def test_pipeline_declares_all_passes():
     assert PIPELINE == ("deserialize", "canonicalize", "quantize",
-                        "optimize", "layout", "lower")
+                        "optimize", "flint", "layout", "lower")
     assert all(name in PASSES for name in PIPELINE)
 
 

@@ -1,9 +1,12 @@
-"""Fixed-point quantization (paper §5): semantics + accuracy invariants."""
+"""Fixed-point quantization (paper §5): semantics + accuracy invariants,
+plus the integer end-to-end extensions (docs/QUANT.md) and regression
+tests for the leaf-wraparound / non-finite-calibration bugs."""
 import numpy as np
 import pytest
 
 from repro import core
-from repro.core.quantize import (QuantSpec, feature_ranges,
+from repro.core.quantize import (QuantSpec, accum_bits, feature_ranges,
+                                 flint_forest, flint_key,
                                  normalize_features, quantize_forest,
                                  quantize_inputs)
 
@@ -113,6 +116,144 @@ def test_int8_beyond_paper(trained_rf, magic_ds):
     acc_f = (core.compile_forest(forest).predict_class(X) == y).mean()
     acc_q = (core.compile_forest(qf).predict_class(X) == y).mean()
     assert abs(acc_f - acc_q) < 0.05          # int8 is coarser but usable
+
+
+# --------------------------------------------------------------------------- #
+# regression: silent leaf wraparound (the shrink loop used to stop at
+# s_leaf <= 2, then floor(s*leaf).astype(...) wrapped for huge leaves)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("bits,boost", [(16, 2.0e9), (8, 2.0e4)])
+def test_leaf_wraparound_regression(bits, boost):
+    """Leaves with max|leaf| beyond half the storage dtype's range used
+    to wrap on the astype: floor(2 * leaf) overflowed int32 (bits=16) /
+    int16 (bits=8) and flipped sign silently.  The scale must keep
+    shrinking until every quantized leaf fits ±int_max."""
+    f = core.random_forest_ir(6, 8, 4, seed=9)
+    f.leaf_value = np.abs(f.leaf_value) * boost      # all-positive, huge
+    spec = QuantSpec(bits=bits)
+    qf = quantize_forest(f, spec=spec)
+    assert (qf.leaf_value >= 0).all(), "wraparound flipped leaf signs"
+    assert np.abs(qf.leaf_value).max() <= spec.int_max
+    # the descaled prediction still tracks the float one within the bound
+    ql = quantize_forest(f, spec=QuantSpec(bits=bits,
+                                           quantize_splits=False))
+    X = np.random.default_rng(2).normal(size=(16, 4))
+    err = np.abs(ql.predict_oracle(X) / core.leaf_scale(ql)
+                 - f.predict_oracle(X)).max()
+    assert err <= ql.leaf_err_bound + 1e-6 * boost
+
+
+def test_leaf_err_bound_recorded(small_forest):
+    qf = quantize_forest(small_forest)
+    assert qf.leaf_err_bound == small_forest.n_trees / qf.leaf_scale
+    assert quantize_forest(
+        small_forest, spec=QuantSpec(quantize_leaves=False)
+    ).leaf_err_bound is None
+
+
+def test_nan_leaves_rejected(small_forest):
+    """NaN leaves used to skip the shrink loop silently (NaN > x is
+    False) and floor to garbage — now a loud error."""
+    import dataclasses
+    f = dataclasses.replace(small_forest)
+    f.leaf_value = small_forest.leaf_value.copy()
+    f.leaf_value[0, 0, 0] = np.nan
+    with pytest.raises(ValueError, match="NaN"):
+        quantize_forest(f)
+    f.leaf_value[0, 0, 0] = np.inf
+    with pytest.raises(ValueError):
+        quantize_forest(f)
+
+
+# --------------------------------------------------------------------------- #
+# regression: non-finite calibration rows poisoned feat_lo/feat_hi
+# --------------------------------------------------------------------------- #
+def test_feature_ranges_masks_nonfinite_rows(small_forest):
+    """One NaN/±inf sensor row used to make a feature's range NaN/inf and
+    every normalized input NaN with no error raised; non-finite entries
+    are now masked per column."""
+    rng = np.random.default_rng(3)
+    X = rng.normal(0, 1, size=(50, small_forest.n_features))
+    lo0, hi0 = feature_ranges(small_forest, X)
+    Xbad = np.concatenate([X, np.full((1, X.shape[1]), np.nan),
+                           np.full((1, X.shape[1]), np.inf),
+                           np.full((1, X.shape[1]), -np.inf)])
+    lo, hi = feature_ranges(small_forest, Xbad)
+    assert np.isfinite(lo).all() and np.isfinite(hi).all()
+    np.testing.assert_array_equal(lo, lo0)
+    np.testing.assert_array_equal(hi, hi0)
+    # and quantization end-to-end stays usable with dirty calibration
+    qf = quantize_forest(small_forest, Xbad)
+    Xq = quantize_inputs(qf, X)
+    assert np.isfinite(Xq.astype(np.float64)).all()
+
+
+def test_feature_ranges_all_nonfinite_column():
+    f = core.random_forest_ir(2, 4, 3, seed=4)
+    X = np.random.default_rng(5).normal(size=(10, 3))
+    X[:, 1] = np.nan                         # dead sensor: whole column
+    lo, hi = feature_ranges(f, X)
+    assert np.isfinite(lo).all() and np.isfinite(hi).all()
+    assert hi[1] > lo[1]
+
+
+# --------------------------------------------------------------------------- #
+# integer end-to-end: accum_bits + FLInt key map (docs/QUANT.md)
+# --------------------------------------------------------------------------- #
+def test_accum_bits_contract(small_forest):
+    qf = quantize_forest(small_forest, spec=QuantSpec(int_accum=True))
+    bits = accum_bits(qf)
+    worst = int(np.abs(qf.leaf_value.astype(np.int64))
+                .max(axis=(1, 2)).sum())
+    assert bits in (16, 32)
+    assert worst <= np.iinfo(np.int16 if bits == 16 else np.int32).max
+    # tiny scale → worst case fits int16
+    q16 = quantize_forest(small_forest,
+                          spec=QuantSpec(scale=8.0, int_accum=True))
+    assert accum_bits(q16) == 16
+    with pytest.raises(ValueError, match="integer"):
+        accum_bits(small_forest)             # float leaves
+
+
+def test_int_accum_requires_quantized_leaves(small_forest):
+    with pytest.raises(ValueError, match="int_accum"):
+        quantize_forest(small_forest,
+                        spec=QuantSpec(int_accum=True,
+                                       quantize_leaves=False))
+
+
+def test_flint_key_is_strictly_monotone():
+    vals = np.array([-np.inf, -1e30, -2.5, -1.0, -np.float32(1e-38).item(),
+                     -0.0, 0.0, np.float32(1e-38).item(), 1.0, 2.5, 1e30,
+                     np.inf], dtype=np.float32)
+    keys = flint_key(vals)
+    assert keys.dtype == np.int32
+    # strictly increasing except the -0.0/+0.0 pair (equal floats may
+    # key apart, ordered floats never invert)
+    assert (np.diff(keys.astype(np.int64)) >= 0).all()
+    assert keys[4] < keys[5] <= keys[6] < keys[7]
+    # NaN keys above every threshold key: always traverses right
+    assert flint_key(np.float32(np.nan)) == np.iinfo(np.int32).max
+    assert flint_key(np.float32(np.nan)) > flint_key(np.float32(np.inf))
+    # predicate equivalence on random pairs
+    rng = np.random.default_rng(6)
+    a = rng.normal(0, 1e3, 1000).astype(np.float32)
+    b = rng.normal(0, 1e3, 1000).astype(np.float32)
+    np.testing.assert_array_equal(flint_key(a) <= flint_key(b), a <= b)
+
+
+def test_flint_forest_semantics(small_forest):
+    ff = flint_forest(small_forest)
+    assert ff.flint and ff.threshold.dtype == np.int32
+    assert small_forest.flint is False       # original untouched
+    X = np.random.default_rng(7).normal(
+        size=(32, small_forest.n_features)).astype(np.float32)
+    np.testing.assert_array_equal(ff.predict_oracle(quantize_inputs(ff, X)),
+                                  small_forest.predict_oracle(X))
+    with pytest.raises(AssertionError):
+        flint_forest(ff)                     # double-keying rejected
+    with pytest.raises(AssertionError):
+        quantize_forest(ff)                  # flint ⊕ quantize
 
 
 def test_eeg_merging_collapse():

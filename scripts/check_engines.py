@@ -6,6 +6,7 @@
     PYTHONPATH=src python scripts/check_engines.py --optimize  # + -O2 == -O0
     PYTHONPATH=src python scripts/check_engines.py --serving   # + runtime
     PYTHONPATH=src python scripts/check_engines.py --int       # + int/FLInt
+    PYTHONPATH=src python scripts/check_engines.py --obs       # + metrics
 
 The engine list comes from ``core.registry`` — a newly registered engine
 shows up here (and in the benchmarks and the agreement tests) with no
@@ -28,7 +29,13 @@ configured bounds under adversarial latency streams.  ``--int`` checks
 the integer end-to-end paths (docs/QUANT.md): int-accum engines
 bit-exact vs the quantized oracle (every jax engine + the Pallas tier in
 interpret mode), FLInt engines equal to the float engines exactly, and
-the int-gate cascade class-exact with the full forest.
+the int-gate cascade class-exact with the full forest.  ``--obs`` checks
+the observability layer (docs/OBSERVABILITY.md): served scores stay
+bit-exact with full instrumentation on (plain + fused-cascade tenants,
+threaded runtime, live scrape endpoint), the Prometheus scrape exposes
+every catalog metric as well-formed text, ``/metrics.json`` parses and
+carries the runtime stats, and the warmed fleet serves with **zero**
+retrace anomalies.
 
 Exit status is non-zero on any FAIL line, so CI can gate on it.
 """
@@ -281,6 +288,79 @@ def check_serving(ds, qf, X):
     _check("serve-slo-bounds", worst, 1e-12)
 
 
+def check_obs(ds, qf, X):
+    """Observability smoke (docs/OBSERVABILITY.md acceptance): bit-exact
+    serving with full instrumentation on, a live scrape covering the
+    whole metric catalog, parseable JSON, zero retrace anomalies."""
+    import json
+    import re
+    import urllib.request
+
+    from repro.cascade import CascadePredictor, CascadeSpec, MarginGate
+    from repro.inference import ServingRuntime
+    from repro.obs import METRIC_CATALOG, MetricsRegistry
+
+    pred = core.compile_forest(qf, engine="bitvector")
+    direct = pred.predict(X)
+    spec = CascadeSpec(stages=(max(qf.n_trees // 4, 1), qf.n_trees),
+                       policy=MarginGate(0.5), fused=True)
+    casc = core.compile_forest(qf, engine="bitvector", cascade=spec)
+    casc_direct = CascadePredictor(
+        qf, CascadeSpec(stages=spec.stages, policy=spec.policy),
+        engine="bitvector").predict(X)
+
+    rt = ServingRuntime(obs=MetricsRegistry())   # isolated registry
+    rt.add_model("m", pred, max_batch=7, max_wait_ms=0.5)
+    rt.add_model("casc", casc, max_batch=len(X), max_wait_ms=0.5)
+    rt.warmup()
+    with rt:
+        url = rt.serve_metrics().url
+        reqs = [rt.submit("m", X[i]) for i in range(len(X))]
+        creqs = [rt.submit("casc", X[i]) for i in range(len(X))]
+        for r in reqs + creqs:
+            r.wait(timeout=120)
+        got = np.stack([r.result for r in reqs])
+        cgot = np.stack([r.result for r in creqs])
+        with urllib.request.urlopen(url + "/metrics", timeout=10) as resp:
+            text = resp.read().decode()
+        with urllib.request.urlopen(url + "/metrics.json",
+                                    timeout=10) as resp:
+            snap = json.loads(resp.read().decode())
+        with urllib.request.urlopen(url + "/traces?n=8",
+                                    timeout=10) as resp:
+            traces = json.loads(resp.read().decode())
+
+    # served == synchronous, bit-exact, with everything instrumented
+    _check("obs-serve-bitexact", float(np.abs(got - direct).max()), 1e-12)
+    _check("obs-serve-cascade", float(np.abs(cgot - casc_direct).max()),
+           1e-12)
+
+    # the scrape must expose every catalog metric, every line well-formed
+    missing = [n for n in METRIC_CATALOG if f"# TYPE {n} " not in text]
+    _check("obs-scrape-catalog", float(len(missing)), 1)
+    line_re = re.compile(
+        r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^{}]*\})? -?[0-9.einfa+-]+$")
+    bad = [ln for ln in text.splitlines()
+           if ln and not ln.startswith("#") and not line_re.match(ln)]
+    _check("obs-scrape-wellformed", float(len(bad)), 1)
+
+    stats = snap.get("stats", {})
+    ok_json = "metrics" in snap and "m" in stats and "casc" in stats
+    _check("obs-json-snapshot", 0.0 if ok_json else np.inf, 1e-12)
+
+    # the warmup contract, live: no post-warmup trace on either tenant
+    anomalies = sum(s.get("retrace_anomalies", 0) for s in stats.values())
+    _check("obs-zero-retrace", float(anomalies), 1e-12)
+    ok_traces = len(traces) == 8 and all("phases" in t for t in traces)
+    _check("obs-traces", 0.0 if ok_traces else np.inf, 1e-12)
+    compiles = {tid: s.get("compile_events") for tid, s in stats.items()}
+    n_series = sum(1 for ln in text.splitlines()
+                   if ln and not ln.startswith("#"))
+    print(f"obs: {len(METRIC_CATALOG)} catalog metrics / {n_series} "
+          f"series scraped, compile_events={compiles}, "
+          f"retrace_anomalies={anomalies}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--cascade", action="store_true",
@@ -295,6 +375,10 @@ def main(argv=None) -> int:
     ap.add_argument("--int", action="store_true", dest="int_paths",
                     help="also check int-accum / FLInt bit-exactness "
                          "and the exact-integer cascade gate")
+    ap.add_argument("--obs", action="store_true",
+                    help="also check the observability layer (bit-exact "
+                         "instrumented serving, live scrape, zero "
+                         "retrace anomalies)")
     args = ap.parse_args(argv)
 
     ds = load("magic", n=2000)
@@ -316,6 +400,8 @@ def main(argv=None) -> int:
         check_serving(ds, qf, X)
     if args.int_paths:
         check_int(ds, forest, X)
+    if args.obs:
+        check_obs(ds, qf, X)
     if FAILED:
         print(f"\nFAILED: {FAILED}", file=sys.stderr)
         return 1

@@ -119,6 +119,21 @@ class FusedCascadePredictor(CascadePredictor):
         # the fused traces close over the policy — stale jits must die
         self._jit_cache = {}
 
+    def trace_cache_size(self) -> Optional[int]:
+        """Stage caches (inherited surface) plus the fused program's own
+        jit cache — ``obs.retrace.CompileWatch`` treats the cache drop
+        after ``set_policy`` as a deliberate reset, not negative
+        compiles."""
+        from ..obs.retrace import fn_cache_size
+        total = super().trace_cache_size()
+        found = total is not None
+        total = total or 0
+        for fn in self._jit_cache.values():
+            size = fn_cache_size(fn)
+            if size is not None:
+                total, found = total + size, True
+        return total if found else None
+
     # -------------------------------------------------------- fused trace
     def _bucket_ladder(self, Bp: int) -> list:
         """Switch-branch sizes: ``F·2^j`` and ``3F·2^j`` up to Bp, F the

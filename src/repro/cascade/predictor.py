@@ -165,6 +165,19 @@ class CascadePredictor:
         (one sync per stage); the fused predictor overrides this with 1."""
         return len(self.stages)
 
+    def trace_cache_size(self) -> Optional[int]:
+        """Total XLA trace-cache entries across the stage predictors —
+        the retrace-detection surface (``repro.obs.retrace``): a growth
+        after serving warmup means some stage saw a cold shape.  ``None``
+        when no stage exposes a cache (monitoring degrades to no-op)."""
+        from ..obs.retrace import fn_cache_size
+        total, found = 0, False
+        for p in self.stage_predictors:
+            size = fn_cache_size(getattr(p, "_fn", None))
+            if size is not None:
+                total, found = total + size, True
+        return total if found else None
+
     # ------------------------------------------------------------ serving
     def reset_exit_stats(self) -> None:
         K = len(self.stages)

@@ -41,8 +41,48 @@ from typing import Callable, Optional
 import numpy as np
 
 from . import registry
+from ..obs import metrics as _obs_metrics
+from ..obs.log import get_logger
 from .forest import Forest
 from .quantize import QuantSpec, quantize_forest
+
+_LOG = get_logger("autotune")
+
+
+def _autotune_metrics():
+    """The autotuner's metric families on the process default registry
+    (docs/OBSERVABILITY.md §Autotune), or ``None`` when observability is
+    disabled.  Resolved per call — get-or-create is two dict lookups
+    after the first time, and tests that swap the default registry
+    (``set_default_registry``) observe their own."""
+    reg = _obs_metrics.get_registry()
+    if not reg.enabled:
+        return None
+    return {
+        "sweeps": reg.counter(
+            "repro_autotune_sweeps_total",
+            "Autotune benchmark sweeps executed (decisions that had to "
+            "time at least one candidate)"),
+        "hits": reg.counter(
+            "repro_autotune_cache_hits_total",
+            "Autotune decisions answered entirely from cache",
+            labels=("layer",)),
+        "misses": reg.counter(
+            "repro_autotune_cache_misses_total",
+            "Autotune decisions that had to benchmark",
+            labels=("reason",)),
+        "sweep_s": reg.histogram(
+            "repro_autotune_sweep_seconds",
+            "Wall time of one autotune benchmark sweep, seconds"),
+        "benched": reg.counter(
+            "repro_autotune_candidates_benched_total",
+            "Candidate predictors built and timed by autotune sweeps"),
+        "winner": reg.gauge(
+            "repro_autotune_winner_info",
+            "Autotune winner per shape key (info gauge: value is "
+            "always 1; the labels carry the decision)",
+            labels=("key", "engine")),
+    }
 
 
 class _TuneTable(Mapping):
@@ -444,7 +484,12 @@ def choose(forest: Forest, batch: int, *, engines=None,
     bucket = bucket_batch(batch)
     key = shape_key(forest, bucket, n_devices)
 
+    obs = _autotune_metrics()
     prior = _MEM_CACHE.get(key)
+    # for the cache-hit layer label: did memory alone cover the request,
+    # before the disk layer widened it?
+    mem_covered = (prior is not None
+                   and set(candidates) <= set(prior.get("timings", {})))
     if cache_path and not (prior is not None
                            and set(candidates)
                            <= set(prior.get("timings", {}))):
@@ -467,6 +512,10 @@ def choose(forest: Forest, batch: int, *, engines=None,
                 # swept earlier with cache_path=None); a merge against the
                 # file is idempotent and trivial next to the compile below
                 _store_disk(cache_path, key, prior)
+            if obs is not None:
+                layer = "memory" if mem_covered else "disk"
+                obs["hits"].labels(layer=layer).inc()
+                obs["winner"].labels(key=key, engine=winner).set(1.0)
             return EngineChoice(engine=winner, key=key,
                                 predictor=factories[winner](),
                                 timings={e: cached[e] for e in candidates},
@@ -475,12 +524,16 @@ def choose(forest: Forest, batch: int, *, engines=None,
     cached = (prior or {}).get("timings", {})
     to_bench = candidates if force \
         else tuple(e for e in candidates if e not in cached)
+    if obs is not None:
+        reason = "forced" if force else ("partial" if cached else "cold")
+        obs["misses"].labels(reason=reason).inc()
     # n_features_in, not n_features: an already-optimized forest (with a
     # feat_map from drop_unused_features) still takes full-width rows
     X = np.random.default_rng(seed).normal(
         0, 1.0, size=(bucket, forest.n_features_in))
     fresh: dict[str, float] = {}
     best_pred, best_t = None, float("inf")
+    sweep_t0 = time.perf_counter()
     for name in to_bench:
         pred = factories[name]()
         fresh[name] = _bench_once(pred, X, repeats)
@@ -488,9 +541,17 @@ def choose(forest: Forest, batch: int, *, engines=None,
         # max(current, best) instead of the sum over the engine matrix
         if fresh[name] < best_t:
             best_pred, best_t = pred, fresh[name]
+    sweep_s = time.perf_counter() - sweep_t0
     # partial-coverage miss: cached timings fill in the engines we skipped
     timings = {e: fresh.get(e, cached.get(e)) for e in candidates}
     winner = min(timings, key=timings.get)
+    if obs is not None:
+        obs["sweeps"].inc()
+        obs["sweep_s"].observe(sweep_s)
+        obs["benched"].inc(float(len(to_bench)))
+        obs["winner"].labels(key=key, engine=winner).set(1.0)
+    _LOG.info("sweep", key=key, candidates=len(to_bench),
+              seconds=sweep_s, winner=winner)
     if best_pred is not None:
         # cascade predictors count per-stage exits cumulatively; the
         # benchmark rows must not pollute the served exit accounting

@@ -58,7 +58,14 @@ import jax
 import numpy as np
 
 from ..core.engine_select import bucket_batch, bucket_ladder
+from ..obs.log import get_logger
+from ..obs.metrics import MetricsRegistry, get_registry
+from ..obs.retrace import CompileWatch
+from ..obs.serving import ServingMetrics
+from ..obs.trace import Span
 from .server import MicroBatcher, Request, ServerStats
+
+_LOG = get_logger("serving")
 
 
 # --------------------------------------------------------------------------- #
@@ -187,9 +194,12 @@ class AdaptiveBatchController:
 @dataclass
 class ServedRequest(Request):
     """A ``Request`` routed to a tenant, with a thread-safe future the
-    submitting thread can block on (``wait``)."""
+    submitting thread can block on (``wait``).  When observability is on
+    the worker attaches a ``repro.obs.trace.Span`` (phase breakdown)
+    before resolving the future."""
     tenant: str = ""
     future: Future = field(default_factory=Future)
+    span: Optional[Span] = None
 
     def wait(self, timeout: Optional[float] = None) -> np.ndarray:
         """Block until the worker resolves this request; returns the
@@ -238,6 +248,7 @@ class _Tenant:
         self.pad_buckets = _pads_to_bucket(predictor)
         self.warmed: tuple = ()
         self.engine_choice = None                 # set by from_forests()
+        self.watch: Optional[CompileWatch] = None  # set by add_model()
 
     @property
     def hard_max_batch(self) -> int:
@@ -254,6 +265,22 @@ class _Tenant:
         out["effective_max_wait_ms"] = self.batcher.max_wait_ms
         out["adaptive"] = self.controller is not None
         out["warmed_buckets"] = list(self.warmed)
+        if self.controller is not None:
+            c = self.controller
+            actions = {"grow": 0, "shrink": 0, "hold": 0}
+            for rec in c.decisions:
+                actions[rec["action"]] = actions.get(rec["action"], 0) + 1
+            out["controller"] = {
+                "target_p99_ms": c.slo.target_p99_ms,
+                "n_decisions": len(c.decisions),
+                "actions": actions,
+                "last_decision": c.decisions[-1] if c.decisions else None,
+                "batch_bounds": [c.min_batch, c.max_batch_bound],
+                "wait_ms_bounds": [c.min_wait_ms, c.max_wait_ms_bound],
+            }
+        if self.watch is not None:
+            out["compile_events"] = self.watch.compiles_total
+            out["retrace_anomalies"] = self.watch.anomalies_total
         return out
 
 
@@ -267,9 +294,18 @@ class ServingRuntime:
     arrivals, manual ``pump``/``flush``); it defaults to the monotonic
     ``time.perf_counter``.  Explicit ``arrival_s``/``now_s`` arguments
     always win, which is the virtual-clock test contract shared with
-    ``ForestServer``."""
+    ``ForestServer``.
 
-    def __init__(self, *, clock: Optional[Callable[[], float]] = None):
+    ``obs`` wires the observability layer (docs/OBSERVABILITY.md):
+    ``True`` (default) instruments against the process-wide default
+    registry; a ``MetricsRegistry`` or ``ServingMetrics`` instance
+    instruments against that (isolated registries in tests);
+    ``False``/``None`` disables instrumentation entirely.  Phase spans
+    use the same timestamps the runtime already stamps, so virtual-clock
+    runs stay deterministic with observability on."""
+
+    def __init__(self, *, clock: Optional[Callable[[], float]] = None,
+                 obs=True, trace_cap: int = 256):
         self._clock = clock if clock is not None else time.perf_counter
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
@@ -277,6 +313,21 @@ class ServingRuntime:
         self._rid = 0
         self._thread: Optional[threading.Thread] = None
         self._stop = False
+        if obs is True:
+            self._obs: Optional[ServingMetrics] = ServingMetrics(
+                get_registry(), trace_cap=trace_cap)
+        elif isinstance(obs, ServingMetrics):
+            self._obs = obs
+        elif isinstance(obs, MetricsRegistry):
+            self._obs = ServingMetrics(obs, trace_cap=trace_cap)
+        else:
+            self._obs = None
+        self._metrics_server = None
+
+    @property
+    def obs(self) -> Optional[ServingMetrics]:
+        """The instrumentation bundle, or ``None`` when disabled."""
+        return self._obs
 
     # ---------------------------------------------------------- tenancy
     def add_model(self, model_id: str, predictor, *, max_batch: int = 256,
@@ -292,8 +343,10 @@ class ServingRuntime:
         with self._lock:
             if model_id in self._tenants:
                 raise ValueError(f"model id {model_id!r} already serving")
-            self._tenants[model_id] = _Tenant(model_id, predictor,
-                                              max_batch, max_wait_ms, slo)
+            t = _Tenant(model_id, predictor, max_batch, max_wait_ms, slo)
+            if self._obs is not None:
+                t.watch = CompileWatch(predictor)
+            self._tenants[model_id] = t
 
     @property
     def model_ids(self) -> tuple:
@@ -311,13 +364,13 @@ class ServingRuntime:
                      max_wait_ms: float = 2.0,
                      slo: Optional[SLOConfig] = None,
                      clock: Optional[Callable[[], float]] = None,
-                     **choose_kw) -> "ServingRuntime":
+                     obs=True, **choose_kw) -> "ServingRuntime":
         """Autotune-and-serve N forests: each tenant's engine comes from
         ``core.engine_select.choose`` — all tenants share the
         process-wide sweep cache (memory + disk), so a fleet of
         same-shaped models pays for one sweep, not N."""
         from ..core import engine_select
-        rt = cls(clock=clock)
+        rt = cls(clock=clock, obs=obs)
         for tid, forest in forests.items():
             choice = engine_select.choose(forest, max_batch, **choose_kw)
             rt.add_model(tid, choice.predictor, max_batch=max_batch,
@@ -351,15 +404,15 @@ class ServingRuntime:
 
     @classmethod
     def load(cls, path, *,
-             clock: Optional[Callable[[], float]] = None
-             ) -> "ServingRuntime":
+             clock: Optional[Callable[[], float]] = None,
+             obs=True) -> "ServingRuntime":
         """Cold-start a fleet from a ``save()`` manifest (or the
         directory holding one): every tenant's compiled arrays upload
         as-saved — no autotune sweep, no recompilation — and serving
         results are bit-identical to the saved predictors'."""
         from .. import io
         from ..io import packed
-        rt = cls(clock=clock)
+        rt = cls(clock=clock, obs=obs)
         for tid, e in packed.load_manifest(path).items():
             pred = io.load_predictor(e["artifact"])
             slo = SLOConfig.from_header(e["slo"]) if e.get("slo") else None
@@ -400,6 +453,10 @@ class ServingRuntime:
                 jax.block_until_ready(pred.predict(X[:b]))
             getattr(pred, "reset_exit_stats", lambda: None)()
             t.warmed = tuple(ladder)
+            if t.watch is not None:
+                # warmup traces were deliberate; from here on any new
+                # trace is a retrace anomaly (docs/OBSERVABILITY.md)
+                t.watch.mark_warm()
             out[tid] = list(ladder)
         return out
 
@@ -418,7 +475,11 @@ class ServingRuntime:
                                 arrival_s if arrival_s is not None
                                 else self._clock(), tenant=model_id)
             t.batcher.add(req)
+            depth = len(t.batcher.queue)
             self._cv.notify()
+        o = self._obs
+        if o is not None and o.enabled:
+            o.queue_depth.labels(tenant=model_id).set(float(depth))
         return req
 
     # ------------------------------------------------------ dispatching
@@ -426,11 +487,18 @@ class ServingRuntime:
         """Evaluate one drained batch and resolve its futures — the
         ``ForestServer._run`` contract (monotonic compute timing, block
         before stamping ``done_s``, stats + exit accounting) plus
-        bucket padding and the adaptive controller."""
+        bucket padding, the adaptive controller, and — when
+        observability is on — the phase span / metric / retrace hooks.
+        ``done_s`` semantics are unchanged: the instrumentation reuses
+        the timestamps the dispatch path already takes."""
         if not reqs:
             return []
+        o = self._obs if (self._obs is not None
+                          and self._obs.enabled) else None
+        t_form = time.perf_counter()
         X = np.stack([r.payload for r in reqs])
         n = len(reqs)
+        bucket = n
         t0 = time.perf_counter()
         try:
             if t.pad_buckets:
@@ -441,33 +509,127 @@ class ServingRuntime:
                     Xp = np.zeros((bucket,) + X.shape[1:], dtype=X.dtype)
                     Xp[:n] = X
                     X = Xp
+            t_pad = time.perf_counter()
             scores = t.predictor.predict(X)
+            t_compute = time.perf_counter()
             jax.block_until_ready(scores)        # async dispatch honesty
             scores = np.asarray(scores)[:n]
+            t_sync = time.perf_counter()
         except Exception as e:                   # noqa: BLE001 — resolve,
+            err_done = now_s + (time.perf_counter() - t0)
             for r in reqs:                       # don't kill the worker
-                r.done_s = now_s + (time.perf_counter() - t0)
+                r.done_s = err_done
+            if o is not None:                    # spans before futures:
+                self._observe_error(o, t, reqs, now_s, bucket, e)
+            for r in reqs:
                 r.future.set_exception(e)
             return reqs
-        done_s = now_s + (time.perf_counter() - t0)
+        done_s = now_s + (t_sync - t0)
         for r, s in zip(reqs, scores):
             r.result = s
             r.done_s = done_s
+        phases = {
+            "form_ms": (t0 - t_form) * 1e3,
+            "pad_ms": (t_pad - t0) * 1e3,
+            "compute_ms": (t_compute - t_pad) * 1e3,
+            "sync_ms": (t_sync - t_compute) * 1e3,
+        }
         t.stats.record_batch(reqs)
-        t.stats.record_exits(getattr(t.predictor, "last_exit_counts",
-                                     None))
+        t.stats.record_phases(phases["compute_ms"], phases["sync_ms"])
+        exits = getattr(t.predictor, "last_exit_counts", None)
+        t.stats.record_exits(exits)
+        decisions: list[dict] = []
         if t.controller is not None:
-            decided = False
             for r in reqs:
-                decided |= t.controller.observe(r.latency_ms) is not None
-            if decided:
+                rec = t.controller.observe(r.latency_ms)
+                if rec is not None:
+                    decisions.append(rec)
+            if decisions:
                 t.batcher.max_batch = t.controller.max_batch
                 t.batcher.max_wait_ms = t.controller.max_wait_ms
+        if o is not None:
+            self._observe_batch(o, t, reqs, now_s, bucket, phases,
+                                exits, decisions)
         # resolve futures last: a caller woken by wait() observes the
         # fully-stamped request and consistent stats
         for r in reqs:
             r.future.set_result(r.result)
         return reqs
+
+    # -------------------------------------------------- observability
+    def _observe_batch(self, o: ServingMetrics, t: _Tenant, reqs: list,
+                       now_s: float, bucket: int, phases: dict,
+                       exits, decisions: list) -> None:
+        """Feed one successful batch into the metrics + trace layer.
+        Only called when observability is on; every op here is a cheap
+        in-process counter/reservoir update (bench_serving measures the
+        total overhead and BENCH_serving.json reports it)."""
+        tid = t.model_id
+        n = len(reqs)
+        o.batches_total.labels(tenant=tid).inc()
+        o.batch_size.labels(tenant=tid).observe(float(n))
+        req_ctr = o.requests_total.labels(tenant=tid)
+        lat_hist = o.latency_ms.labels(tenant=tid)
+        for p, v in phases.items():
+            o.phase_ms.labels(tenant=tid, phase=p).observe(v)
+        queue_hist = o.phase_ms.labels(tenant=tid, phase="queue_ms")
+        for r in reqs:
+            queue_ms = max((now_s - r.arrival_s) * 1e3, 0.0)
+            req_ctr.inc()
+            queue_hist.observe(queue_ms)
+            lat = r.latency_ms
+            if lat is not None:
+                lat_hist.observe(lat)
+            span = Span(rid=r.rid, tenant=tid, arrival_s=r.arrival_s,
+                        batch_size=n, bucket=bucket,
+                        phases={"queue_ms": queue_ms, **phases},
+                        total_ms=lat)
+            r.span = span
+            o.traces.add(span)
+        o.queue_depth.labels(tenant=tid).set(float(len(t.batcher.queue)))
+        o.effective_max_batch.labels(tenant=tid).set(
+            float(t.batcher.max_batch))
+        o.effective_max_wait_ms.labels(tenant=tid).set(
+            float(t.batcher.max_wait_ms))
+        for rec in decisions:
+            o.controller_decisions_total.labels(
+                tenant=tid, action=rec["action"]).inc()
+        if exits is not None:
+            for stage, count in enumerate(exits):
+                if count:
+                    o.cascade_stage_exits_total.labels(
+                        tenant=tid, stage=str(stage)).inc(float(count))
+        if t.watch is not None:
+            compiles, anomalies = t.watch.poll()
+            if compiles:
+                o.compile_events_total.labels(tenant=tid).inc(compiles)
+            if anomalies:
+                o.retrace_anomalies_total.labels(tenant=tid).inc(anomalies)
+                _LOG.warning("retrace_anomaly", tenant=tid,
+                             new_traces=anomalies, batch=n, bucket=bucket)
+
+    def _observe_error(self, o: ServingMetrics, t: _Tenant, reqs: list,
+                       now_s: float, bucket: int, err: Exception) -> None:
+        """The failed-batch twin of ``_observe_batch``: errored requests
+        still count as completed (their futures resolve) and additionally
+        increment ``repro_request_errors_total``; their spans carry
+        ``ok=false`` and the exception repr."""
+        tid = t.model_id
+        n = len(reqs)
+        o.batches_total.labels(tenant=tid).inc()
+        o.batch_size.labels(tenant=tid).observe(float(n))
+        for r in reqs:
+            o.requests_total.labels(tenant=tid).inc()
+            o.request_errors_total.labels(tenant=tid).inc()
+            queue_ms = max((now_s - r.arrival_s) * 1e3, 0.0)
+            span = Span(rid=r.rid, tenant=tid, arrival_s=r.arrival_s,
+                        batch_size=n, bucket=bucket,
+                        phases={"queue_ms": queue_ms},
+                        total_ms=r.latency_ms, ok=False, error=repr(err))
+            r.span = span
+            o.traces.add(span)
+        o.queue_depth.labels(tenant=tid).set(float(len(t.batcher.queue)))
+        _LOG.error("batch_failed", tenant=tid, batch=n, error=repr(err))
 
     def _next_deadline(self, now: float) -> Optional[float]:
         """Seconds until the earliest queued request's wait expires."""
@@ -538,6 +700,9 @@ class ServingRuntime:
         elif not already:
             # manual-mode close: complete queued work synchronously
             self._flush_locked(self._clock())
+        if self._metrics_server is not None:
+            self._metrics_server.close()
+            self._metrics_server = None
 
     def __enter__(self) -> "ServingRuntime":
         return self.start()
@@ -590,3 +755,38 @@ class ServingRuntime:
         if model_id is not None:
             return self.tenant(model_id).summary()
         return {tid: t.summary() for tid, t in self._tenants.items()}
+
+    def stats(self, model_id: Optional[str] = None) -> dict:
+        """``summary()`` plus the operational state an operator wants
+        live: current queue depth, the controller's full (bounded)
+        decision history, and the retrace watch counters.  This is the
+        ``stats`` section of the metrics endpoint's ``/metrics.json``."""
+        if model_id is None:
+            return {tid: self.stats(tid) for tid in self._tenants}
+        t = self.tenant(model_id)
+        out = t.summary()
+        out["queue_depth"] = len(t.batcher.queue)
+        if t.controller is not None:
+            out["decisions"] = list(t.controller.decisions)
+        if t.watch is not None:
+            out["trace_cache_observable"] = t.watch.observable
+        return out
+
+    # ------------------------------------------------------- exposition
+    def serve_metrics(self, port: int = 0,
+                      host: str = "127.0.0.1"):
+        """Start (idempotently) the scrape endpoint over this runtime's
+        registry: Prometheus text at ``/metrics``, JSON at
+        ``/metrics.json`` (including ``stats()``), recent spans at
+        ``/traces``.  Owned by the runtime — ``close()`` stops it.
+        Returns the ``repro.obs.expo.MetricsServer`` (``.url``)."""
+        if self._obs is None:
+            raise RuntimeError("observability is disabled (obs=False); "
+                               "no metrics to serve")
+        if self._metrics_server is None:
+            from ..obs.expo import MetricsServer
+            self._metrics_server = MetricsServer(
+                self._obs.registry, traces=self._obs.traces,
+                extra=self.stats, host=host, port=port).start()
+            _LOG.info("metrics_endpoint", url=self._metrics_server.url)
+        return self._metrics_server

@@ -139,6 +139,10 @@ class ServerStats:
     n_batches: int = 0
     batch_sizes: Reservoir = field(default_factory=Reservoir)
     latencies_ms: Reservoir = field(default_factory=Reservoir)
+    # per-batch phase breakdown: device compute (predict dispatch) vs
+    # host sync (block_until_ready + copy-out) — docs/OBSERVABILITY.md
+    compute_ms: Reservoir = field(default_factory=Reservoir)
+    sync_ms: Reservoir = field(default_factory=Reservoir)
     # cascade serving: cumulative per-stage exit counts (empty unless the
     # predictor reports them — see ForestServer._run / docs/CASCADE.md)
     stage_exit_counts: list = field(default_factory=list)
@@ -151,6 +155,11 @@ class ServerStats:
         self.batch_sizes.append(len(reqs))
         self.latencies_ms.extend(
             r.latency_ms for r in reqs if r.latency_ms is not None)
+
+    def record_phases(self, compute_ms: float, sync_ms: float) -> None:
+        """Record one batch's device-compute / host-sync split."""
+        self.compute_ms.append(compute_ms)
+        self.sync_ms.append(sync_ms)
 
     def record_exits(self, counts) -> None:
         """Accumulate a cascade predictor's per-stage exit counts for the
@@ -176,6 +185,10 @@ class ServerStats:
             "p50_ms": lat.percentile(50) if lat is not None else None,
             "p99_ms": lat.percentile(99) if lat is not None else None,
         }
+        if self.compute_ms:
+            out["compute_p50_ms"] = self.compute_ms.percentile(50)
+            out["sync_p50_ms"] = self.sync_ms.percentile(50) \
+                if self.sync_ms else None
         if self.stage_exit_counts:
             tot = sum(self.stage_exit_counts)
             out["exit_fractions"] = [c / max(tot, 1)
@@ -220,12 +233,29 @@ class MicroBatcher:
 # --------------------------------------------------------------------------- #
 class ForestServer:
     def __init__(self, predictor, max_batch: int = 256,
-                 max_wait_ms: float = 2.0):
+                 max_wait_ms: float = 2.0, *, obs=None,
+                 obs_label: str = "forest"):
         self.predictor = predictor
         self.batcher = MicroBatcher(max_batch, max_wait_ms)
         self.stats = ServerStats()
         self.engine_choice = None          # set by from_forest()
         self._rid = 0
+        # optional catalog instrumentation (docs/OBSERVABILITY.md):
+        # obs=True → the process default registry; a MetricsRegistry /
+        # ServingMetrics instance → that.  The synchronous server stays
+        # uninstrumented by default — ServingRuntime is the production
+        # front door and defaults the other way.
+        self.obs_label = obs_label
+        if obs is None or obs is False:
+            self._obs = None
+        else:
+            from ..obs.metrics import MetricsRegistry, get_registry
+            from ..obs.serving import ServingMetrics
+            if obs is True:
+                obs = ServingMetrics(get_registry())
+            elif isinstance(obs, MetricsRegistry):
+                obs = ServingMetrics(obs)
+            self._obs = obs
 
     _CACHE_UNSET = object()       # distinguish "not given" from None
 
@@ -334,24 +364,49 @@ class ForestServer:
         X = np.stack([r.payload for r in reqs])
         t0 = time.perf_counter()
         scores = self.predictor.predict(X)
+        t_compute = time.perf_counter()
         # async dispatch: a predictor returning device arrays has only
         # *launched* the work when predict returns — block before
         # stamping done_s or the recorded latency understates reality
         # (the same bug PR 6 fixed in the bench loops)
         jax.block_until_ready(scores)
+        t_sync = time.perf_counter()
         # completion on the caller's clock: virtual arrival time + real
         # compute time (keeps latency stats consistent under virtual clocks)
-        done_s = (now_s if now_s is not None
-                  else t0) + (time.perf_counter() - t0)
+        done_s = (now_s if now_s is not None else t0) + (t_sync - t0)
         for r, s in zip(reqs, scores):
             r.result = s
             r.done_s = done_s
+        compute_ms = (t_compute - t0) * 1e3
+        sync_ms = (t_sync - t_compute) * 1e3
         self.stats.record_batch(reqs)
+        self.stats.record_phases(compute_ms, sync_ms)
         # cascade predictors report which stage each row exited at; the
         # stats aggregate them so ServerStats.summary() can show the
         # per-stage exit fractions of the served traffic
-        self.stats.record_exits(getattr(self.predictor,
-                                        "last_exit_counts", None))
+        exits = getattr(self.predictor, "last_exit_counts", None)
+        self.stats.record_exits(exits)
+        o = self._obs
+        if o is not None and o.enabled:
+            tid = self.obs_label
+            o.batches_total.labels(tenant=tid).inc()
+            o.batch_size.labels(tenant=tid).observe(float(len(reqs)))
+            o.phase_ms.labels(tenant=tid, phase="compute_ms").observe(
+                compute_ms)
+            o.phase_ms.labels(tenant=tid, phase="sync_ms").observe(sync_ms)
+            req_ctr = o.requests_total.labels(tenant=tid)
+            lat_hist = o.latency_ms.labels(tenant=tid)
+            queue_hist = o.phase_ms.labels(tenant=tid, phase="queue_ms")
+            for r in reqs:
+                req_ctr.inc()
+                queue_hist.observe(max((now_s - r.arrival_s) * 1e3, 0.0))
+                if r.latency_ms is not None:
+                    lat_hist.observe(r.latency_ms)
+            if exits is not None:
+                for stage, count in enumerate(exits):
+                    if count:
+                        o.cascade_stage_exits_total.labels(
+                            tenant=tid, stage=str(stage)).inc(float(count))
         return reqs
 
 

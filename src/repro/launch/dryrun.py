@@ -27,9 +27,12 @@ from ..distributed.sharding import (data_spec, decode_state_specs,
                                     tree_shardings)
 from ..models.config import ArchConfig, ShapeConfig
 from ..models.model import Model
+from ..obs.log import get_logger
 from .hlo_analysis import analyze, normalize_cost_analysis
 from .mesh import make_production_mesh
 from .specs import input_specs
+
+log = get_logger("dryrun")
 
 # TPU v5e constants (roofline denominators)
 PEAK_FLOPS = 197e12          # bf16 / chip
@@ -398,22 +401,26 @@ def main() -> None:
                 out = os.path.join(
                     RESULTS_DIR, f"{arch}__{shape}__{mk}.json")
                 if args.skip_existing and os.path.exists(out):
-                    print(f"[skip existing] {arch} {shape} {mk}")
+                    log.info("skip_existing", arch=arch, shape=shape,
+                             mesh=mk)
                     continue
                 t0 = time.time()
                 rec = run_cell(arch, shape, mk, kv_quant=args.kv_quant)
                 status = rec["status"]
-                extra = ""
+                fields = dict(arch=arch, shape=shape, mesh=mk,
+                              wall_s=time.time() - t0)
                 if status == "ok":
                     r = rec["roofline"]
-                    extra = (f"dom={r['dominant']} "
-                             f"c={r['compute_s']*1e3:.1f}ms "
-                             f"m={r['memory_s']*1e3:.1f}ms "
-                             f"x={r['collective_s']*1e3:.1f}ms")
+                    fields.update(dominant=r["dominant"],
+                                  compute_ms=r["compute_s"] * 1e3,
+                                  memory_ms=r["memory_s"] * 1e3,
+                                  collective_ms=r["collective_s"] * 1e3)
+                    log.info("cell_ok", **fields)
                 elif status == "error":
-                    extra = rec["error"][:120]
-                print(f"[{status}] {arch} {shape} {mk} "
-                      f"({time.time()-t0:.0f}s) {extra}", flush=True)
+                    log.error("cell_error", error=rec["error"][:120],
+                              **fields)
+                else:
+                    log.info(f"cell_{status}", **fields)
 
 
 if __name__ == "__main__":

@@ -33,7 +33,10 @@ from ..configs import get_config
 from ..data import datasets
 from ..inference.server import ForestServer, LMServer
 from ..models.model import Model
+from ..obs.log import get_logger
 from ..trees.random_forest import RandomForest, RandomForestConfig
+
+log = get_logger("serve")
 
 
 def _cascade_spec(args):
@@ -63,8 +66,19 @@ def serve_forest(args) -> dict:
                                backend=args.backend,
                                cascade=_cascade_spec(args))
 
-    server = ForestServer(pred, max_batch=args.max_batch,
-                          max_wait_ms=args.max_wait_ms)
+    mserver = None
+    if args.metrics_port is not None:
+        from ..obs.expo import MetricsServer
+        from ..obs.metrics import get_registry
+        server = ForestServer(pred, max_batch=args.max_batch,
+                              max_wait_ms=args.max_wait_ms, obs=True)
+        mserver = MetricsServer(get_registry(),
+                                extra=server.stats.summary,
+                                port=args.metrics_port).start()
+        log.info("metrics_endpoint", url=mserver.url)
+    else:
+        server = ForestServer(pred, max_batch=args.max_batch,
+                              max_wait_ms=args.max_wait_ms)
     rng = np.random.default_rng(args.seed)
     rows = rng.integers(0, ds.X_test.shape[0], size=args.n_requests)
 
@@ -90,6 +104,9 @@ def serve_forest(args) -> dict:
                 "quantized": bool(args.quantize),
                 "accuracy": correct / max(done, 1),
                 "wall_s": round(time.time() - t_start, 2)})
+    if mserver is not None:
+        out["metrics_url"] = mserver.url
+        mserver.close()
     if args.cascade:
         out["cascade"] = pred.describe()
         out["mean_trees_evaluated"] = pred.mean_trees_evaluated
@@ -120,7 +137,10 @@ def serve_runtime(args) -> dict:
                 max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
                 slo=slo)
         if args.save_fleet:
-            print(f"fleet manifest: {rt.save(args.save_fleet)}")
+            log.info("fleet_saved", manifest=rt.save(args.save_fleet))
+    metrics_url = None
+    if args.metrics_port is not None:
+        metrics_url = rt.serve_metrics(port=args.metrics_port).url
     warmed = rt.warmup() if args.warmup else {}
 
     ds = datasets.load(args.dataset)
@@ -145,8 +165,9 @@ def serve_runtime(args) -> dict:
     correct = sum(int(np.argmax(r.result)) == int(ds.y_test[row])
                   for row, r in zip(rows, reqs))
     return {
-        "tenants": {tid: rt.summary(tid) for tid in rt.model_ids},
+        "tenants": {tid: rt.stats(tid) for tid in rt.model_ids},
         "warmed": warmed,
+        "metrics_url": metrics_url,
         "adaptive": slo is not None,
         "n_requests": len(reqs),
         "rate": args.rate,
@@ -213,6 +234,11 @@ def main() -> None:
                     help="persist the fleet as packed artifacts + manifest")
     ap.add_argument("--load-fleet", type=str, default=None,
                     help="cold-start the fleet from a saved manifest")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the observability scrape endpoint "
+                         "(/metrics Prometheus text, /metrics.json, "
+                         "/traces — docs/OBSERVABILITY.md) on this "
+                         "port; 0 picks an ephemeral port")
     # lm args
     ap.add_argument("--arch", default="smollm_360m")
     ap.add_argument("--reduced", action="store_true")

@@ -42,7 +42,10 @@ from ..distributed.fault_tolerance import (Heartbeat, PreemptionFlag,
 from ..distributed.optimizer import Adam, AdamConfig
 from ..distributed.sharding import data_spec, tree_shardings
 from ..models.model import Model
+from ..obs.log import get_logger
 from .mesh import make_debug_mesh, make_production_mesh
+
+log = get_logger("train")
 
 
 # --------------------------------------------------------------------------- #
@@ -216,7 +219,7 @@ def run_loop(trainer: Trainer, *, steps: int, ckpt_dir: Optional[str],
 
     if ckpt_dir and resume and ckpt.latest_step(ckpt_dir) is not None:
         got = trainer.restore(ckpt_dir)
-        print(f"[train] resumed from step {got}", flush=True)
+        log.info("resumed", step=got)
     elif trainer.params is None:
         trainer.init_state()
 
@@ -232,9 +235,8 @@ def run_loop(trainer: Trainer, *, steps: int, ckpt_dir: Optional[str],
             rec["tokens_per_s"] = round(t_tokens / dt, 1)
             if watchdog.observe(dt):
                 rec["straggler"] = True
-                print(f"[watchdog] step {rec['step']} took {dt:.2f}s "
-                      f"(median {watchdog.median:.2f}s) — straggler",
-                      flush=True)
+                log.warning("straggler", step=rec["step"], step_s=dt,
+                            median_s=watchdog.median)
             records.append(rec)
             if hb:
                 hb.beat(rec["step"])
@@ -242,16 +244,15 @@ def run_loop(trainer: Trainer, *, steps: int, ckpt_dir: Optional[str],
                 logf.write(json.dumps(rec) + "\n")
                 logf.flush()
             if rec["step"] % log_every == 0 or rec["step"] == 1:
-                print(f"[train] step {rec['step']:5d} "
-                      f"loss {rec['loss']:.4f} "
-                      f"gnorm {rec['grad_norm']:.3f} "
-                      f"{rec['tokens_per_s']:.0f} tok/s", flush=True)
+                log.info("step", step=rec["step"], loss=rec["loss"],
+                         gnorm=rec["grad_norm"],
+                         tok_per_s=rec["tokens_per_s"])
             if ckpt_dir and rec["step"] % ckpt_every == 0:
                 trainer.save(ckpt_dir)
                 ckpt.cleanup(ckpt_dir, keep=keep)
             if flag:
-                print("[train] preemption flag — checkpoint and exit",
-                      flush=True)
+                log.warning("preempted", step=trainer.step,
+                            checkpointing=bool(ckpt_dir))
                 if ckpt_dir:
                     trainer.save(ckpt_dir)
                 break
@@ -305,8 +306,8 @@ def main() -> None:
                        resume=not args.no_resume, hb_dir=args.hb_dir)
     if records:
         first, last = records[0], records[-1]
-        print(f"[train] done: {len(records)} steps in {time.time()-t0:.1f}s  "
-              f"loss {first['loss']:.4f} → {last['loss']:.4f}")
+        log.info("done", steps=len(records), wall_s=time.time() - t0,
+                 loss_first=first["loss"], loss_last=last["loss"])
 
 
 if __name__ == "__main__":

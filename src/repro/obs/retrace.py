@@ -1,0 +1,107 @@
+"""Compile/retrace detection: the test trick promoted to a signal.
+
+PR 7's warmup contract says a warmed tenant never pays an XLA
+trace/compile on a live request, and the tests pin it by comparing
+``pred._fn._cache_size()`` before and after traffic.  That comparison
+is exactly the production signal an operator needs — a post-warmup
+retrace means a shape leaked past the bucket ladder (or a policy swap
+invalidated the fused program) and some request just ate a multi-ms
+compile inside its latency budget.  This module makes the trick a
+first-class monitor:
+
+  * ``fn_cache_size(fn)`` — entries in one jitted callable's trace
+    cache (``None`` when the callable doesn't expose one);
+  * ``jit_cache_size(pred)`` — total reachable trace-cache entries for
+    a predictor: a ``trace_cache_size()`` method wins when the
+    predictor defines one (cascade predictors sum their stages, the
+    fused variant adds its program cache), otherwise the standard
+    surfaces are scanned (``_fn``, ``_jit_cache``);
+  * ``CompileWatch`` — per-tenant delta tracker.  ``poll()`` after each
+    batch returns ``(compiles, anomalies)``: every cache growth is a
+    compile event; growths after ``mark_warm()`` are anomalies.  A
+    cache *shrink* (e.g. ``set_policy`` dropping the fused jit cache)
+    resets the baseline instead of counting negative.
+
+``ServingRuntime`` polls after every batch and feeds the
+``repro_compile_events_total`` / ``repro_retrace_anomalies_total``
+counters (docs/OBSERVABILITY.md §Retrace anomalies).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+def fn_cache_size(fn) -> Optional[int]:
+    """Trace-cache entries of one jitted callable, or ``None`` if it
+    has no cache to inspect (plain Python callables, Pallas closures)."""
+    cs = getattr(fn, "_cache_size", None)
+    if callable(cs):
+        try:
+            return int(cs())
+        except Exception:           # noqa: BLE001 — a jax-internal API:
+            return None             # degrade to "unobservable", never raise
+    return None
+
+
+def jit_cache_size(pred) -> Optional[int]:
+    """Total reachable trace-cache entries for a predictor, or ``None``
+    when nothing observable was found (monitoring then degrades to
+    no-op rather than miscounting)."""
+    meth = getattr(pred, "trace_cache_size", None)
+    if callable(meth):
+        return meth()
+    total, found = 0, False
+    size = fn_cache_size(getattr(pred, "_fn", None))
+    if size is not None:
+        total, found = total + size, True
+    cache = getattr(pred, "_jit_cache", None)
+    if isinstance(cache, dict):
+        for fn in cache.values():
+            size = fn_cache_size(fn)
+            if size is not None:
+                total, found = total + size, True
+    return total if found else None
+
+
+class CompileWatch:
+    """Delta tracker over one predictor's trace caches.
+
+    ``poll()`` is cheap (a few attribute reads per call) and safe on
+    predictors with no observable cache — it just reports zeros."""
+
+    def __init__(self, pred):
+        self.pred = pred
+        self.warmed = False
+        self.compiles_total = 0       # every observed cache growth
+        self.anomalies_total = 0      # growths after mark_warm()
+        self._last = jit_cache_size(pred) or 0
+
+    @property
+    def observable(self) -> bool:
+        return jit_cache_size(self.pred) is not None
+
+    def refresh(self) -> None:
+        """Re-baseline without counting (e.g. right after warmup traced
+        the bucket ladder on purpose)."""
+        self._last = jit_cache_size(self.pred) or 0
+
+    def mark_warm(self) -> None:
+        """From here on, any new trace is an anomaly."""
+        self.refresh()
+        self.warmed = True
+
+    def poll(self) -> tuple:
+        """(new compile events, new anomalies) since the last poll."""
+        size = jit_cache_size(self.pred)
+        if size is None:
+            return 0, 0
+        delta = size - self._last
+        self._last = size
+        if delta <= 0:
+            # shrink = a deliberate cache reset (policy swap); re-baseline
+            return 0, 0
+        self.compiles_total += delta
+        if self.warmed:
+            self.anomalies_total += delta
+            return delta, delta
+        return delta, 0

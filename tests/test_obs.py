@@ -1,0 +1,643 @@
+"""Observability layer: registry, exposition, tracing, retrace
+detection, structured logging, and the instrumented serving runtime
+(docs/OBSERVABILITY.md).
+
+Conventions: every test builds its own ``MetricsRegistry`` (or swaps
+the process default and restores it) so metric values are exact — the
+process-wide default registry accumulates across tests by design,
+exactly like a Prometheus process.
+"""
+import io
+import json
+import re
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import core
+from repro.inference import ForestServer, ServingRuntime
+from repro.obs import (METRIC_CATALOG, CompileWatch, MetricsRegistry,
+                       MetricsServer, PHASES, ServingMetrics, Span,
+                       TraceBuffer, fn_cache_size, get_registry,
+                       json_snapshot, set_default_registry)
+from repro.obs.log import StructLogger, effective_level, set_level
+from repro.obs.trace import PHASES as TRACE_PHASES
+
+
+def _forest(seed=0, trees=8, features=6):
+    f = core.random_forest_ir(n_trees=trees, n_leaves=8,
+                              n_features=features, n_classes=3, seed=seed)
+    rng = np.random.default_rng(seed)
+    return core.quantize_forest(f, rng.normal(size=(128, features)))
+
+
+# --------------------------------------------------------------------------- #
+# registry basics
+# --------------------------------------------------------------------------- #
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("repro_t_total", "h")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1.0)                    # counters are monotone
+
+    g = reg.gauge("repro_t_gauge", "h")
+    g.set(7.0)
+    g.dec(2.0)
+    assert g.value == 5.0
+
+    h = reg.histogram("repro_t_ms", "h")
+    for v in range(100):
+        h.observe(float(v))
+    assert h.count == 100
+    assert h.sum == sum(range(100))
+    assert h.percentile(50) == pytest.approx(49.5)
+
+
+def test_labels_exact_schema_and_children():
+    reg = MetricsRegistry()
+    c = reg.counter("repro_l_total", "h", labels=("tenant",))
+    c.labels(tenant="a").inc()
+    c.labels(tenant="a").inc()
+    c.labels(tenant="b").inc()
+    assert c.labels(tenant="a").value == 2
+    assert c.labels(tenant="b").value == 1
+    with pytest.raises(ValueError):
+        c.labels(wrong="a")            # wrong label name
+    with pytest.raises(ValueError):
+        c.labels()                     # missing label
+    with pytest.raises(ValueError):
+        c.inc()                        # label-free sugar on labeled family
+
+
+def test_get_or_create_rejects_kind_and_schema_mismatch():
+    reg = MetricsRegistry()
+    reg.counter("repro_m_total", "h", labels=("tenant",))
+    # same spec: same family object back
+    again = reg.counter("repro_m_total", "h", labels=("tenant",))
+    assert again is reg.get("repro_m_total")
+    with pytest.raises(ValueError):
+        reg.gauge("repro_m_total", "h")               # kind mismatch
+    with pytest.raises(ValueError):
+        reg.counter("repro_m_total", "h", labels=("x",))  # label mismatch
+
+
+def test_metric_name_validation():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError):
+        reg.counter("0bad", "h")
+    with pytest.raises(ValueError):
+        reg.counter("bad-name", "h")
+    with pytest.raises(ValueError):
+        reg.counter("ok_total", "h", labels=("bad-label",))
+
+
+def test_disabled_registry_is_noop():
+    reg = MetricsRegistry(enabled=False)
+    c = reg.counter("repro_d_total", "h")
+    c.inc(5)
+    h = reg.histogram("repro_d_ms", "h")
+    h.observe(1.0)
+    assert c.value == 0.0
+    assert h.count == 0
+    reg.enable(True)
+    c.inc(5)
+    assert c.value == 5.0
+
+
+def test_default_registry_swap_restores():
+    mine = MetricsRegistry()
+    old = set_default_registry(mine)
+    try:
+        assert get_registry() is mine
+    finally:
+        set_default_registry(old)
+    assert get_registry() is old
+
+
+# --------------------------------------------------------------------------- #
+# exposition formats
+# --------------------------------------------------------------------------- #
+def test_prometheus_text_line_by_line():
+    reg = MetricsRegistry()
+    c = reg.counter("repro_p_total", "requests", labels=("tenant",))
+    c.labels(tenant="a b").inc(3)      # space → must be quoted+escaped
+    c.labels(tenant='q"\\\n').inc()    # quote, backslash, newline
+    g = reg.gauge("repro_p_gauge", "depth")
+    g.set(2.5)
+    h = reg.histogram("repro_p_ms", "latency")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+
+    text = reg.prometheus()
+    lines = text.splitlines()
+    # every family emits HELP then TYPE
+    assert "# HELP repro_p_total requests" in lines
+    assert "# TYPE repro_p_total counter" in lines
+    assert "# TYPE repro_p_gauge gauge" in lines
+    assert "# TYPE repro_p_ms summary" in lines
+    assert 'repro_p_total{tenant="a b"} 3' in lines
+    # escaped label value round-trips the specials
+    assert 'repro_p_total{tenant="q\\"\\\\\\n"} 1' in lines
+    assert "repro_p_gauge 2.5" in lines
+    assert 'repro_p_ms{quantile="0.5"} 2.5' in lines
+    assert "repro_p_ms_sum 10" in lines
+    assert "repro_p_ms_count 4" in lines
+    # well-formedness: every sample line is name[{labels}] value
+    sample_re = re.compile(
+        r'^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^{}]*\})? -?[0-9.einfa+-]+$')
+    for ln in lines:
+        if ln and not ln.startswith("#"):
+            assert sample_re.match(ln), ln
+
+
+def test_json_snapshot_round_trip():
+    reg = MetricsRegistry()
+    reg.counter("repro_j_total", "h", labels=("tenant",)) \
+       .labels(tenant="x").inc(2)
+    reg.histogram("repro_j_ms", "h").observe(4.0)
+    snap = reg.snapshot()
+    assert json.loads(json.dumps(snap)) == snap
+    assert snap["repro_j_total"]["type"] == "counter"
+    (sample,) = snap["repro_j_total"]["samples"]
+    assert sample["labels"] == {"tenant": "x"}
+    assert sample["value"] == 2
+    (hs,) = snap["repro_j_ms"]["samples"]
+    assert hs["count"] == 1 and hs["sum"] == 4.0
+    # json_snapshot wraps it with optional extra stats
+    full = json_snapshot(reg, extra=lambda: {"k": 1})
+    assert full["stats"] == {"k": 1}
+    assert full["metrics"].keys() == snap.keys()
+
+
+# --------------------------------------------------------------------------- #
+# thread-safety
+# --------------------------------------------------------------------------- #
+def test_thread_hammer_exact_totals_under_concurrent_scrapes():
+    reg = MetricsRegistry()
+    c = reg.counter("repro_h_total", "h", labels=("tenant",))
+    h = reg.histogram("repro_h_ms", "h", labels=("tenant",))
+    N_THREADS, N_OPS = 8, 500
+    stop = threading.Event()
+    scrapes = []
+
+    def mutate(tid):
+        child_c = c.labels(tenant=f"t{tid % 2}")
+        child_h = h.labels(tenant=f"t{tid % 2}")
+        for i in range(N_OPS):
+            child_c.inc()
+            child_h.observe(float(i))
+
+    def scrape():
+        while not stop.is_set():
+            scrapes.append(reg.prometheus())
+            reg.snapshot()
+
+    scraper = threading.Thread(target=scrape)
+    scraper.start()
+    threads = [threading.Thread(target=mutate, args=(i,))
+               for i in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    scraper.join()
+
+    total = sum(ch.value for ch in (c.labels(tenant="t0"),
+                                    c.labels(tenant="t1")))
+    assert total == N_THREADS * N_OPS            # no lost increments
+    assert (h.labels(tenant="t0").count
+            + h.labels(tenant="t1").count) == N_THREADS * N_OPS
+    assert scrapes                               # scraper actually ran
+
+
+# --------------------------------------------------------------------------- #
+# tracing
+# --------------------------------------------------------------------------- #
+def test_trace_buffer_ring_bound_and_order():
+    tb = TraceBuffer(cap=4)
+    for i in range(10):
+        tb.add(Span(rid=i, tenant="m", arrival_s=float(i)))
+    assert len(tb) == 4
+    assert tb.n_added == 10
+    recent = tb.recent()
+    assert [s["rid"] for s in recent] == [6, 7, 8, 9]   # oldest → newest
+    assert [s["rid"] for s in tb.recent(2)] == [8, 9]
+    parsed = json.loads(tb.to_json())
+    assert parsed == recent
+    tb.clear()
+    assert len(tb) == 0
+    with pytest.raises(ValueError):
+        TraceBuffer(cap=0)
+
+
+def test_span_to_dict_shape():
+    s = Span(rid=3, tenant="m", arrival_s=1.0, batch_size=4, bucket=8,
+             phases={"queue_ms": 1.0}, total_ms=2.5)
+    d = s.to_dict()
+    assert d["rid"] == 3 and d["bucket"] == 8 and d["ok"] is True
+    assert "error" not in d                     # only present on failure
+    assert json.loads(json.dumps(d)) == d
+    assert set(PHASES) == set(TRACE_PHASES)
+
+
+# --------------------------------------------------------------------------- #
+# retrace detection
+# --------------------------------------------------------------------------- #
+def test_compile_watch_counts_growth_and_anomalies():
+    class FakePred:
+        def __init__(self):
+            self.size = 0
+
+        def trace_cache_size(self):
+            return self.size
+
+    p = FakePred()
+    w = CompileWatch(p)
+    assert w.observable
+    assert w.poll() == (0, 0)
+    p.size = 2                         # two traces before warmup
+    assert w.poll() == (2, 0)
+    assert w.compiles_total == 2 and w.anomalies_total == 0
+    w.mark_warm()
+    p.size = 3                         # post-warmup growth → anomaly
+    assert w.poll() == (1, 1)
+    assert w.anomalies_total == 1
+    p.size = 0                         # deliberate cache reset
+    assert w.poll() == (0, 0)
+    p.size = 1                         # growth from the new baseline
+    assert w.poll() == (1, 1)
+
+
+def test_compile_watch_unobservable_predictor_is_noop():
+    w = CompileWatch(object())
+    assert not w.observable
+    assert w.poll() == (0, 0)
+    assert fn_cache_size(lambda x: x) is None
+
+
+def test_real_predictor_trace_cache_observed():
+    qf = _forest()
+    pred = core.compile_forest(qf, engine="bitvector")
+    w = CompileWatch(pred)
+    assert w.observable
+    pred.predict(np.zeros((4, qf.n_features_in)))
+    compiles, anomalies = w.poll()
+    assert compiles >= 1 and anomalies == 0
+    w.mark_warm()
+    # a brand-new shape after mark_warm is an anomaly
+    pred.predict(np.zeros((32, qf.n_features_in)))
+    compiles, anomalies = w.poll()
+    assert compiles >= 1 and anomalies == compiles
+
+
+def test_cascade_trace_cache_size_sums_stages():
+    from repro.cascade import CascadeSpec, MarginGate
+    qf = _forest(trees=8)
+    spec = CascadeSpec(stages=(4, 8), policy=MarginGate(0.5))
+    casc = core.compile_forest(qf, engine="bitvector", cascade=spec)
+    before = casc.trace_cache_size()
+    assert before is not None
+    casc.predict(np.zeros((8, qf.n_features_in)))
+    assert casc.trace_cache_size() > before
+
+    fspec = CascadeSpec(stages=(4, 8), policy=MarginGate(0.5), fused=True)
+    fused = core.compile_forest(qf, engine="bitvector", cascade=fspec)
+    fused.predict(np.zeros((8, qf.n_features_in)))
+    grown = fused.trace_cache_size()
+    assert grown is not None and grown >= 1
+    fused.set_policy(MarginGate(0.25))     # drops the fused jit cache
+    w = CompileWatch(fused)
+    assert w.poll() == (0, 0)              # shrink re-baselines, no count
+
+
+# --------------------------------------------------------------------------- #
+# structured logging
+# --------------------------------------------------------------------------- #
+def test_logger_line_format_and_quoting():
+    buf = io.StringIO()
+    lg = StructLogger("testcomp", stream=buf)
+    lg.error("an_event", n=3, ms=1.23456789, msg="a b", eq="k=v")
+    line = buf.getvalue().strip()
+    parts = line.split(" ", 3)
+    assert parts[1] == "ERROR"
+    assert parts[2] == "testcomp"
+    assert "an_event" in parts[3]
+    assert "n=3" in line
+    assert "ms=1.23457" in line            # floats at %.6g
+    assert "msg='a b'" in line             # spaces quoted
+    assert "eq='k=v'" in line              # '=' quoted
+
+
+def test_logger_quiet_under_pytest_and_forced_level():
+    # running under pytest: effective level is warning → info suppressed
+    assert effective_level() == "warning"
+    buf = io.StringIO()
+    lg = StructLogger("t", stream=buf)
+    lg.info("hidden")
+    assert buf.getvalue() == ""
+    lg.warning("shown")
+    assert "shown" in buf.getvalue()
+    set_level("debug")
+    try:
+        lg.debug("now_visible")
+        assert "now_visible" in buf.getvalue()
+    finally:
+        set_level(None)
+    with pytest.raises(ValueError):
+        set_level("loud")
+
+
+def test_logger_env_level(monkeypatch):
+    monkeypatch.setenv("REPRO_LOG_LEVEL", "error")
+    buf = io.StringIO()
+    lg = StructLogger("t", stream=buf)
+    lg.warning("hidden")
+    assert buf.getvalue() == ""
+    lg.error("shown")
+    assert "shown" in buf.getvalue()
+
+
+# --------------------------------------------------------------------------- #
+# HTTP exposition
+# --------------------------------------------------------------------------- #
+def _get(url, timeout=10):
+    with urllib.request.urlopen(url, timeout=timeout) as resp:
+        return resp.status, resp.read().decode()
+
+
+def test_metrics_server_endpoints():
+    reg = MetricsRegistry()
+    reg.counter("repro_e_total", "h").inc(4)
+    tb = TraceBuffer(cap=8)
+    tb.add(Span(rid=1, tenant="m", arrival_s=0.0))
+    with MetricsServer(reg, traces=tb,
+                       extra=lambda: {"up": True}) as srv:
+        status, text = _get(srv.url + "/metrics")
+        assert status == 200
+        assert "repro_e_total 4" in text
+        status, body = _get(srv.url + "/metrics.json")
+        snap = json.loads(body)
+        assert snap["metrics"]["repro_e_total"]["samples"][0]["value"] == 4
+        assert snap["stats"] == {"up": True}
+        _, body = _get(srv.url + "/traces?n=5")
+        assert [s["rid"] for s in json.loads(body)] == [1]
+        status, body = _get(srv.url + "/healthz")
+        assert (status, body) == (200, "ok")
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(srv.url + "/nope")
+        assert ei.value.code == 404
+    # idempotent close
+    srv.close()
+
+
+# --------------------------------------------------------------------------- #
+# serving integration
+# --------------------------------------------------------------------------- #
+def test_serving_metrics_catalog_materialized():
+    reg = MetricsRegistry()
+    sm = ServingMetrics(reg)
+    assert set(reg.names()) == set(METRIC_CATALOG)
+    text = reg.prometheus()
+    for name in METRIC_CATALOG:        # full catalog before any traffic
+        assert f"# TYPE {name} " in text
+
+
+def test_runtime_spans_stats_and_metrics_manual_clock():
+    qf = _forest(seed=1)
+    pred = core.compile_forest(qf, engine="bitvector")
+    reg = MetricsRegistry()
+    rt = ServingRuntime(obs=reg)
+    rt.add_model("m", pred, max_batch=8, max_wait_ms=1.0)
+    rt.warmup()
+    X = np.random.default_rng(0).normal(size=(6, qf.n_features_in))
+    reqs = [rt.submit("m", X[i], arrival_s=0.001 * i) for i in range(6)]
+    rt.flush(now_s=1.0)
+
+    # spans attached, phases complete, batch padded to the pow2 bucket
+    for r in reqs:
+        assert r.span is not None
+        assert r.span.batch_size == 6 and r.span.bucket == 8
+        assert set(r.span.phases) == set(PHASES)
+        assert r.span.total_ms == pytest.approx(r.latency_ms)
+    assert rt.obs.traces.n_added == 6
+
+    # metrics: exact counts on the isolated registry
+    snap = reg.snapshot()
+
+    def value(name):
+        return snap[name]["samples"][0]["value"]
+
+    assert value("repro_requests_total") == 6
+    assert value("repro_batches_total") == 1
+    assert snap["repro_latency_ms"]["samples"][0]["count"] == 6
+    qsamples = {tuple(sorted(s["labels"].items())): s
+                for s in snap["repro_phase_ms"]["samples"]}
+    assert qsamples[(("phase", "queue_ms"), ("tenant", "m"))]["count"] == 6
+    assert qsamples[(("phase", "compute_ms"), ("tenant", "m"))]["count"] == 1
+
+    # stats(): summary + queue depth + retrace watch state
+    st = rt.stats("m")
+    assert st["queue_depth"] == 0
+    assert st["retrace_anomalies"] == 0
+    assert st["compile_events"] == 0           # warmed: no live compile
+    assert st["trace_cache_observable"]
+    rt.close()
+
+
+def test_runtime_retrace_anomaly_surfaces():
+    qf = _forest(seed=2)
+    pred = core.compile_forest(qf, engine="bitvector")
+    reg = MetricsRegistry()
+    rt = ServingRuntime(obs=reg)
+    # hard_max_batch is 4 → warmup ladder stops at 4; a direct predict
+    # on a bigger, never-warmed shape then leaks a post-warmup trace
+    rt.add_model("m", pred, max_batch=4, max_wait_ms=1.0)
+    rt.warmup()
+    pred.predict(np.zeros((64, qf.n_features_in)))   # the leak
+    X = np.zeros((2, qf.n_features_in))
+    rt.submit("m", X[0], arrival_s=0.0)
+    rt.flush(now_s=1.0)                # poll happens on the next batch
+    st = rt.stats("m")
+    assert st["retrace_anomalies"] >= 1
+    assert st["compile_events"] >= 1
+    (sample,) = reg.snapshot()["repro_retrace_anomalies_total"]["samples"]
+    assert sample["value"] >= 1
+    rt.close()
+
+
+def test_runtime_controller_decisions_exported():
+    from repro.inference import SLOConfig
+    qf = _forest(seed=3)
+    pred = core.compile_forest(qf, engine="bitvector")
+    reg = MetricsRegistry()
+    rt = ServingRuntime(obs=reg)
+    rt.add_model("m", pred, max_batch=8, max_wait_ms=4.0,
+                 slo=SLOConfig(target_p99_ms=1e9, window=4,
+                               max_batch=8, max_wait_ms=4.0))
+    rt.warmup()
+    X = np.zeros((8, qf.n_features_in))
+    for i in range(8):
+        rt.submit("m", X[i], arrival_s=0.0)
+    rt.flush(now_s=1.0)                # 8 observations → 2 windows
+    st = rt.stats("m")
+    assert st["controller"]["n_decisions"] == 2
+    assert st["controller"]["actions"]["grow"] == 2   # huge target
+    assert len(st["decisions"]) == 2
+    assert st["decisions"][-1] == st["controller"]["last_decision"]
+    snap = reg.snapshot()
+    (d,) = snap["repro_controller_decisions_total"]["samples"]
+    assert d["labels"] == {"tenant": "m", "action": "grow"}
+    assert d["value"] == 2
+    gauges = {s["labels"]["tenant"]: s["value"]
+              for s in snap["repro_effective_max_batch"]["samples"]}
+    assert gauges["m"] == st["effective_max_batch"]
+    rt.close()
+
+
+def test_runtime_error_path_counts_and_spans():
+    class Boom:
+        def predict(self, X):
+            raise RuntimeError("boom")
+
+        def host_forest(self):
+            return None
+
+    reg = MetricsRegistry()
+    rt = ServingRuntime(obs=reg)
+    rt.add_model("m", Boom(), max_batch=4, max_wait_ms=1.0)
+    r = rt.submit("m", np.zeros(3), arrival_s=0.0)
+    rt.flush(now_s=1.0)
+    with pytest.raises(RuntimeError):
+        r.wait(timeout=5)
+    assert r.span is not None and r.span.ok is False
+    assert "boom" in r.span.error
+    snap = reg.snapshot()
+    assert snap["repro_request_errors_total"]["samples"][0]["value"] == 1
+    assert snap["repro_requests_total"]["samples"][0]["value"] == 1
+    rt.close()
+
+
+def test_threaded_runtime_with_concurrent_scrape():
+    qf = _forest(seed=4)
+    pred = core.compile_forest(qf, engine="bitvector")
+    reg = MetricsRegistry()
+    rt = ServingRuntime(obs=reg)
+    rt.add_model("m", pred, max_batch=16, max_wait_ms=0.5)
+    rt.warmup()
+    X = np.random.default_rng(1).normal(size=(32, qf.n_features_in))
+    n_req = 200
+    with rt:
+        url = rt.serve_metrics().url
+        stop = threading.Event()
+        errors = []
+
+        def scraper():
+            while not stop.is_set():
+                try:
+                    _get(url + "/metrics")
+                    _get(url + "/metrics.json")
+                except Exception as e:          # noqa: BLE001
+                    errors.append(e)
+
+        th = threading.Thread(target=scraper)
+        th.start()
+        reqs = [rt.submit("m", X[i % len(X)]) for i in range(n_req)]
+        for r in reqs:
+            r.wait(timeout=120)
+        stop.set()
+        th.join()
+        status, text = _get(url + "/metrics")
+    assert not errors
+    assert status == 200
+    c = reg.get("repro_requests_total").labels(tenant="m")
+    assert c.value == n_req
+    assert rt.stats("m")["retrace_anomalies"] == 0
+    # endpoint stopped by close()
+    with pytest.raises(Exception):
+        _get(url + "/healthz", timeout=2)
+
+
+def test_runtime_obs_disabled_has_no_instrumentation():
+    qf = _forest(seed=5)
+    pred = core.compile_forest(qf, engine="bitvector")
+    rt = ServingRuntime(obs=False)
+    rt.add_model("m", pred, max_batch=4, max_wait_ms=1.0)
+    rt.warmup()
+    r = rt.submit("m", np.zeros(qf.n_features_in), arrival_s=0.0)
+    rt.flush(now_s=1.0)
+    assert rt.obs is None
+    assert r.span is None
+    assert rt.tenant("m").watch is None
+    with pytest.raises(RuntimeError):
+        rt.serve_metrics()
+    st = rt.stats("m")                 # stats() still works without obs
+    assert st["queue_depth"] == 0 and "retrace_anomalies" not in st
+    rt.close()
+
+
+def test_forest_server_phase_stats_and_obs():
+    qf = _forest(seed=6)
+    pred = core.compile_forest(qf, engine="bitvector")
+    reg = MetricsRegistry()
+    srv = ForestServer(pred, max_batch=4, max_wait_ms=1.0, obs=reg,
+                       obs_label="sync")
+    X = np.random.default_rng(2).normal(size=(4, qf.n_features_in))
+    for i in range(4):
+        srv.submit(X[i], arrival_s=0.0)
+    srv.flush(now_s=1.0)
+    s = srv.stats.summary()
+    assert s["compute_p50_ms"] >= 0.0
+    assert s["sync_p50_ms"] >= 0.0
+    snap = reg.snapshot()
+    (c,) = snap["repro_requests_total"]["samples"]
+    assert c["labels"] == {"tenant": "sync"} and c["value"] == 4
+
+
+def test_autotune_metrics_hit_miss_and_sweep():
+    from repro.core import engine_select
+    qf = _forest(seed=7)
+    mine = MetricsRegistry()
+    old = set_default_registry(mine)
+    try:
+        engine_select.clear_cache()
+        engines = ("qs", "native")
+        engine_select.choose(qf, 8, engines=engines, cache_path=None,
+                             repeats=1)
+        snap = mine.snapshot()
+        assert snap["repro_autotune_sweeps_total"]["samples"][0]["value"] \
+            == 1
+        (m,) = snap["repro_autotune_cache_misses_total"]["samples"]
+        assert m["labels"] == {"reason": "cold"}
+        assert snap["repro_autotune_candidates_benched_total"][
+            "samples"][0]["value"] == len(engines)
+        assert snap["repro_autotune_sweep_seconds"]["samples"][0][
+            "count"] == 1
+        # second call: memory-layer hit, no new sweep
+        engine_select.choose(qf, 8, engines=engines, cache_path=None,
+                             repeats=1)
+        snap = mine.snapshot()
+        (hit,) = snap["repro_autotune_cache_hits_total"]["samples"]
+        assert hit["labels"] == {"layer": "memory"} and hit["value"] == 1
+        assert snap["repro_autotune_sweeps_total"]["samples"][0][
+            "value"] == 1
+        # winner info gauge carries the decision in its labels
+        (w,) = snap["repro_autotune_winner_info"]["samples"]
+        assert w["value"] == 1.0 and w["labels"]["engine"] in engines
+        # widening the candidate set forces a partial-coverage miss
+        engine_select.choose(qf, 8, engines=("qs", "native", "qs-bitmm"),
+                             cache_path=None, repeats=1)
+        snap = mine.snapshot()
+        reasons = {s["labels"]["reason"]: s["value"]
+                   for s in snap["repro_autotune_cache_misses_total"][
+                       "samples"]}
+        assert reasons.get("partial") == 1
+    finally:
+        set_default_registry(old)
+        engine_select.clear_cache()

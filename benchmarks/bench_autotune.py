@@ -1,0 +1,338 @@
+"""Zero-shot compilation (-Os) benchmark: what does the learned cost
+model buy over measuring everything?
+
+    PYTHONPATH=src python -m benchmarks.bench_autotune         # tables
+    PYTHONPATH=src python -m benchmarks.bench_autotune --json  # + snapshot
+
+Three experiments (docs/AUTOTUNE.md acceptance):
+
+  * **fleet cold start** — N tenant shapes, time-to-first-served-
+    prediction per tenant under ``mode="predict"`` (one compile + the
+    feedback quick-bench) vs the full measured sweep over the same
+    candidate axes (engines × ``opt_levels=(1, 2)``, every candidate
+    compiled and benched, shared-IR on — the strongest baseline).  The
+    claim: ≥5× faster in aggregate.
+  * **prediction quality** — train on a shape grid, full-sweep held-out
+    shapes the model never saw, and compare the *measured* us/instance
+    of the model's pick against the measured winner's.  The claim: the
+    pick is within 10% on ≥80% of shapes; every miss is listed with its
+    actual ratio (honest-measurement rule: misses are data, not noise
+    to hide).
+  * **shared-IR sweeps** — a full sweep with optimizer variants
+    (``opt_levels=(1, 2)``), ``share_ir`` off vs on.  Off re-runs the
+    optimizer middle-end per candidate (engines × levels); on runs it
+    once per (quant, opt) point and candidate pruning skips provably
+    identical post-dedup pipelines.  The claim: ≥2× lower sweep
+    wall-clock with the winner unchanged.
+
+CPU-container caveat (PR-1 measurement discipline): all numbers are
+relative comparisons of XLA programs on this host; the model itself is
+device-fingerprinted, so a cache trained here predicts *for* here.
+``--json`` writes ``BENCH_autotune.json`` at the repo root plus raw
+records and CSVs under ``experiments/bench/`` — one run produces all
+three artifacts (PR-1 artifact-consistency rule); non-default scales
+suffix the CSV/raw names and leave the canonical snapshot untouched.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro import core, tune
+from repro.core import engine_select
+
+from .common import SCALE, Table, save_json, scale_pick
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SNAPSHOT = os.path.join(REPO_ROOT, "BENCH_autotune.json")
+BATCH = 256
+
+
+def shapes():
+    """(train, held_out, fleet) shape lists per scale: (T, L, d).  The
+    train grid brackets the others — held-out and fleet shapes are
+    interpolation targets the model never saw, not extrapolations."""
+    train = scale_pick(
+        [(16, 16, 16), (64, 16, 16), (16, 64, 16), (64, 64, 16),
+         (32, 32, 16), (128, 32, 16)],
+        [(16, 16, 32), (32, 16, 32), (64, 16, 32), (128, 16, 32),
+         (256, 16, 32), (16, 64, 32), (32, 64, 32), (64, 64, 32),
+         (128, 64, 32), (256, 64, 32), (16, 32, 32), (32, 32, 32),
+         (64, 32, 32), (128, 32, 32), (256, 32, 32)],
+        [(16, 16, 32), (32, 16, 32), (64, 16, 32), (128, 16, 32),
+         (256, 16, 32), (512, 16, 32), (16, 64, 32), (32, 64, 32),
+         (64, 64, 32), (128, 64, 32), (256, 64, 32), (512, 64, 32),
+         (16, 32, 32), (64, 32, 32), (256, 32, 32), (512, 32, 32)],
+    )
+    held_out = scale_pick(
+        [(24, 16, 16), (48, 32, 16), (96, 16, 16)],
+        [(24, 16, 32), (48, 16, 32), (96, 16, 32), (192, 16, 32),
+         (24, 32, 32), (96, 32, 32), (48, 64, 32), (96, 64, 32),
+         (192, 64, 32), (192, 32, 32)],
+        [(24, 16, 32), (48, 16, 32), (96, 16, 32), (192, 16, 32),
+         (384, 16, 32), (24, 32, 32), (96, 32, 32), (384, 32, 32),
+         (48, 64, 32), (96, 64, 32), (192, 64, 32), (384, 64, 32)],
+    )
+    fleet = scale_pick(
+        [(20, 16, 16), (40, 32, 16), (80, 16, 16), (112, 32, 16)],
+        [(20, 16, 32), (40, 16, 32), (56, 32, 32), (80, 32, 32),
+         (112, 16, 32), (144, 64, 32), (176, 32, 32), (224, 64, 32)],
+        [(20, 16, 32), (40, 16, 32), (56, 32, 32), (80, 32, 32),
+         (112, 16, 32), (144, 64, 32), (176, 32, 32), (224, 64, 32),
+         (288, 16, 32), (320, 64, 32), (416, 32, 32), (448, 64, 32)],
+    )
+    return train, held_out, fleet
+
+
+def _forest(T, L, d, seed):
+    return core.quantize_forest(core.random_forest_ir(T, L, d, seed=seed),
+                                None)
+
+
+OPT_LEVELS = (1, 2)      # the candidate axis -Os predicts over: every
+#                          sweep here is engines × {plain, @O1, @O2}
+
+
+def train_model(cache, train_shapes, engines, repeats):
+    """Populate ``cache`` with measured sweeps over the train grid and
+    fit the cost model from it.  Returns (model, model_path, seconds)."""
+    engine_select.clear_cache()
+    t0 = time.perf_counter()
+    reps = max(repeats, 5)     # training labels are the model's ground
+    #                            truth: worth steadier medians than the
+    #                            per-tenant sweeps pay
+    for i, (T, L, d) in enumerate(train_shapes):
+        engine_select.choose(_forest(T, L, d, seed=i), BATCH,
+                             engines=engines, opt_levels=OPT_LEVELS,
+                             cache_path=cache, repeats=reps)
+    sweep_s = time.perf_counter() - t0
+    model_path = os.path.join(os.path.dirname(cache), "cost_model.json")
+    model = tune.train_from_cache(cache, save_to=model_path)
+    print(f"[train] {len(train_shapes)} sweeps in {sweep_s:.1f}s → "
+          f"{model.n_rows} rows, resid_sigma={model.resid_sigma:.3f}")
+    return model, model_path, sweep_s
+
+
+def bench_fleet(tmp, model_path, fleet_shapes, engines, repeats):
+    """Cold-start TTFP per tenant: full measured sweep vs -Os predict.
+    Both paths start from an empty mem cache and an empty disk cache and
+    are timed through the first served prediction."""
+    suffix = "" if SCALE == "default" else f"_{SCALE}"
+    t = Table(f"bench_autotune_fleet{suffix}",
+              ["tenant", "shape", "full_sweep_s", "os_s", "speedup",
+               "full_winner", "os_pick", "confidence"])
+    rows, full_total, os_total = [], 0.0, 0.0
+    for i, (T, L, d) in enumerate(fleet_shapes):
+        f = _forest(T, L, d, seed=100 + i)
+        X = np.random.default_rng(i).normal(size=(BATCH, f.n_features_in))
+
+        engine_select.clear_cache()
+        full_cache = os.path.join(tmp, f"fleet_full_{i}.json")
+        t0 = time.perf_counter()
+        cf = engine_select.choose(f, BATCH, engines=engines,
+                                  opt_levels=OPT_LEVELS,
+                                  cache_path=full_cache, repeats=repeats)
+        cf.predictor.predict(X)
+        full_s = time.perf_counter() - t0
+
+        engine_select.clear_cache()
+        os_cache = os.path.join(tmp, f"fleet_os_{i}.json")
+        t0 = time.perf_counter()
+        co = engine_select.choose(f, BATCH, engines=engines,
+                                  opt_levels=OPT_LEVELS,
+                                  cache_path=os_cache, mode="predict",
+                                  cost_model=model_path,
+                                  confidence_threshold=0.0,
+                                  repeats=repeats)
+        co.predictor.predict(X)
+        os_s = time.perf_counter() - t0
+
+        full_total += full_s
+        os_total += os_s
+        conf = f"{co.confidence:.3f}" if co.confidence is not None else "-"
+        t.add(f"t{i}", f"T{T}/L{L}/d{d}", f"{full_s:.3f}", f"{os_s:.3f}",
+              f"{full_s / os_s:.1f}x", cf.engine, co.engine, conf)
+        rows.append({"tenant": f"t{i}", "shape": [T, L, d],
+                     "full_sweep_s": full_s, "os_s": os_s,
+                     "full_winner": cf.engine, "os_pick": co.engine,
+                     "predicted": co.predicted,
+                     "confidence": co.confidence})
+    speedup = full_total / os_total
+    rec = {"n_tenants": len(fleet_shapes), "engines": list(engines),
+           "opt_levels": list(OPT_LEVELS),
+           "n_candidates": len(engines) * (1 + len(OPT_LEVELS)),
+           "full_total_s": full_total, "os_total_s": os_total,
+           "speedup": speedup, "target": 5.0,
+           "met": speedup >= 5.0, "tenants": rows}
+    t.print()
+    t.save()
+    print(f"[fleet] time-to-first-prediction, {len(fleet_shapes)} cold "
+          f"tenants: full={full_total:.1f}s -Os={os_total:.1f}s → "
+          f"{speedup:.1f}x (target ≥5x: "
+          f"{'MET' if rec['met'] else 'NOT MET'})")
+    return rec
+
+
+def bench_quality(tmp, model, held_out, engines, repeats):
+    """Held-out prediction quality: the model's pick, measured, vs the
+    measured winner.  within-10% fraction is the headline; every miss
+    is listed with its measured ratio."""
+    suffix = "" if SCALE == "default" else f"_{SCALE}"
+    t = Table(f"bench_autotune_quality{suffix}",
+              ["shape", "predicted", "winner", "pick_us", "winner_us",
+               "excess", "within_10pct"])
+    rows = []
+    for i, (T, L, d) in enumerate(held_out):
+        f = _forest(T, L, d, seed=500 + i)
+        meta = engine_select.shape_meta(f, BATCH)
+        assess = model.assess(meta, engines)
+        pick = engines[int(assess["order"][0])]
+
+        engine_select.clear_cache()
+        cache = os.path.join(tmp, f"ho_{i}.json")
+        c = engine_select.choose(f, BATCH, engines=engines,
+                                 cache_path=cache,
+                                 repeats=max(repeats, 5))
+        with open(cache) as fh:
+            bench_us = json.load(fh)[c.key]["bench_us"]
+        pick_us, win_us = bench_us[pick], bench_us[c.engine]
+        excess = pick_us / win_us - 1.0
+        ok = excess <= 0.10
+        t.add(f"T{T}/L{L}/d{d}", pick, c.engine, f"{pick_us:.1f}",
+              f"{win_us:.1f}", f"{excess * 100:+.1f}%",
+              "yes" if ok else "NO")
+        rows.append({"shape": [T, L, d], "predicted": pick,
+                     "winner": c.engine, "pick_us": pick_us,
+                     "winner_us": win_us, "excess": excess,
+                     "within_10pct": ok,
+                     "confidence": assess["confidence"]})
+    n_ok = sum(r["within_10pct"] for r in rows)
+    frac = n_ok / len(rows)
+    misses = [r for r in rows if not r["within_10pct"]]
+    rec = {"n_held_out": len(rows), "n_within_10pct": n_ok,
+           "fraction": frac, "target": 0.8, "met": frac >= 0.8,
+           "misses": misses, "shapes": rows}
+    t.print()
+    t.save()
+    print(f"[quality] {n_ok}/{len(rows)} held-out shapes within 10% of "
+          f"the measured winner ({frac * 100:.0f}%, target ≥80%: "
+          f"{'MET' if rec['met'] else 'NOT MET'})")
+    for m in misses:
+        T, L, d = m["shape"]
+        print(f"[quality]   miss: T{T}/L{L}/d{d} picked "
+              f"{m['predicted']} at {m['excess'] * 100:+.1f}% over "
+              f"{m['winner']}")
+    return rec
+
+
+def bench_shared_ir(engines, repeats):
+    """One optimizer-variant sweep (engines × ``opt_levels=(1, 2)``),
+    ``share_ir`` off vs on, winners compared.  No disk cache — both runs
+    measure every candidate from scratch."""
+    T, L, d = scale_pick((128, 32, 32), (1024, 64, 64), (1536, 96, 64))
+    reps = repeats
+    f = _forest(T, L, d, seed=7)
+    times, winners, timings, pruned = {}, {}, {}, {}
+    for flag in (False, True):
+        engine_select.clear_cache()
+        t0 = time.perf_counter()
+        c = engine_select.choose(f, BATCH, engines=engines,
+                                 opt_levels=(1, 2), cache_path=None,
+                                 repeats=reps, share_ir=flag)
+        times[flag] = time.perf_counter() - t0
+        winners[flag] = c.engine
+        timings[flag] = dict(c.timings)
+        pruned[flag] = list(c.pruned)
+    speedup = times[False] / times[True]
+    # two independent sweeps re-measure every candidate: a near-tie can
+    # flip the argmin either way regardless of share_ir.  When the
+    # names differ, re-bench the two picks head-to-head with far more
+    # repeats and call the winner unchanged iff they are a statistical
+    # tie (≤5% apart) — the gap is reported either way.
+    gap = 0.0
+    if winners[False] != winners[True]:
+        facs = engine_select._candidate_factories(
+            f, tuple(engines), None, None, 1, opt_levels=(1, 2),
+            opt_cache={})
+        X = engine_select._bench_rows(f, engine_select.bucket_batch(BATCH),
+                                      0)
+        head = {w: engine_select._bench_once(facs[w](), X, repeats=15)
+                for w in {winners[False], winners[True]}}
+        gap = (max(head.values()) - min(head.values())) \
+            / min(head.values())
+    unchanged = winners[False] == winners[True] or gap <= 0.05
+    rec = {"shape": [T, L, d], "engines": list(engines),
+           "opt_levels": [1, 2], "n_candidates": 3 * len(engines),
+           "repeats": reps,
+           "off_s": times[False], "on_s": times[True],
+           "speedup": speedup, "target": 2.0,
+           "winner_off": winners[False], "winner_on": winners[True],
+           "winner_gap": gap, "winner_unchanged": unchanged,
+           "pruned": pruned[True],
+           "met": speedup >= 2.0 and unchanged}
+    print(f"[shared-ir] T{T}/L{L}/d{d}, {3 * len(engines)} candidates: "
+          f"off={times[False]:.1f}s on={times[True]:.1f}s → "
+          f"{speedup:.1f}x, winner {winners[False]} → {winners[True]} "
+          f"(gap {gap * 100:.1f}%, {len(pruned[True])} pruned; target "
+          f"≥2x at unchanged winner: "
+          f"{'MET' if rec['met'] else 'NOT MET'})")
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_autotune.json at the repo "
+                         "root (default scale only)")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    print(f"[bench_autotune] scale={SCALE} "
+          f"fingerprint={engine_select.fingerprint_hash()}")
+    engines = engine_select.default_engines(include_pallas=False)
+    train, held_out, fleet = shapes()
+    suffix = "" if SCALE == "default" else f"_{SCALE}"
+
+    with tempfile.TemporaryDirectory() as tmp:
+        cache = os.path.join(tmp, "train_cache.json")
+        model, model_path, train_s = train_model(cache, train, engines,
+                                                 args.repeats)
+        fleet_rec = bench_fleet(tmp, model_path, fleet, engines,
+                                args.repeats)
+        qual_rec = bench_quality(tmp, model, held_out, engines,
+                                 args.repeats)
+    ir_rec = bench_shared_ir(engines, args.repeats)
+    engine_select.clear_cache()
+
+    snapshot = {
+        "scale": SCALE,
+        "batch": BATCH,
+        "engines": list(engines),
+        "train": {"n_shapes": len(train), "sweep_s": train_s,
+                  "n_rows": model.n_rows,
+                  "resid_sigma": model.resid_sigma},
+        "fleet_cold_start": fleet_rec,
+        "prediction_quality": qual_rec,
+        "shared_ir_sweep": ir_rec,
+        "all_targets_met": (fleet_rec["met"] and qual_rec["met"]
+                            and ir_rec["met"]),
+    }
+    if args.json:
+        save_json(f"bench_autotune{suffix}_raw", snapshot)
+        if SCALE != "default":
+            print(f"scale={SCALE}: {SNAPSHOT} left untouched")
+        else:
+            with open(SNAPSHOT, "w") as f:
+                json.dump(snapshot, f, indent=1, default=float)
+            print(f"snapshot written to {SNAPSHOT}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,9 +8,10 @@ roofline benches + the engine A/B harness.
     PYTHONPATH=src python -m benchmarks.run --only table4_merging
 
 ``--json`` makes the engine bench write ``BENCH_engines.json``, the
-cascade bench ``BENCH_cascade.json``, and the optimizer bench
-``BENCH_optim.json`` perf snapshots at the repo root, so successive PRs
-accumulate a trajectory.  ``--only <name>`` runs a single bench — the
+cascade bench ``BENCH_cascade.json``, the optimizer bench
+``BENCH_optim.json``, and the autotune bench ``BENCH_autotune.json``
+perf snapshots at the repo root, so successive PRs accumulate a
+trajectory.  ``--only <name>`` runs a single bench — the
 full sweep is far too slow when iterating on one table.
 
 The forest-roofline bench needs 512 placeholder devices, so it runs as a
@@ -65,6 +66,7 @@ def _benches(json_flag: bool) -> dict:
         "bench_cascade": with_json("bench_cascade"),
         "bench_optim": with_json("bench_optim"),
         "bench_serving": with_json("bench_serving"),
+        "bench_autotune": with_json("bench_autotune"),
         "roofline_forest": _run_roofline,
     }
 

@@ -7,6 +7,7 @@
     PYTHONPATH=src python scripts/check_engines.py --serving   # + runtime
     PYTHONPATH=src python scripts/check_engines.py --int       # + int/FLInt
     PYTHONPATH=src python scripts/check_engines.py --obs       # + metrics
+    PYTHONPATH=src python scripts/check_engines.py --os        # + -Os
 
 The engine list comes from ``core.registry`` — a newly registered engine
 shows up here (and in the benchmarks and the agreement tests) with no
@@ -35,11 +36,17 @@ bit-exact with full instrumentation on (plain + fused-cascade tenants,
 threaded runtime, live scrape endpoint), the Prometheus scrape exposes
 every catalog metric as well-formed text, ``/metrics.json`` parses and
 carries the runtime stats, and the warmed fleet serves with **zero**
-retrace anomalies.
+retrace anomalies.  ``--os`` checks zero-shot compilation
+(docs/AUTOTUNE.md): a cost model trained from measured sweeps must hand
+back a plan bit-exact with compiling that plan directly, the
+low-confidence fallback's narrow sweep must agree with the restricted
+full sweep, and an ``-Os`` fleet cold-start must survive a manifest
+save/load round trip bit-identically.
 
 Exit status is non-zero on any FAIL line, so CI can gate on it.
 """
 import argparse
+import os
 import sys
 
 import numpy as np
@@ -361,6 +368,94 @@ def check_obs(ds, qf, X):
           f"retrace_anomalies={anomalies}")
 
 
+def check_os(ds, qf, X):
+    """Zero-shot compilation smoke (docs/AUTOTUNE.md acceptance): train
+    a cost model from a few measured sweeps, then (1) the predict path
+    returns a plan bit-exact with compiling that plan directly, (2) the
+    low-confidence fallback's narrow sweep agrees with the full sweep
+    restricted to its top-k set, (3) a fleet cold-starts under ``-Os``
+    and survives a manifest save/load round trip bit-identically."""
+    import tempfile
+
+    from repro import tune
+    from repro.core import engine_select
+    from repro.inference import ServingRuntime
+
+    engines = ("qs", "qs-bitmm", "native")
+    with tempfile.TemporaryDirectory() as td:
+        cache = os.path.join(td, "cache.json")
+        engine_select.clear_cache()
+        shapes = [(8, 16, 6), (16, 16, 8), (24, 32, 10), (12, 8, 6)]
+        for i, (T, L, d) in enumerate(shapes):
+            f = core.random_forest_ir(T, L, d, n_classes=1, seed=i)
+            engine_select.choose(f, 64, engines=engines,
+                                 cache_path=cache, repeats=1)
+        model_path = os.path.join(td, "model.json")
+        model = tune.train_from_cache(cache, save_to=model_path)
+        print(f"-Os cost model: {model.n_rows} rows, "
+              f"sigma={model.resid_sigma:.3f}")
+        engine_select.clear_cache()
+
+        # 1. predict path: zero-shot plan, bit-exact vs direct compile
+        held = core.random_forest_ir(10, 16, 7, n_classes=1, seed=99)
+        Xh = np.random.default_rng(0).normal(size=(64, held.n_features))
+        c = engine_select.choose(held, 64, engines=engines,
+                                 cache_path=cache, mode="predict",
+                                 cost_model=model_path,
+                                 confidence_threshold=0.0, repeats=1)
+        direct = engine_select._candidate_factories(
+            held, engines, None, None, 1)[c.engine]()
+        err = float(np.abs(c.predictor.predict(Xh)
+                           - direct.predict(Xh)).max())
+        if not c.predicted:
+            err = np.inf
+        print(f"-Os predict: winner={c.engine} "
+              f"confidence={c.confidence:.3f}")
+        _check("os-predict-bitexact", err, 1e-12)
+
+        # 2. fallback path: narrow top-k sweep == restricted full sweep
+        engine_select.clear_cache()
+        fb_cache = os.path.join(td, "fb.json")
+        fb = engine_select.choose(held, 64, engines=engines,
+                                  cache_path=fb_cache, mode="predict",
+                                  cost_model=model_path,
+                                  confidence_threshold=1.01, top_k=2,
+                                  repeats=1)
+        full = engine_select.choose(held, 64, engines=engines,
+                                    cache_path=fb_cache, repeats=1)
+        restricted = {n: full.timings[n] for n in fb.timings}
+        ok = (not fb.predicted and len(fb.timings) == 2
+              and fb.engine == min(restricted, key=restricted.get))
+        print(f"-Os fallback: swept {sorted(fb.timings)} → {fb.engine}")
+        _check("os-fallback-topk", 0.0 if ok else np.inf, 1e-12)
+
+        # 3. fleet cold-start under -Os + manifest round trip
+        engine_select.clear_cache()
+        # shapes disjoint from the training sweeps: a cache hit would
+        # (correctly) bypass the model, which isn't what we're checking
+        forests = {f"t{i}": core.random_forest_ir(
+            9 + 2 * i, 16, 6 + i % 3, n_classes=1, seed=50 + i)
+            for i in range(4)}
+        rt = ServingRuntime.from_forests(
+            forests, max_batch=64, tune="predict", engines=engines,
+            cost_model=model_path, confidence_threshold=0.0,
+            cache_path=cache, repeats=1)
+        n_pred = sum(1 for tid in forests
+                     if rt.tenant(tid).engine_choice.predicted)
+        print(f"-Os fleet: {n_pred}/{len(forests)} tenants zero-shot")
+        _check("os-fleet-zeroshot", float(len(forests) - n_pred), 1e-12)
+        manifest = rt.save(os.path.join(td, "fleet"))
+        rt2 = ServingRuntime.load(manifest)
+        worst = 0.0
+        for tid, f in forests.items():
+            Xt = np.random.default_rng(7).normal(size=(16, f.n_features))
+            a = rt.tenant(tid).predictor.predict(Xt)
+            b = rt2.tenant(tid).predictor.predict(Xt)
+            worst = max(worst, float(np.abs(a - b).max()))
+        _check("os-manifest-roundtrip", worst, 1e-12)
+        engine_select.clear_cache()
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--cascade", action="store_true",
@@ -379,6 +474,10 @@ def main(argv=None) -> int:
                     help="also check the observability layer (bit-exact "
                          "instrumented serving, live scrape, zero "
                          "retrace anomalies)")
+    ap.add_argument("--os", action="store_true", dest="os_mode",
+                    help="also check zero-shot compilation: cost-model "
+                         "predict path, low-confidence fallback, and "
+                         "-Os fleet cold-start + manifest round trip")
     args = ap.parse_args(argv)
 
     ds = load("magic", n=2000)
@@ -402,6 +501,8 @@ def main(argv=None) -> int:
         check_int(ds, forest, X)
     if args.obs:
         check_obs(ds, qf, X)
+    if args.os_mode:
+        check_os(ds, qf, X)
     if FAILED:
         print(f"\nFAILED: {FAILED}", file=sys.stderr)
         return 1

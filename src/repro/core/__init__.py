@@ -62,7 +62,8 @@ def __getattr__(name):
 
 
 def compile_forest(forest: Forest, engine: str = "bitvector",
-                   backend: str = "jax", cascade=None, opt=None, **kw):
+                   backend: str = "jax", cascade=None, opt=None,
+                   tune=None, tune_batch: int = 256, **kw):
     """Build a predictor for ``forest`` via the pass pipeline.
 
     engine / backend resolve through ``core.registry`` (no dispatch ladder
@@ -74,7 +75,26 @@ def compile_forest(forest: Forest, engine: str = "bitvector",
     ``"O2"``) or an explicit pass-name tuple; the result is always
     oracle-equivalence checked.  For quantization-as-a-pass or
     multi-device plans use ``core.compile_plan`` directly.
+
+    ``tune=`` hands the *whole* decision to the autotuner instead:
+    ``tune="measure"`` sweeps, ``tune="predict"`` (alias ``"-Os"``) asks
+    the learned cost model (``repro.tune``, docs/AUTOTUNE.md) for a
+    zero-shot plan at the ``tune_batch`` bucket.  With ``tune=`` set,
+    ``engine``/``backend`` are chosen *by* the tuner, so they (and
+    ``cascade``/``opt``, which become sweep axes via ``cascade_specs=``/
+    ``opt_levels=``) must stay at their defaults; ``**kw`` forwards to
+    ``engine_select.choose`` (``cost_model=``, ``engines=``, ...).
     """
+    if tune is not None:
+        if engine != "bitvector" or backend != "jax" or \
+                cascade is not None or opt is not None:
+            raise ValueError(
+                "tune= picks engine/backend (and sweeps cascade/opt "
+                "via cascade_specs=/opt_levels=); don't pass them "
+                "alongside it")
+        from . import engine_select
+        return engine_select.choose(forest, tune_batch, mode=tune,
+                                    **kw).predictor
     return compile_plan(forest, CompilePlan(engine=engine, backend=backend,
                                             cascade=cascade, opt=opt,
                                             engine_kw=kw))

@@ -20,10 +20,20 @@ tree-sharded multi-device wrapper (``core.shard``) instead of
 single-device engines.
 
 Cache key: ``(jax backend, n_trees, n_leaves, n_classes, n_features,
-max_depth, threshold dtype, batch bucket, n_devices)``.  Runtime is
-independent of the learned values, so device + shape/structure + dtype
-fully determine the ranking — and a winner measured on CPU is never
-replayed on TPU (or vice versa).
+max_depth, threshold dtype, batch bucket, n_devices, device
+fingerprint)``.  Runtime is independent of the learned values, so device
++ shape/structure + dtype fully determine the ranking — and a winner
+measured on CPU is never replayed on TPU (or vice versa), nor is a cache
+file copied between machines replayed on hardware it never measured
+(the fingerprint component key-misses it — docs/AUTOTUNE.md).
+
+Beyond measuring, ``choose(mode="predict")`` is the zero-shot ``-Os``
+path (ROADMAP item 3, docs/AUTOTUNE.md): a learned cost model trained on
+the accumulated cache history (``repro.tune``) ranks the candidates
+without compiling any of them; at high confidence only the predicted
+winner is built (and quick-benched, feeding the measurement back into
+the cache as ground truth), at low confidence the sweep narrows to the
+top-k predicted candidates instead of the full product.
 
 Pallas engines run in interpret mode on CPU (orders of magnitude slower
 than compiled XLA), so they only enter the candidate set on a real TPU
@@ -31,8 +41,10 @@ backend — or explicitly via ``engines=``/``include_pallas=True``.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import platform
 import time
 from collections.abc import Mapping
 from dataclasses import dataclass, field
@@ -82,6 +94,26 @@ def _autotune_metrics():
             "Autotune winner per shape key (info gauge: value is "
             "always 1; the labels carry the decision)",
             labels=("key", "engine")),
+        "predict_hits": reg.counter(
+            "repro_autotune_predict_hits_total",
+            "Zero-shot (-Os) decisions answered by the cost model at "
+            "high confidence — one candidate compiled, no sweep"),
+        "fallbacks": reg.counter(
+            "repro_autotune_fallback_sweeps_total",
+            "Predict-mode decisions that fell back to a (narrow) sweep",
+            labels=("reason",)),
+        "feedback": reg.counter(
+            "repro_autotune_feedback_writes_total",
+            "Ground-truth measurements written back into the cache by "
+            "zero-shot predict decisions"),
+        "predict_err": reg.histogram(
+            "repro_autotune_predict_rel_error",
+            "Relative |predicted − measured| / measured us-per-instance "
+            "of zero-shot winners (the model's live quality)"),
+        "predict_err_last": reg.gauge(
+            "repro_autotune_predict_last_rel_error",
+            "Most recent zero-shot prediction's relative error, per "
+            "shape key", labels=("key",)),
     }
 
 
@@ -175,18 +207,60 @@ def bucket_ladder(max_batch: int) -> tuple:
     return tuple(out)
 
 
+def device_fingerprint() -> dict:
+    """What the timings were measured *on*: jax backend, the first
+    device's kind, and the host ISA.  Part of every cache key (as a
+    short hash) and of every schema-v2 entry's ``meta`` (as a cost-model
+    feature) — a cache file copied between machines, or a CPU↔TPU switch
+    inside one process, must key-miss rather than silently serve a
+    winner measured on different hardware."""
+    import jax
+    dev = jax.devices()[0]
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": str(getattr(dev, "device_kind", type(dev).__name__)),
+        "machine": platform.machine(),
+    }
+
+
+def fingerprint_hash(fp: Optional[dict] = None) -> str:
+    """Short stable hash of ``device_fingerprint()`` for key embedding."""
+    blob = json.dumps(fp or device_fingerprint(), sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest()[:8]
+
+
 def shape_key(forest: Forest, batch_bucket: int, n_devices: int = 1) -> str:
     # max_depth is part of the structure key: native/unrolled run
     # O(depth) iterations and bitmm's field packing widens with depth, so
     # a balanced and a chain-shaped forest with identical T/L/C/d rank
     # engines very differently.  n_devices is part of the key because a
-    # tree-sharded winner on 8 devices says nothing about 1 device.
+    # tree-sharded winner on 8 devices says nothing about 1 device.  The
+    # trailing fingerprint hash makes pre-fingerprint (schema-v1) entries
+    # and foreign-machine cache files key-miss and re-sweep.
     import jax
     return (f"{jax.default_backend()}"
             f"_T{forest.n_trees}_L{forest.n_leaves}_C{forest.n_classes}"
             f"_d{forest.n_features}_D{forest.max_depth}"
             f"_{np.dtype(forest.threshold.dtype).name}_B{batch_bucket}"
-            f"_dev{n_devices}")
+            f"_dev{n_devices}_fp{fingerprint_hash()}")
+
+
+def shape_meta(forest: Forest, batch_bucket: int, n_devices: int = 1) -> dict:
+    """The cost-model feature view of one autotune decision (the entry's
+    ``meta`` field, docs/AUTOTUNE.md): forest shape + batch bucket +
+    device identity.  Everything ``repro.tune.extract`` needs to build a
+    training row without re-parsing the shape key."""
+    fp = device_fingerprint()
+    return {
+        "n_trees": int(forest.n_trees), "n_leaves": int(forest.n_leaves),
+        "n_classes": int(forest.n_classes),
+        "n_features": int(forest.n_features),
+        "max_depth": int(forest.max_depth),
+        "dtype": np.dtype(forest.threshold.dtype).name,
+        "batch": int(batch_bucket), "n_devices": int(n_devices),
+        "backend": fp["backend"], "device_kind": fp["device_kind"],
+        "machine": fp["machine"], "fingerprint": fingerprint_hash(fp),
+    }
 
 
 _CACHE_DEFAULT = object()          # "cache_path not given" sentinel
@@ -206,17 +280,30 @@ _MEM_CACHE: dict[str, dict] = {}
 # lets cache hits skip the read-merge-rewrite of the JSON file
 _PERSISTED: set[tuple[str, str]] = set()
 
+# Cache entry schema (docs/AUTOTUNE.md).  v1: {"engine", "timings"}.
+# v2 adds per-candidate "compile_s" (predictor build + first traced
+# predict, seconds) and "bench_us" (steady-state us per instance) kept
+# separate — the selection metric stays the steady-state batch timing —
+# plus "meta" (shape_meta: the cost model's feature row).  v1 entries
+# still parse, but they predate the fingerprinted key and so never match
+# a key this module now generates.
+SCHEMA_VERSION = 2
+
 
 def _valid_entry(entry) -> bool:
     """Structural check for one cache entry: ``{"engine": str,
-    "timings": {str: number}}`` with a non-empty timings dict."""
+    "timings": {str: number}}`` with a non-empty timings dict (v1);
+    the v2 fields are optional and checked only for shape."""
     if not isinstance(entry, dict):
         return False
     timings = entry.get("timings")
     if not isinstance(timings, dict) or not timings:
         return False
-    return all(isinstance(k, str) and isinstance(v, (int, float))
-               and not isinstance(v, bool) for k, v in timings.items())
+    if not all(isinstance(k, str) and isinstance(v, (int, float))
+               and not isinstance(v, bool) for k, v in timings.items()):
+        return False
+    return all(isinstance(entry.get(fld, {}), dict)
+               for fld in ("compile_s", "bench_us", "meta"))
 
 
 def _load_disk(path: str) -> dict:
@@ -237,11 +324,24 @@ def _load_disk(path: str) -> dict:
 
 
 def _merge_entry(old: Optional[dict], new: dict) -> dict:
-    """Union of two sweeps' timings — cached coverage only ever grows."""
+    """Union of two sweeps' measurements — cached coverage only ever
+    grows.  The schema-v2 side dicts (``compile_s``, ``bench_us``) union
+    the same way; ``meta`` is shape-determined per key, so the newest
+    writer wins."""
     if not old:
         return new
     timings = {**old.get("timings", {}), **new.get("timings", {})}
-    return {"engine": min(timings, key=timings.get), "timings": timings}
+    out = {"engine": min(timings, key=timings.get), "timings": timings}
+    for fld in ("compile_s", "bench_us"):
+        d = {**(old.get(fld) or {}), **(new.get(fld) or {})}
+        if d:
+            out[fld] = d
+    meta = new.get("meta") or old.get("meta")
+    if meta:
+        out["meta"] = meta
+    if "v" in new or "v" in old:
+        out["v"] = max(int(new.get("v", 1)), int(old.get("v", 1)))
+    return out
 
 
 def _store_disk(path: str, key: str, entry: dict) -> None:
@@ -268,6 +368,10 @@ class EngineChoice:
     predictor: object              # ready-to-serve predictor for `engine`
     timings: dict = field(default_factory=dict)   # candidate → median secs
     from_cache: bool = False
+    compile_s: dict = field(default_factory=dict)  # candidate → build secs
+    confidence: Optional[float] = None  # cost-model confidence (predict mode)
+    predicted: bool = False        # True: zero-shot, no sweep ran
+    pruned: tuple = ()             # candidates aliased to an identical IR
 
     def predict(self, X):
         return self.predictor.predict(X)
@@ -281,6 +385,21 @@ def _bench_once(pred, X: np.ndarray, repeats: int) -> float:
         pred.predict(X)
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
+
+
+def _bench_candidate(factory: Callable, X: np.ndarray,
+                     repeats: int) -> tuple:
+    """Build + time one candidate, keeping the two costs separate:
+    ``compile_s`` is the predictor build plus the first (traced +
+    compiled) predict; the returned bench seconds are the steady-state
+    median that ``timings`` persists.  Conflating the two is exactly the
+    bug schema v2 fixes — a one-shot caller and a serving fleet weight
+    them very differently (docs/AUTOTUNE.md)."""
+    t0 = time.perf_counter()
+    pred = factory()
+    pred.predict(X)                # trace + compile, counted as compile_s
+    compile_s = time.perf_counter() - t0
+    return pred, compile_s, _bench_once(pred, X, repeats)
 
 
 def _layout_tag(kw: dict) -> str:
@@ -303,13 +422,32 @@ def _quant_tag(q: QuantSpec) -> str:
     return tag
 
 
+def _ir_hash(forest: Forest) -> str:
+    """Content hash of a Forest IR — two candidates whose post-optimize
+    IRs hash equal (same engine / layout / cascade / flint) compile to
+    the same predictor, so the sweep benches one and aliases the other
+    (optimizer-aware candidate pruning, docs/AUTOTUNE.md)."""
+    h = hashlib.sha1()
+    for a in (forest.feature, forest.threshold, forest.left, forest.right,
+              forest.leaf_value, forest.n_nodes, forest.n_leaves_per_tree):
+        h.update(np.ascontiguousarray(a).tobytes())
+    for a in (forest.feat_lo, forest.feat_hi, forest.feat_map):
+        h.update(b"\0" if a is None else np.ascontiguousarray(a).tobytes())
+    h.update(repr((forest.quant_scale, forest.quant_bits,
+                   forest.leaf_scale, forest.int_accum, forest.flint,
+                   forest.leaf_err_bound, forest.n_features,
+                   forest.n_features_src, forest.max_depth)).encode())
+    return h.hexdigest()[:16]
+
+
 def _candidate_factories(forest: Forest, engines: tuple,
                          quant_specs: Optional[tuple],
                          layout_specs: Optional[dict],
                          n_devices: int,
                          cascade_specs: Optional[tuple] = None,
                          opt_levels: Optional[tuple] = None,
-                         flint: bool = False
+                         flint: bool = False,
+                         opt_cache: Optional[dict] = None
                          ) -> dict[str, Callable]:
     """Candidate name → zero-arg predictor factory.
 
@@ -335,7 +473,14 @@ def _candidate_factories(forest: Forest, engines: tuple,
 
     Every factory compiles through ``compile_plan``, so the winning
     predictor always carries a ``CompilePlan`` — ``choice.predictor
-    .plan.describe()`` explains the variant, optimizer stats included."""
+    .plan.describe()`` explains the variant, optimizer stats included.
+
+    With ``opt_cache`` (a dict, one per sweep) the optimize pass runs
+    once per (quantized-forest, opt-tag) point and every engine/layout/
+    cascade candidate at that point reuses the cached IR (shared-IR
+    sweeps — the PR-5 deferral).  Each returned factory also carries
+    ``.axes`` (the candidate's per-axis tags) and ``.group_key()`` (the
+    identical-predictor equivalence class used for candidate pruning)."""
     from ..optim import resolve_opt
     if quant_specs and forest.quant_scale is not None:
         raise ValueError("quant_specs sweep needs a float forest "
@@ -399,8 +544,29 @@ def _candidate_factories(forest: Forest, engines: tuple,
             plan = CompilePlan(engine=spec.name, backend=spec.backend,
                                opt=o, n_devices=n_devices, cascade=casc,
                                flint=fl, engine_kw=dict(ekw))
-            return compile_plan(qf(q), plan)
+            return compile_plan(qf(q), plan, opt_cache=opt_cache)
 
+        factory.axes = {
+            "engine": name,
+            "quant": _quant_tag(q) if q is not None else "",
+            "opt": resolve_opt(o)[1] if o is not None else "",
+            "layout": _layout_tag(kw) if kw is not None else "",
+            "cascade": casc.tag() if casc is not None else "",
+            "flint": fl,
+        }
+
+        def group_key() -> tuple:
+            # the post-optimize IR fully determines the compiled artifact
+            # alongside engine + layout kw + cascade + flint (the flint
+            # pass runs after optimize and is deterministic); with the
+            # shared opt_cache this costs one optimize per (quant, opt)
+            # point — work the sweep was about to do anyway
+            from .pipeline import optimized_forest
+            ir = optimized_forest(qf(q), o, opt_cache=opt_cache)
+            return (name, factory.axes["layout"], factory.axes["cascade"],
+                    fl, _ir_hash(ir))
+
+        factory.group_key = group_key
         return factory
 
     def cname(e: str, q: Optional[QuantSpec], o, kw: Optional[dict],
@@ -418,6 +584,63 @@ def _candidate_factories(forest: Forest, engines: tuple,
             for e, q, o, kw, casc, fl in variants}
 
 
+def default_model_path() -> str:
+    """Where ``mode="predict"`` looks for the trained cost model when the
+    caller passes none: ``$REPRO_COST_MODEL`` or the cache-sibling
+    default (``repro.tune.train_from_cache`` writes here too)."""
+    return os.environ.get(
+        "REPRO_COST_MODEL",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "cost_model.json"))
+
+
+# path → (mtime, model): a fleet cold-start resolves the same artifact
+# once per change, not once per tenant
+_MODEL_CACHE: dict[str, tuple] = {}
+
+
+def _resolve_cost_model(cm):
+    """``cost_model=`` argument → a loaded ``repro.tune.CostModel`` or
+    ``None`` (predict mode then falls back to a full sweep).  Accepts a
+    model object, a path, or ``None`` for ``default_model_path()``.  A
+    missing/corrupt *default* artifact degrades to ``None`` (with a log
+    warning for corruption); an explicitly passed path raises — the
+    caller asked for that file by name."""
+    explicit = cm is not None
+    if cm is None:
+        cm = default_model_path()
+    if not isinstance(cm, (str, os.PathLike)):
+        return cm
+    path = os.fspath(cm)
+    try:
+        mtime = os.path.getmtime(path)
+    except OSError:
+        if explicit:
+            raise FileNotFoundError(
+                f"cost_model path {path!r} does not exist") from None
+        return None
+    hit = _MODEL_CACHE.get(path)
+    if hit is not None and hit[0] == mtime:
+        return hit[1]
+    from ..tune import CostModel
+    try:
+        model = CostModel.load(path)
+    except (OSError, ValueError):
+        if explicit:
+            raise
+        _LOG.warning("cost_model_unreadable", path=path)
+        return None
+    _MODEL_CACHE[path] = (mtime, model)
+    return model
+
+
+def _bench_rows(forest: Forest, bucket: int, seed: int) -> np.ndarray:
+    # n_features_in, not n_features: an already-optimized forest (with a
+    # feat_map from drop_unused_features) still takes full-width rows
+    return np.random.default_rng(seed).normal(
+        0, 1.0, size=(bucket, forest.n_features_in))
+
+
 def choose(forest: Forest, batch: int, *, engines=None,
            include_pallas: Optional[bool] = None,
            quant_specs: Optional[tuple] = None,
@@ -428,7 +651,13 @@ def choose(forest: Forest, batch: int, *, engines=None,
            n_devices: int = 1,
            cache_path=_CACHE_DEFAULT,
            force: bool = False, repeats: int = 3,
-           seed: int = 0) -> EngineChoice:
+           seed: int = 0,
+           mode: str = "measure",
+           cost_model=None,
+           confidence_threshold: float = 0.8,
+           top_k: int = 3,
+           share_ir: bool = True,
+           feedback: bool = True) -> EngineChoice:
     """Pick the fastest candidate for ``forest`` at this batch-size bucket.
 
     Candidates are (engine × quantization × optimization × layout ×
@@ -460,7 +689,33 @@ def choose(forest: Forest, batch: int, *, engines=None,
     When ``cache_path`` is omitted it defaults to ``$REPRO_ENGINE_CACHE``
     (or ``~/.cache/repro/engine_cache.json``); ``cache_path=None``
     disables the disk layer entirely.  ``force=True`` re-benchmarks
-    regardless of any cached entry."""
+    regardless of any cached entry.
+
+    ``mode="predict"`` (alias ``"-Os"``, docs/AUTOTUNE.md) is the
+    zero-shot path: after the cache layers miss, a learned cost model
+    (``cost_model=`` — a ``repro.tune.CostModel``, a path, or ``None``
+    for ``default_model_path()``) ranks the candidates without compiling
+    any.  At confidence ≥ ``confidence_threshold`` only the predicted
+    winner is built; with ``feedback=True`` (default) it is also
+    quick-benched and the measurement written into the cache as ground
+    truth for future training rounds.  Below the threshold (or with no
+    model) the sweep still runs, narrowed to the ``top_k`` predicted
+    candidates (full set when no model could rank them).  The returned
+    ``EngineChoice`` carries ``predicted`` / ``confidence``.
+
+    ``share_ir=True`` (default) shares one optimized IR across the
+    engine / layout / cascade axes of the sweep — the optimize pass and
+    its oracle check run once per (quant, opt) point — and prunes
+    candidates whose post-optimize IR is provably identical (their
+    timings are aliased to the one benched representative, listed in
+    ``EngineChoice.pruned``)."""
+    mode = str(mode).lower().lstrip("-")
+    if mode == "os":
+        mode = "predict"
+    if mode not in ("measure", "predict"):
+        raise ValueError(
+            f"mode must be 'measure' or 'predict' (alias '-Os'), "
+            f"got {mode!r}")
     if engines is None:
         engines = default_engines(include_pallas)
         if n_devices > 1:
@@ -471,13 +726,15 @@ def choose(forest: Forest, batch: int, *, engines=None,
                             if registry.by_tune_name(e).shardable)
     else:
         engines = tuple(engines)
+    opt_cache: Optional[dict] = {} if share_ir else None
     factories = _candidate_factories(forest, engines,
                                      tuple(quant_specs) if quant_specs
                                      else None, layout_specs, n_devices,
                                      tuple(cascade_specs) if cascade_specs
                                      else None,
                                      tuple(opt_levels) if opt_levels
-                                     else None, flint=flint)
+                                     else None, flint=flint,
+                                     opt_cache=opt_cache)
     candidates = tuple(factories)
     if cache_path is _CACHE_DEFAULT:
         cache_path = default_cache_path()
@@ -522,25 +779,112 @@ def choose(forest: Forest, batch: int, *, engines=None,
                                 from_cache=True)
 
     cached = (prior or {}).get("timings", {})
+
+    # ---------------- zero-shot (-Os) path ------------------------------
+    confidence: Optional[float] = None
+    if mode == "predict" and not force:
+        model = _resolve_cost_model(cost_model)
+        reason = "no_model"
+        if model is not None:
+            meta = shape_meta(forest, bucket, n_devices)
+            assess = model.assess(meta, candidates)
+            confidence = float(assess["confidence"])
+            if confidence >= confidence_threshold:
+                widx = int(assess["order"][0])
+                winner = candidates[widx]
+                X = _bench_rows(forest, bucket, seed)
+                if feedback:
+                    pred, c_s, b_s = _bench_candidate(
+                        factories[winner], X, repeats)
+                    getattr(pred, "reset_exit_stats", lambda: None)()
+                    us = b_s / bucket * 1e6
+                    entry = {"engine": winner, "timings": {winner: b_s},
+                             "compile_s": {winner: c_s},
+                             "bench_us": {winner: us}, "meta": meta,
+                             "v": SCHEMA_VERSION}
+                    _MEM_CACHE[key] = _merge_entry(prior, entry)
+                    _PERSISTED.difference_update(
+                        {pk for pk in _PERSISTED if pk[1] == key})
+                    if cache_path:
+                        _store_disk(cache_path, key, _MEM_CACHE[key])
+                    rel_err = abs(float(assess["us"][widx]) - us) \
+                        / max(us, 1e-12)
+                    timings = {winner: b_s}
+                else:
+                    t0 = time.perf_counter()
+                    pred = factories[winner]()
+                    pred.predict(X)
+                    c_s = time.perf_counter() - t0
+                    getattr(pred, "reset_exit_stats", lambda: None)()
+                    rel_err, timings = None, {}
+                if obs is not None:
+                    obs["predict_hits"].inc()
+                    obs["winner"].labels(key=key, engine=winner).set(1.0)
+                    if rel_err is not None:
+                        obs["feedback"].inc()
+                        obs["predict_err"].observe(rel_err)
+                        obs["predict_err_last"].labels(key=key).set(rel_err)
+                _LOG.info("predict", key=key, winner=winner,
+                          confidence=confidence, rel_err=rel_err)
+                return EngineChoice(
+                    engine=winner, key=key, predictor=pred,
+                    timings=timings, from_cache=False,
+                    compile_s={winner: c_s}, confidence=confidence,
+                    predicted=True)
+            reason = "low_confidence"
+            k = max(1, int(top_k))
+            if len(candidates) > k:
+                keep = {candidates[int(i)] for i in assess["order"][:k]}
+                candidates = tuple(c for c in candidates if c in keep)
+        if obs is not None:
+            obs["fallbacks"].labels(reason=reason).inc()
+        _LOG.info("predict_fallback", key=key, reason=reason,
+                  confidence=confidence, candidates=len(candidates))
+        if set(candidates) <= set(cached):
+            # the narrowed top-k may be fully covered by earlier sweeps
+            winner = min(candidates, key=cached.get)
+            if obs is not None:
+                obs["hits"].labels(
+                    layer="memory" if mem_covered else "disk").inc()
+                obs["winner"].labels(key=key, engine=winner).set(1.0)
+            return EngineChoice(
+                engine=winner, key=key, predictor=factories[winner](),
+                timings={e: cached[e] for e in candidates},
+                from_cache=True, confidence=confidence)
+
+    # ---------------- measured sweep ------------------------------------
     to_bench = candidates if force \
         else tuple(e for e in candidates if e not in cached)
     if obs is not None:
         reason = "forced" if force else ("partial" if cached else "cold")
         obs["misses"].labels(reason=reason).inc()
-    # n_features_in, not n_features: an already-optimized forest (with a
-    # feat_map from drop_unused_features) still takes full-width rows
-    X = np.random.default_rng(seed).normal(
-        0, 1.0, size=(bucket, forest.n_features_in))
+    X = _bench_rows(forest, bucket, seed)
+    # optimizer-aware candidate pruning: candidates in the same
+    # identical-predictor equivalence class (same engine / layout /
+    # cascade / flint on a bit-identical post-optimize IR) are benched
+    # once and aliased — their timings are genuinely equal, the compiled
+    # artifact is the same object modulo XLA caching
+    if opt_cache is not None and len(to_bench) > 1:
+        groups: dict[tuple, list] = {}
+        for name in to_bench:
+            groups.setdefault(factories[name].group_key(), []).append(name)
+        reps = {members[0]: members for members in groups.values()}
+    else:
+        reps = {name: [name] for name in to_bench}
+    pruned = tuple(m for members in reps.values() for m in members[1:])
     fresh: dict[str, float] = {}
+    fresh_compile: dict[str, float] = {}
     best_pred, best_t = None, float("inf")
     sweep_t0 = time.perf_counter()
-    for name in to_bench:
-        pred = factories[name]()
-        fresh[name] = _bench_once(pred, X, repeats)
+    for name, members in reps.items():
+        pred, c_s, b_s = _bench_candidate(factories[name], X, repeats)
+        for m in members:
+            fresh[m] = b_s
+            fresh_compile[m] = c_s
         # keep only the best-so-far predictor: peak memory stays
         # max(current, best) instead of the sum over the engine matrix
-        if fresh[name] < best_t:
-            best_pred, best_t = pred, fresh[name]
+        if b_s < best_t:
+            best_pred, best_t = pred, b_s
     sweep_s = time.perf_counter() - sweep_t0
     # partial-coverage miss: cached timings fill in the engines we skipped
     timings = {e: fresh.get(e, cached.get(e)) for e in candidates}
@@ -548,35 +892,46 @@ def choose(forest: Forest, batch: int, *, engines=None,
     if obs is not None:
         obs["sweeps"].inc()
         obs["sweep_s"].observe(sweep_s)
-        obs["benched"].inc(float(len(to_bench)))
+        obs["benched"].inc(float(len(reps)))
         obs["winner"].labels(key=key, engine=winner).set(1.0)
     _LOG.info("sweep", key=key, candidates=len(to_bench),
+              benched=len(reps), pruned=len(pruned),
               seconds=sweep_s, winner=winner)
     if best_pred is not None:
         # cascade predictors count per-stage exits cumulatively; the
         # benchmark rows must not pollute the served exit accounting
         getattr(best_pred, "reset_exit_stats", lambda: None)()
-    # the stored engine must be the winner over the entry's own timings
-    # (merges re-derive it over the union; lookups re-derive per request)
-    entry = {"engine": min(fresh, key=fresh.get), "timings": fresh}
-    _MEM_CACHE[key] = _merge_entry(prior, entry)
-    # the memory entry just changed: any disk copy of this key is stale
-    _PERSISTED.difference_update({pk for pk in _PERSISTED if pk[1] == key})
-    if cache_path:
-        # persist the merged union, not just this sweep: coverage that so
-        # far existed only in memory reaches disk too (file re-merged)
-        _store_disk(cache_path, key, _MEM_CACHE[key])
+    if fresh:
+        # the stored engine must be the winner over the entry's own
+        # timings (merges re-derive it over the union; lookups re-derive
+        # per request)
+        entry = {"engine": min(fresh, key=fresh.get), "timings": fresh,
+                 "compile_s": fresh_compile,
+                 "bench_us": {c: t / bucket * 1e6
+                              for c, t in fresh.items()},
+                 "meta": shape_meta(forest, bucket, n_devices),
+                 "v": SCHEMA_VERSION}
+        _MEM_CACHE[key] = _merge_entry(prior, entry)
+        # the memory entry just changed: any disk copy of the key is stale
+        _PERSISTED.difference_update(
+            {pk for pk in _PERSISTED if pk[1] == key})
+        if cache_path:
+            # persist the merged union, not just this sweep: coverage that
+            # so far existed only in memory reaches disk too (re-merged)
+            _store_disk(cache_path, key, _MEM_CACHE[key])
     return EngineChoice(
         engine=winner, key=key,
         predictor=best_pred if winner in fresh
         else factories[winner](),
-        timings=timings, from_cache=False)
+        timings=timings, from_cache=False, compile_s=dict(fresh_compile),
+        confidence=confidence, pruned=pruned)
 
 
 def clear_cache(cache_path: Optional[str] = None) -> None:
     """Drop the in-memory cache (and the disk file, if a path is given)."""
     _MEM_CACHE.clear()
     _PERSISTED.clear()
+    _MODEL_CACHE.clear()
     if cache_path:
         try:
             os.remove(cache_path)

@@ -157,6 +157,38 @@ def quantize(forest: Forest, plan: CompilePlan, ctx: dict) -> Forest:
     return qf
 
 
+def _optimize_cached(forest: Forest, opt, opt_cache: Optional[dict],
+                     X_calib=None):
+    """Run (or reuse) the optimizer middle-end for one (forest, opt-tag)
+    point.  ``opt_cache`` — a per-sweep dict keyed by ``(id(forest),
+    tag)`` — is the shared-IR mechanism (docs/AUTOTUNE.md): within one
+    autotune sweep the engine / layout / cascade axes all see the same
+    optimized IR, so the optimize pass (and its oracle-equivalence
+    check) runs once per (quant, opt) point instead of once per
+    candidate.  Returns ``None`` when the level resolves to no passes."""
+    from .. import optim
+    names, tag = optim.resolve_opt(opt)
+    if not names:
+        return None
+    key = (id(forest), tag)
+    if opt_cache is not None and key in opt_cache:
+        return opt_cache[key]
+    res = optim.optimize(forest, opt, ctx={"X_calib": X_calib})
+    if opt_cache is not None:
+        opt_cache[key] = res
+    return res
+
+
+def optimized_forest(forest: Forest, opt,
+                     opt_cache: Optional[dict] = None,
+                     X_calib=None) -> Forest:
+    """The IR the optimize pass would hand downstream for ``opt`` —
+    through the same shared cache, so the autotuner's candidate pruning
+    sees bit-identical objects to what the factories will compile."""
+    res = _optimize_cached(forest, opt, opt_cache, X_calib)
+    return forest if res is None else res.forest
+
+
 @forest_pass("optimize")
 def optimize(forest: Forest, plan: CompilePlan, ctx: dict) -> Forest:
     """The optimizer middle-end (``repro.optim``, docs/OPTIM.md): run
@@ -165,14 +197,17 @@ def optimize(forest: Forest, plan: CompilePlan, ctx: dict) -> Forest:
     ``opt.<name>`` record with before/after node / unique-threshold
     stats, followed by one ``optimize`` summary record; the run is
     always oracle-equivalence checked (``optim.OptimizationError`` on
-    divergence — never silently wrong scores)."""
+    divergence — never silently wrong scores).  When the ctx carries an
+    ``opt_cache`` (autotune sweeps), the result is computed once per
+    (forest, tag) point and replayed — records included — for every
+    other candidate at that point."""
     from .. import optim
     names, tag = optim.resolve_opt(plan.opt)
     if not names:
         plan.record("optimize", f"skipped ({tag})")
         return forest
-    res = optim.optimize(forest, plan.opt,
-                         ctx={"X_calib": ctx.get("X_calib")})
+    res = _optimize_cached(forest, plan.opt, ctx.get("opt_cache"),
+                           X_calib=ctx.get("X_calib"))
     for s in res.stats:
         plan.record(f"opt.{s.name}", s.detail())
     plan.record("optimize", res.describe())
@@ -274,6 +309,7 @@ def compile_plan(obj, plan: Optional[CompilePlan] = None, *,
                  X_calib: Optional[np.ndarray] = None,
                  n_features: Optional[int] = None, n_classes: int = 1,
                  load_kw: Optional[dict] = None,
+                 opt_cache: Optional[dict] = None,
                  **plan_kw):
     """Run the full pipeline on ``obj`` (path / Forest / trainer / trees).
 
@@ -284,14 +320,18 @@ def compile_plan(obj, plan: Optional[CompilePlan] = None, *,
 
     ``X_calib`` feeds the quantize pass's feature ranges; ``n_features`` /
     ``n_classes`` are only needed when ``obj`` is a bare tree list;
-    ``load_kw`` forwards to ``io.load_model`` when ``obj`` is a path.
+    ``load_kw`` forwards to ``io.load_model`` when ``obj`` is a path;
+    ``opt_cache`` (a dict the caller owns, normally one per autotune
+    sweep) lets repeated compiles of the same IR at the same opt level
+    share one optimizer run — see ``_optimize_cached``.
     """
     if plan is None:
         plan = CompilePlan(**plan_kw)
     elif plan_kw:
         raise TypeError("pass either a CompilePlan or plan kwargs, not both")
     ctx = {"X_calib": X_calib, "n_features": n_features,
-           "n_classes": n_classes, "load_kw": load_kw}
+           "n_classes": n_classes, "load_kw": load_kw,
+           "opt_cache": opt_cache}
     for name in PIPELINE:
         obj = PASSES[name](obj, plan, ctx)
     return obj

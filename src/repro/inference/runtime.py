@@ -364,12 +364,22 @@ class ServingRuntime:
                      max_wait_ms: float = 2.0,
                      slo: Optional[SLOConfig] = None,
                      clock: Optional[Callable[[], float]] = None,
-                     obs=True, **choose_kw) -> "ServingRuntime":
+                     obs=True, tune: Optional[str] = None,
+                     **choose_kw) -> "ServingRuntime":
         """Autotune-and-serve N forests: each tenant's engine comes from
         ``core.engine_select.choose`` — all tenants share the
         process-wide sweep cache (memory + disk), so a fleet of
-        same-shaped models pays for one sweep, not N."""
+        same-shaped models pays for one sweep, not N.
+
+        ``tune="predict"`` (alias ``"-Os"``) is the fleet cold-start
+        fast path (docs/AUTOTUNE.md): each tenant's plan comes from the
+        learned cost model — one compile per tenant instead of a full
+        sweep — falling back to a narrow top-k sweep per shape whose
+        confidence is low.  Extra ``choose_kw`` (``cost_model=``,
+        ``confidence_threshold=``, ...) pass through."""
         from ..core import engine_select
+        if tune is not None:
+            choose_kw.setdefault("mode", tune)
         rt = cls(clock=clock, obs=obs)
         for tid, forest in forests.items():
             choice = engine_select.choose(forest, max_batch, **choose_kw)

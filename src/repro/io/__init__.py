@@ -16,14 +16,15 @@ artifacts::
 from .importers import (import_lightgbm_json, import_sklearn,
                         import_xgboost_json, load_model,
                         sklearn_shim_from_json)
-from .packed import (FORMAT, VERSION, load_forest, load_manifest,
-                     load_predictor, peek, save_forest, save_manifest,
-                     save_predictor)
+from .packed import (FORMAT, VERSION, load_cost_model, load_forest,
+                     load_manifest, load_predictor, peek, save_cost_model,
+                     save_forest, save_manifest, save_predictor)
 
 __all__ = [
     "import_sklearn", "import_xgboost_json", "import_lightgbm_json",
     "load_model", "sklearn_shim_from_json",
     "save_forest", "load_forest", "save_predictor", "load_predictor",
     "save_manifest", "load_manifest",
+    "save_cost_model", "load_cost_model",
     "peek", "FORMAT", "VERSION",
 ]

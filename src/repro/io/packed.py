@@ -449,6 +449,52 @@ def save_predictor(pred, path: PathLike, *, extra: Optional[dict] = None
 
 
 # --------------------------------------------------------------------------- #
+# Autotuner cost-model artifact (repro.tune, docs/AUTOTUNE.md)
+# --------------------------------------------------------------------------- #
+COSTMODEL_FORMAT = "repro.costmodel"
+COSTMODEL_VERSION = 1
+
+
+def save_cost_model(path: PathLike, payload: dict) -> str:
+    """Write a trained autotuner cost model (``repro.tune.CostModel``)
+    as versioned JSON, same contract as the packed container: a format
+    marker plus a version this reader refuses to exceed.  ``payload`` is
+    the model's own serialization — this layer owns only the envelope."""
+    path = os.fspath(path)
+    doc = {"format": COSTMODEL_FORMAT, "version": COSTMODEL_VERSION,
+           **payload}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1)
+    os.replace(tmp, path)
+    return path
+
+
+def load_cost_model(path: PathLike) -> dict:
+    """Read a ``save_cost_model`` artifact, rejecting unknown formats
+    and newer versions loudly — ``-Os`` must never pick plans from a
+    half-understood model file."""
+    path = os.fspath(path)
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        raise ValueError(
+            f"{path!r} is not a readable cost model: {e}") from e
+    if not isinstance(doc, dict) or doc.get("format") != COSTMODEL_FORMAT:
+        raise ValueError(
+            f"{path!r}: unknown cost-model format "
+            f"{doc.get('format') if isinstance(doc, dict) else doc!r} "
+            f"(expected {COSTMODEL_FORMAT})")
+    if int(doc.get("version", -1)) > COSTMODEL_VERSION:
+        raise ValueError(
+            f"{path!r} is cost-model version {doc['version']}, newer than "
+            f"this reader (max {COSTMODEL_VERSION}) — upgrade first")
+    return doc
+
+
+# --------------------------------------------------------------------------- #
 # Multi-tenant serving manifest
 # --------------------------------------------------------------------------- #
 MANIFEST_FORMAT = "repro.tenants"

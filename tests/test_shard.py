@@ -64,7 +64,9 @@ def test_every_jax_engine_is_registered_shardable():
 def test_shape_key_includes_device_count(small_forest):
     k1 = engine_select.shape_key(small_forest, 64)
     k4 = engine_select.shape_key(small_forest, 64, n_devices=4)
-    assert k1 != k4 and k1.endswith("_dev1") and k4.endswith("_dev4")
+    fp = engine_select.fingerprint_hash()
+    assert k1 != k4
+    assert k1.endswith(f"_dev1_fp{fp}") and k4.endswith(f"_dev4_fp{fp}")
 
 
 def test_pipeline_plan_single_device_stays_unsharded(small_forest):
@@ -123,7 +125,7 @@ np.testing.assert_allclose(
 # autotuner: n_devices keys the cache and the winner serves sharded
 choice = engine_select.choose(f, 32, engines=("qs", "qs-bitmm"),
                               n_devices=4, cache_path=None, repeats=1)
-assert choice.key.endswith("_dev4"), choice.key
+assert "_dev4_fp" in choice.key, choice.key
 assert choice.predictor.n_devices == 4
 ref = {"qs": "bitvector", "qs-bitmm": "bitmm"}[choice.engine]
 np.testing.assert_allclose(

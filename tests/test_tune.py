@@ -1,0 +1,556 @@
+"""Zero-shot (-Os) autotuning: cache schema v2 + device fingerprint,
+the repro.tune extractor and cost model, the predict / fallback /
+feedback paths, shared-IR sweeps and optimizer-aware pruning
+(docs/AUTOTUNE.md)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import core, optim, tune
+from repro.core import engine_select, registry
+from repro.io import packed
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # container without hypothesis: CI covers it
+    HAVE_HYPOTHESIS = False
+
+CHEAP = ("qs", "qs-bitmm", "native")
+TRAIN_SHAPES = [(8, 16, 6, 1), (16, 16, 8, 1), (8, 32, 6, 3),
+                (24, 16, 10, 1)]
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    engine_select.clear_cache()
+    yield
+    engine_select.clear_cache()
+
+
+@pytest.fixture(scope="module")
+def trained(tmp_path_factory):
+    """A populated schema-v2 cache + a cost model trained from it —
+    built once per module (full sweeps are the expensive part)."""
+    td = tmp_path_factory.mktemp("tune")
+    cache = str(td / "cache.json")
+    engine_select.clear_cache()
+    for i, (T, L, d, C) in enumerate(TRAIN_SHAPES):
+        f = core.random_forest_ir(T, L, d, n_classes=C, seed=i)
+        engine_select.choose(f, 64, engines=CHEAP, cache_path=cache,
+                             repeats=1)
+    model_path = str(td / "model.json")
+    model = tune.train_from_cache(cache, save_to=model_path)
+    engine_select.clear_cache()
+    return {"dir": td, "cache": cache, "model": model,
+            "model_path": model_path}
+
+
+def _held_out(seed=99):
+    return core.random_forest_ir(12, 16, 7, n_classes=1, seed=seed)
+
+
+# ------------------------------------------------------------------------- #
+# Satellite 1: device/backend fingerprint in the cache key
+# ------------------------------------------------------------------------- #
+def test_shape_key_carries_device_fingerprint(small_forest):
+    key = engine_select.shape_key(small_forest, 64)
+    assert key.endswith(f"_fp{engine_select.fingerprint_hash()}")
+
+
+def test_foreign_machine_cache_entry_key_misses(small_forest, tmp_path,
+                                                monkeypatch):
+    """Regression: a cache file measured on other hardware (different
+    fingerprint in the key) must re-sweep, not serve its winner."""
+    cache = str(tmp_path / "engines.json")
+    c1 = engine_select.choose(small_forest, 64, engines=CHEAP,
+                              cache_path=cache, repeats=1)
+    # simulate "copied from another machine": rewrite the key with a
+    # foreign fingerprint, as if hardware (not the file) had changed
+    with open(cache) as f:
+        data = json.load(f)
+    foreign_key = c1.key.rsplit("_fp", 1)[0] + "_fpdeadbeef"
+    with open(cache, "w") as f:
+        json.dump({foreign_key: data[c1.key]}, f)
+    engine_select.clear_cache()
+    c2 = engine_select.choose(small_forest, 64, engines=CHEAP,
+                              cache_path=cache, repeats=1)
+    assert not c2.from_cache        # key-missed the foreign entry
+
+    # and the same entry *would* have hit under its own fingerprint
+    engine_select.clear_cache()
+    monkeypatch.setattr(engine_select, "fingerprint_hash",
+                        lambda fp=None: "deadbeef")
+    c3 = engine_select.choose(small_forest, 64, engines=CHEAP,
+                              cache_path=cache, repeats=1)
+    assert c3.from_cache and c3.key == foreign_key
+
+
+def test_meta_exposes_fingerprint_as_feature(small_forest, tmp_path):
+    cache = str(tmp_path / "engines.json")
+    c = engine_select.choose(small_forest, 64, engines=("qs",),
+                             cache_path=cache, repeats=1)
+    with open(cache) as f:
+        meta = json.load(f)[c.key]["meta"]
+    assert meta["fingerprint"] == engine_select.fingerprint_hash()
+    assert meta["backend"] and meta["device_kind"]
+    assert meta["n_trees"] == small_forest.n_trees
+    assert meta["batch"] == 64
+
+
+# ------------------------------------------------------------------------- #
+# Satellite 2: compile_s / bench_us recorded separately (schema v2)
+# ------------------------------------------------------------------------- #
+def test_entry_separates_compile_from_bench(small_forest, tmp_path):
+    cache = str(tmp_path / "engines.json")
+    c = engine_select.choose(small_forest, 64, engines=CHEAP,
+                             cache_path=cache, repeats=1)
+    with open(cache) as f:
+        entry = json.load(f)[c.key]
+    assert entry["v"] == engine_select.SCHEMA_VERSION
+    assert set(entry["compile_s"]) == set(entry["bench_us"]) \
+        == set(entry["timings"]) == set(CHEAP)
+    for cand in CHEAP:
+        assert entry["compile_s"][cand] > 0
+        # bench_us is per instance: timings (secs/batch) / 64 * 1e6
+        assert entry["bench_us"][cand] == pytest.approx(
+            entry["timings"][cand] / 64 * 1e6)
+        # first traced predict dominates steady state on these shapes
+        assert entry["compile_s"][cand] > entry["timings"][cand]
+    assert c.compile_s and all(v > 0 for v in c.compile_s.values())
+
+
+def test_merge_unions_v2_side_tables(small_forest, tmp_path):
+    cache = str(tmp_path / "engines.json")
+    full = engine_select.choose(small_forest, 64, engines=CHEAP,
+                                cache_path=cache, repeats=1)
+    engine_select.choose(small_forest, 64, engines=("qs",),
+                         cache_path=cache, force=True, repeats=1)
+    with open(cache) as f:
+        entry = json.load(f)[full.key]
+    assert set(entry["compile_s"]) == set(entry["bench_us"]) == set(CHEAP)
+    assert entry["v"] == engine_select.SCHEMA_VERSION
+
+
+def test_v1_entry_parses_but_cannot_be_hit(small_forest, tmp_path):
+    cache = str(tmp_path / "engines.json")
+    v1_key = engine_select.shape_key(small_forest, 64).rsplit("_fp", 1)[0]
+    with open(cache, "w") as f:
+        json.dump({v1_key: {"engine": "qs", "timings": {e: 0.001
+                                                        for e in CHEAP}}},
+                  f)
+    assert v1_key in engine_select._load_disk(cache)  # still valid v1
+    c = engine_select.choose(small_forest, 64, engines=CHEAP,
+                             cache_path=cache, repeats=1)
+    assert not c.from_cache         # pre-fingerprint key never matches
+    with open(cache) as f:
+        data = json.load(f)
+    assert v1_key in data and c.key in data  # coexist, no clobber
+
+
+# ------------------------------------------------------------------------- #
+# Tentpole (a): the extractor
+# ------------------------------------------------------------------------- #
+def test_parse_candidate_axes():
+    p = tune.parse_candidate
+    assert p("qs") == {"engine": "qs", "quant": "", "opt": "",
+                       "layout": "", "cascade": "", "flint": False}
+    assert p("qs-bitmm@q8i@O2")["quant"] == "q8i"
+    assert p("qs-bitmm@q8i@O2")["opt"] == "O2"
+    assert p("native@flint")["flint"] is True
+    assert p("qs-bitmm@tree_chunk=32")["layout"] == "tree_chunk=32"
+    got = p("qs@q16@dedup_thresholds+compact@cascade-fused=16/48:margin")
+    assert got["opt"] == "dedup_thresholds+compact"
+    assert got["cascade"] == "cascade-fused=16/48:margin"
+    assert got["quant"] == "q16"
+
+
+def test_extract_rows_feature_label_contract(trained):
+    rows = tune.extract_rows(trained["cache"])
+    assert len(rows) == len(TRAIN_SHAPES) * len(CHEAP)
+    for r in rows:
+        assert r["us"] > 0 and r["compile_s"] > 0
+        assert r["axes"]["engine"] in CHEAP
+        assert r["meta"]["fingerprint"] == engine_select.fingerprint_hash()
+
+
+def test_extract_skips_v1_entries():
+    rows = tune.rows_from_entries({
+        "old": {"engine": "qs", "timings": {"qs": 0.001}},
+        "new": {"engine": "qs", "timings": {"qs": 0.001},
+                "bench_us": {"qs": 15.6}, "compile_s": {"qs": 0.2},
+                "meta": {"n_trees": 8}},
+    })
+    assert [r["key"] for r in rows] == ["new"]
+
+
+# ------------------------------------------------------------------------- #
+# Tentpole (b): the cost model + versioned artifact
+# ------------------------------------------------------------------------- #
+def test_model_artifact_roundtrip(trained):
+    m1 = trained["model"]
+    m2 = tune.CostModel.load(trained["model_path"])
+    meta = engine_select.shape_meta(_held_out(), 64)
+    a1, a2 = m1.assess(meta, CHEAP), m2.assess(meta, CHEAP)
+    assert np.allclose(a1["us"], a2["us"])
+    assert a1["confidence"] == pytest.approx(a2["confidence"])
+    assert list(a1["order"]) == list(a2["order"])
+
+
+def test_model_artifact_rejects_newer_version(tmp_path, trained):
+    path = str(tmp_path / "model.json")
+    trained["model"].save(path)
+    with open(path) as f:
+        doc = json.load(f)
+    doc["version"] = packed.COSTMODEL_VERSION + 1
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    with pytest.raises(ValueError, match="newer"):
+        tune.CostModel.load(path)
+
+
+def test_model_artifact_rejects_garbage(tmp_path):
+    path = str(tmp_path / "model.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    with pytest.raises(ValueError):
+        tune.CostModel.load(path)
+
+
+def test_unknown_candidate_kills_confidence(trained):
+    meta = engine_select.shape_meta(_held_out(), 64)
+    # an engine the training cache never saw: unrankable → conf < 0
+    a = trained["model"].assess(meta, ("rapidscorer",))
+    assert not a["known"][0] and a["confidence"] == -1.0
+    # known candidates sort ahead of unknown ones
+    a = trained["model"].assess(meta, ("rapidscorer", "qs"))
+    assert list(a["order"])[0] == 1
+
+
+def test_confidence_is_probability_when_known(trained):
+    meta = engine_select.shape_meta(_held_out(), 64)
+    a = trained["model"].assess(meta, CHEAP)
+    assert all(a["known"])
+    assert 0.5 <= a["confidence"] <= 1.0
+
+
+def test_fit_needs_rows():
+    with pytest.raises(ValueError, match="training rows"):
+        tune.fit_cost_model([])
+
+
+# ------------------------------------------------------------------------- #
+# Tentpole (c): choose(mode="predict") — zero-shot, fallback, feedback
+# ------------------------------------------------------------------------- #
+def test_predict_zero_shot_builds_one_plan(trained, tmp_path):
+    cache = str(tmp_path / "serve_cache.json")
+    f = _held_out()
+    c = engine_select.choose(f, 64, engines=CHEAP, cache_path=cache,
+                             mode="predict",
+                             cost_model=trained["model_path"],
+                             confidence_threshold=0.0, repeats=1)
+    assert c.predicted and not c.from_cache
+    assert c.engine in CHEAP and c.confidence >= 0.5
+    assert c.predictor.plan is not None
+    # feedback: the measurement landed in the cache as ground truth
+    with open(cache) as f2:
+        entry = json.load(f2)[c.key]
+    assert set(entry["timings"]) == {c.engine}
+    assert entry["meta"]["n_trees"] == f.n_trees
+    rows = tune.extract_rows(cache)
+    assert len(rows) == 1 and rows[0]["candidate"] == c.engine
+
+
+def test_predict_os_alias_and_mode_validation(trained, tmp_path):
+    f = _held_out()
+    c = engine_select.choose(f, 64, engines=CHEAP, cache_path=None,
+                             mode="-Os", cost_model=trained["model_path"],
+                             confidence_threshold=0.0, repeats=1,
+                             feedback=False)
+    assert c.predicted
+    with pytest.raises(ValueError, match="mode"):
+        engine_select.choose(f, 64, engines=CHEAP, cache_path=None,
+                             mode="banana")
+
+
+def test_cache_hit_beats_the_model(trained, tmp_path):
+    cache = str(tmp_path / "cache.json")
+    f = _held_out()
+    full = engine_select.choose(f, 64, engines=CHEAP, cache_path=cache,
+                                repeats=1)
+    c = engine_select.choose(f, 64, engines=CHEAP, cache_path=cache,
+                             mode="predict",
+                             cost_model=trained["model_path"], repeats=1)
+    assert c.from_cache and not c.predicted
+    assert c.engine == full.engine  # measured truth, not a prediction
+
+
+def test_low_confidence_falls_back_to_topk_sweep(trained, tmp_path):
+    cache = str(tmp_path / "cache.json")
+    f = _held_out()
+    fb = engine_select.choose(f, 64, engines=CHEAP, cache_path=cache,
+                              mode="predict",
+                              cost_model=trained["model_path"],
+                              confidence_threshold=1.01, top_k=2,
+                              repeats=1)
+    assert not fb.predicted and not fb.from_cache
+    assert len(fb.timings) == 2             # narrowed to top-k
+    assert fb.confidence is not None and fb.confidence < 1.01
+    # the narrow sweep's measurements merged into the shared cache: a
+    # later full sweep reuses them, so restricting its timings to the
+    # top-k set must reproduce the fallback's winner exactly
+    full = engine_select.choose(f, 64, engines=CHEAP, cache_path=cache,
+                                repeats=1)
+    restricted = {c: full.timings[c] for c in fb.timings}
+    assert fb.engine == min(restricted, key=restricted.get)
+
+
+def test_no_model_falls_back_to_full_sweep(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_COST_MODEL",
+                       str(tmp_path / "nonexistent.json"))
+    c = engine_select.choose(_held_out(), 64, engines=CHEAP,
+                             cache_path=None, mode="predict", repeats=1)
+    assert not c.predicted and set(c.timings) == set(CHEAP)
+
+
+def test_explicit_missing_model_path_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        engine_select.choose(_held_out(), 64, engines=CHEAP,
+                             cache_path=None, mode="predict",
+                             cost_model=str(tmp_path / "nope.json"))
+
+
+def test_corrupt_default_model_degrades_to_sweep(tmp_path, monkeypatch):
+    bad = tmp_path / "model.json"
+    bad.write_text("{definitely not a model")
+    monkeypatch.setenv("REPRO_COST_MODEL", str(bad))
+    c = engine_select.choose(_held_out(), 64, engines=CHEAP,
+                             cache_path=None, mode="predict", repeats=1)
+    assert not c.predicted and set(c.timings) == set(CHEAP)
+
+
+def test_predict_observability_counters(trained, tmp_path):
+    from repro.obs.metrics import MetricsRegistry, set_default_registry
+    mine = MetricsRegistry()
+    old = set_default_registry(mine)
+    try:
+        f = _held_out()
+        engine_select.choose(f, 64, engines=CHEAP, cache_path=None,
+                             mode="predict",
+                             cost_model=trained["model_path"],
+                             confidence_threshold=0.0, repeats=1)
+        snap = mine.snapshot()
+        assert snap["repro_autotune_predict_hits_total"][
+            "samples"][0]["value"] == 1
+        assert snap["repro_autotune_feedback_writes_total"][
+            "samples"][0]["value"] == 1
+        assert snap["repro_autotune_predict_rel_error"][
+            "samples"][0]["count"] == 1
+        (g,) = snap["repro_autotune_predict_last_rel_error"]["samples"]
+        assert g["value"] >= 0.0
+        # low-confidence fallback + no-model fallback, labelled by reason
+        engine_select.clear_cache()
+        engine_select.choose(f, 64, engines=CHEAP, cache_path=None,
+                             mode="predict",
+                             cost_model=trained["model_path"],
+                             confidence_threshold=1.01, top_k=2,
+                             repeats=1)
+        snap = mine.snapshot()
+        reasons = {s["labels"]["reason"]: s["value"] for s in
+                   snap["repro_autotune_fallback_sweeps_total"]["samples"]}
+        assert reasons.get("low_confidence") == 1
+    finally:
+        set_default_registry(old)
+
+
+def test_no_model_fallback_counter(monkeypatch):
+    from repro.obs.metrics import MetricsRegistry, set_default_registry
+    monkeypatch.setenv("REPRO_COST_MODEL", "/nonexistent/model.json")
+    mine = MetricsRegistry()
+    old = set_default_registry(mine)
+    try:
+        engine_select.choose(_held_out(), 64, engines=("qs",),
+                             cache_path=None, mode="predict", repeats=1)
+        snap = mine.snapshot()
+        reasons = {s["labels"]["reason"]: s["value"] for s in
+                   snap["repro_autotune_fallback_sweeps_total"]["samples"]}
+        assert reasons.get("no_model") == 1
+    finally:
+        set_default_registry(old)
+
+
+# ------------------------------------------------------------------------- #
+# Tentpole (d): shared-IR sweeps + optimizer-aware pruning
+# ------------------------------------------------------------------------- #
+def _count_optimize(monkeypatch):
+    calls = {"n": 0}
+    real = optim.optimize
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(optim, "optimize", counting)
+    return calls
+
+
+def test_shared_ir_one_optimize_per_quant_opt_point(small_forest,
+                                                    monkeypatch):
+    calls = _count_optimize(monkeypatch)
+    engine_select.choose(small_forest, 64, engines=CHEAP,
+                         opt_levels=(1, 2), cache_path=None, repeats=1,
+                         share_ir=True)
+    assert calls["n"] == 2          # one per opt level, not per engine
+
+
+def test_share_ir_off_optimizes_per_candidate(small_forest, monkeypatch):
+    calls = _count_optimize(monkeypatch)
+    engine_select.choose(small_forest, 64, engines=CHEAP,
+                         opt_levels=(1, 2), cache_path=None, repeats=1,
+                         share_ir=False)
+    assert calls["n"] == len(CHEAP) * 2
+
+
+def test_pruning_aliases_provably_identical_candidates(small_forest,
+                                                       tmp_path):
+    # an explicit pass tuple spelling out O1's exact pipeline: post-dedup
+    # the two candidates are provably the same compiled artifact
+    o1_spelled = ("dedup_thresholds", "merge_equivalent_leaves", "compact")
+    cache = str(tmp_path / "cache.json")
+    c = engine_select.choose(small_forest, 64, engines=("qs", "native"),
+                             opt_levels=(1, o1_spelled), cache_path=cache,
+                             repeats=1, share_ir=True)
+    assert len(c.pruned) == 2
+    for name in c.pruned:
+        rep = f"{name.split('@')[0]}@O1"
+        assert c.timings[name] == c.timings[rep]
+        assert c.compile_s[name] == c.compile_s[rep]
+    # aliased timings persist — the cache entry covers every candidate
+    with open(cache) as f:
+        entry = json.load(f)[c.key]
+    assert set(entry["timings"]) == set(c.timings)
+
+
+def test_pruning_never_aliases_distinct_candidates(small_forest):
+    c = engine_select.choose(small_forest, 64, engines=CHEAP,
+                             opt_levels=(1,), cache_path=None, repeats=1,
+                             share_ir=True)
+    assert c.pruned == ()           # O1 rewrites the IR; plain ≠ O1
+
+
+# ------------------------------------------------------------------------- #
+# Wiring: compile_forest(tune=) and the serving fleet cold start
+# ------------------------------------------------------------------------- #
+def test_compile_forest_tune_predict(trained, tmp_path):
+    f = _held_out()
+    pred = core.compile_forest(f, tune="predict", tune_batch=64,
+                               engines=CHEAP,
+                               cost_model=trained["model_path"],
+                               confidence_threshold=0.0,
+                               cache_path=str(tmp_path / "c.json"),
+                               repeats=1)
+    X = np.random.default_rng(0).normal(size=(16, f.n_features))
+    assert pred.predict(X).shape == (16, 1)
+    assert pred.plan is not None
+    with pytest.raises(ValueError, match="tune="):
+        core.compile_forest(f, engine="native", tune="predict")
+
+
+def test_from_forests_tune_predict_fleet(trained, tmp_path):
+    from repro.inference.runtime import ServingRuntime
+    forests = {"a": _held_out(1), "b": _held_out(2)}
+    rt = ServingRuntime.from_forests(
+        forests, max_batch=64, tune="predict", engines=CHEAP,
+        cost_model=trained["model_path"], confidence_threshold=0.0,
+        cache_path=str(tmp_path / "fleet.json"), repeats=1)
+    with rt:
+        for tid, f in forests.items():
+            choice = rt.tenant(tid).engine_choice
+            assert choice.predicted and choice.engine in CHEAP
+            x = np.random.default_rng(3).normal(size=f.n_features)
+            req = rt.submit(tid, x)
+            req.wait(timeout=30)
+            want = choice.predictor.predict(x[None, :])[0]
+            np.testing.assert_array_equal(np.asarray(req.result),
+                                          np.asarray(want))
+
+
+# ------------------------------------------------------------------------- #
+# Satellite 3: property tests — hypothesis when available, plus a
+# deterministic seed sweep of the same properties for offline containers
+# ------------------------------------------------------------------------- #
+def _check_predict_is_registered_compilable_bitexact(trained, T, L, d,
+                                                     seed):
+    """mode="predict" always returns a registered, compilable plan that
+    is bit-exact-equivalent to compiling the same plan directly."""
+    engine_select.clear_cache()
+    f = core.random_forest_ir(T, L, d, n_classes=1, seed=seed)
+    c = engine_select.choose(f, 32, engines=CHEAP, cache_path=None,
+                             mode="predict",
+                             cost_model=trained["model"],
+                             confidence_threshold=0.0, repeats=1,
+                             feedback=False)
+    assert c.predicted
+    base = c.engine.split("@")[0]
+    assert base in registry.tune_table()            # registered
+    facs = engine_select._candidate_factories(f, CHEAP, None, None, 1)
+    direct = facs[c.engine]()                       # same plan, compiled
+    X = np.random.default_rng(seed).normal(size=(32, f.n_features))
+    np.testing.assert_array_equal(np.asarray(c.predictor.predict(X)),
+                                  np.asarray(direct.predict(X)))
+
+
+def _check_fallback_winner_matches_restricted_sweep(trained, seed, k,
+                                                    cache):
+    """The low-confidence fallback's winner equals a full sweep's winner
+    restricted to the top-k candidate set (the narrow sweep's
+    measurements ARE the full sweep's measurements — shared cache)."""
+    engine_select.clear_cache()
+    f = core.random_forest_ir(6 + seed % 7, 16, 6, n_classes=1,
+                              seed=seed)
+    fb = engine_select.choose(f, 32, engines=CHEAP, cache_path=cache,
+                              mode="predict",
+                              cost_model=trained["model"],
+                              confidence_threshold=1.01, top_k=k,
+                              repeats=1)
+    assert not fb.predicted
+    assert len(fb.timings) == min(k, len(CHEAP))
+    full = engine_select.choose(f, 32, engines=CHEAP, cache_path=cache,
+                                repeats=1)
+    restricted = {c: full.timings[c] for c in fb.timings}
+    assert fb.engine == min(restricted, key=restricted.get)
+
+
+@pytest.mark.parametrize("T,L,d,seed",
+                         [(2, 8, 3, 0), (12, 16, 9, 7), (5, 16, 6, 42)])
+def test_predict_plan_registered_compilable_bitexact(trained, T, L, d,
+                                                     seed):
+    _check_predict_is_registered_compilable_bitexact(trained, T, L, d,
+                                                     seed)
+
+
+@pytest.mark.parametrize("seed,k", [(0, 1), (3, 2), (11, 3)])
+def test_fallback_winner_equals_restricted_full_sweep(trained, tmp_path,
+                                                      seed, k):
+    _check_fallback_winner_matches_restricted_sweep(
+        trained, seed, k, str(tmp_path / "fb.json"))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(T=st.integers(2, 12), L=st.sampled_from([8, 16]),
+           d=st.integers(3, 9), seed=st.integers(0, 10 ** 6))
+    def test_hypothesis_predict_plan_bitexact(trained, T, L, d, seed):
+        _check_predict_is_registered_compilable_bitexact(trained, T, L,
+                                                         d, seed)
+
+    @settings(max_examples=4, deadline=None)
+    @given(seed=st.integers(0, 10 ** 6), k=st.integers(1, 3))
+    def test_hypothesis_fallback_winner_restricted(trained,
+                                                   tmp_path_factory,
+                                                   seed, k):
+        cache = str(tmp_path_factory.mktemp("fb") / "cache.json")
+        _check_fallback_winner_matches_restricted_sweep(trained, seed,
+                                                        k, cache)
